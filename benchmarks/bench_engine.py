@@ -1,0 +1,78 @@
+"""Engine throughput beyond the paper: events/second across fleet sizes and
+vmap-batched Monte-Carlo scenario sweeps (CloudSim runs one simulation per
+JVM; the tensorized engine runs hundreds per device)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def bench_events(n_hosts=1000, n_vms=200, per_vm=20):
+    import jax
+
+    from repro.core import state as S
+    from repro.core.engine import run_trace
+
+    rng = np.random.default_rng(0)
+    hosts = S.make_uniform_hosts(n_hosts)
+    vms = S.make_vms([1] * n_vms, 1000.0, 64.0, 1.0, 10.0)
+    submit = np.sort(rng.uniform(0, 600, (n_vms, per_vm)), axis=1) \
+        .astype(np.float32).reshape(-1)
+    cl = S.make_cloudlets(
+        np.repeat(np.arange(n_vms, dtype=np.int32), per_vm),
+        rng.uniform(1e4, 1e5, n_vms * per_vm).astype(np.float32), submit)
+    dc = S.make_datacenter(hosts, vms, cl, task_policy=S.TIME_SHARED,
+                           reserve_pes=True)
+    steps = 2 * n_vms * per_vm + 64
+    # compile
+    final, trace = run_trace(dc, num_steps=steps)
+    jax.block_until_ready(final.time)
+    t0 = time.perf_counter()
+    final, trace = run_trace(dc, num_steps=steps)
+    jax.block_until_ready(final.time)
+    wall = time.perf_counter() - t0
+    events = int(np.asarray(trace.active).sum())
+    return wall, events
+
+
+def bench_vmap_sweep(n_scenarios=64):
+    import jax
+
+    from repro.core import broker as B
+    from repro.core import state as S
+    from repro.core.engine import run
+    from repro.core.workloads import poisson_arrivals
+
+    hosts = S.make_uniform_hosts(64)
+    vms = B.build_fleet([B.VmSpec(count=16)])
+
+    def scenario(key):
+        cl = poisson_arrivals(key, 16, rate_per_vm=0.02, horizon=600.0,
+                              max_per_vm=8, length_mi=50_000.0)
+        dc = S.make_datacenter(hosts, vms, cl, task_policy=S.TIME_SHARED,
+                               reserve_pes=True)
+        return B.collect(run(dc, max_steps=512)).mean_response
+
+    keys = jax.random.split(jax.random.PRNGKey(0), n_scenarios)
+    f = jax.jit(jax.vmap(scenario))
+    jax.block_until_ready(f(keys))           # compile
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(f(keys))
+    wall = time.perf_counter() - t0
+    return wall, n_scenarios, float(np.nanmean(np.asarray(out)))
+
+
+def main():
+    print("# engine throughput (beyond paper)")
+    print("name,us_per_call,derived")
+    wall, events = bench_events()
+    print(f"des_events_1khosts_4kcl,{wall*1e6:.0f},"
+          f"events_per_s={events/wall:.0f}")
+    wall, n, mean = bench_vmap_sweep()
+    print(f"vmap_sweep_{n}_scenarios,{wall*1e6:.0f},"
+          f"sims_per_s={n/wall:.1f}_mean_resp={mean:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from dry-run
+artifacts (markers: DRYRUN:SINGLE, DRYRUN:MULTI, ROOFLINE:TABLE).
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import fmt_table, load
+
+EXP = "EXPERIMENTS.md"
+
+
+def _dryrun_table(rows: list[dict], mesh: str) -> str:
+    rows = [r for r in rows if r["mesh"] == mesh
+            and not _nondefault(r.get("options", {}))]
+    if not rows:
+        return f"*(no {mesh}-mesh artifacts yet)*"
+    out = [f"**{mesh} mesh: {len(rows)} cells lowered+compiled.**", "",
+           "| arch | shape | chips | peak GB/dev | args GB | temps GB | "
+           "compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {m['peak_bytes_per_device']/1e9:.2f} "
+            f"| {m['argument_bytes']/1e9:.2f} "
+            f"| {m['temp_bytes']/1e9:.2f} "
+            f"| {r.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def _nondefault(opts: dict) -> dict:
+    return {k: v for k, v in opts.items()
+            if (k, v) not in (("sp", True), ("kv_model", True),
+                              ("fsdp", True), ("remat", "nothing"),
+                              ("microbatches", 1))}
+
+
+def _roofline_table(rows: list[dict]) -> str:
+    rows = [r for r in rows if r["mesh"] == "single" and "roofline" in r
+            and not _nondefault(r.get("options", {}))]
+    return fmt_table(sorted(rows, key=lambda r: (r["arch"], r["shape"])))
+
+
+_FAMILY_FIX = {
+    # one sentence per arch: what moves the dominant (memory) term down
+    "llava-next-34b": "replace the XLA chunked attention with the Pallas "
+    "flash kernel (keeps [bq,bk] score tiles in VMEM: removes the "
+    "O(S^2/chunk) HBM round-trips that dominate bytes) and pad-free 56-head "
+    "sharding via head-fusion.",
+    "moonshot-v1-16b-a3b": "drop FSDP on the expert weights (already "
+    "16-way EP-sharded; the per-layer expert all-gather is pure overhead "
+    "at 28B — measured in §Perf) and fuse router+dispatch.",
+    "qwen3-moe-235b-a22b": "microbatch gradient accumulation (activation "
+    "temps /mb) + remat=dots to stop backward recompute re-reading "
+    "activations; expert-FSDP must stay ON at 235B (28 GB/dev otherwise).",
+    "jamba-1.5-large-398b": "Pallas selective-scan kernel for the 7/8 "
+    "mamba sub-layers (in-VMEM recurrence removes the [B,Q,d,N] chunk "
+    "traffic) + microbatching for the 148 GB/dev train peak.",
+    "musicgen-large": "fuse the 4 codebook heads into one [D,4V] matmul "
+    "and batch the summed-embedding lookups; decode cache is MHA (kv=32) "
+    "— GQA-ify or quantize the cache to shrink the 143 ms decode read.",
+    "falcon-mamba-7b": "Pallas selective-scan kernel: the XLA associative "
+    "scan materialises log2(Q) levels of [B,Q,d,16] per chunk (the "
+    "dominant bytes); the kernel's sequential in-VMEM recurrence reads "
+    "dt/x/B/C once (analytic ~100x traffic cut, §Perf H3).",
+    "qwen2-1.5b": "at 1.5B params / 256 chips the model is too small for "
+    "TP=16 — re-mesh to (64,4) or pure-DP with FSDP so per-op tiles reach "
+    "MXU-efficient sizes and collective counts drop.",
+    "h2o-danube-1.8b": "same small-model re-mesh; SWA already bounds "
+    "attention traffic (window 4096), so bytes are MLP-dominated.",
+    "qwen1.5-0.5b": "0.5B on 256 chips is ~2M params/chip: re-mesh to a "
+    "smaller slice or serve many replicas (the simulator's own "
+    "capacity-planning answer, examples/lm_fleet_sim.py).",
+    "qwen3-0.6b": "same as qwen1.5-0.5b; additionally the 152k-vocab "
+    "head dominates FLOPs at 0.6B — tie embeddings (done) and shard "
+    "vocab (done) leave re-meshing as the lever.",
+}
+
+
+def _notes(rows: list[dict]) -> str:
+    rows = [r for r in rows if r["mesh"] == "single" and "roofline" in r
+            and not _nondefault(r.get("options", {}))]
+    seen = []
+    out = ["Per-arch: the dominant term is memory everywhere (see caveat "
+           "above); what would move it down:", ""]
+    for r in sorted(rows, key=lambda r: r["arch"]):
+        if r["arch"] in seen:
+            continue
+        seen.append(r["arch"])
+        out.append(f"* **{r['arch']}** — {_FAMILY_FIX[r['arch']]}")
+    return "\n".join(out)
+
+
+def _replace(text: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    block = f"{tag}\n{content}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in text:
+        return re.sub(
+            re.escape(tag) + r".*?" + re.escape(f"<!-- /{marker} -->"),
+            block.replace("\\", "\\\\"), text, flags=re.S)
+    return text.replace(tag, block)
+
+
+def main():
+    rows = load("artifacts/dryrun")
+    with open(EXP) as f:
+        text = f.read()
+    text = _replace(text, "DRYRUN:SINGLE", _dryrun_table(rows, "single"))
+    text = _replace(text, "DRYRUN:MULTI", _dryrun_table(rows, "multi"))
+    text = _replace(text, "ROOFLINE:TABLE", _roofline_table(rows))
+    text = _replace(text, "ROOFLINE:NOTES", _notes(rows))
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"updated {EXP} from {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

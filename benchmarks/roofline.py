@@ -1,0 +1,66 @@
+"""Aggregate artifacts/dryrun/*.json into the §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+Prints a markdown table (arch x shape x mesh: three terms, bottleneck,
+useful-FLOPs ratio, roofline fraction, peak bytes/device).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows: list[dict], *, baseline_only: bool = True) -> str:
+    out = ["| arch | shape | mesh | peak GB/dev | compute ms | memory ms |"
+           " collective ms | bound | useful/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if baseline_only and r.get("options", {}).get("microbatches", 1) \
+                != 1:
+            pass  # keep everything; tag below
+        roof = r["roofline"]
+        opts = r.get("options", {})
+        tag = ""
+        nd = {k: v for k, v in opts.items()
+              if (k, v) not in (("sp", True), ("kv_model", True),
+                                ("fsdp", True), ("remat", "nothing"),
+                                ("microbatches", 1))}
+        if nd:
+            tag = " [" + ",".join(f"{k}={v}" for k, v in
+                                  sorted(nd.items())) + "]"
+        out.append(
+            f"| {r['arch']}{tag} | {r['shape']} | {r['mesh']} "
+            f"| {r['memory']['peak_bytes_per_device']/1e9:.2f} "
+            f"| {roof['compute_s']*1e3:.2f} "
+            f"| {roof['memory_s']*1e3:.2f} "
+            f"| {roof['collective_s']*1e3:.2f} "
+            f"| {roof['dominant'].replace('_s','')} "
+            f"| {roof['useful_flops_ratio']:.3f} "
+            f"| {roof['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark harness entry point — one section per paper table/figure plus
+the beyond-paper engine/kernel benches.  Prints ``name,us_per_call,derived``
+CSV throughout (PYTHONPATH=src python -m benchmarks.run)."""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (bench_engine, bench_instantiation,
+                            bench_kernels, bench_policies)
+
+    bench_instantiation.main()       # paper Fig 6 & 7
+    print()
+    bench_policies.main()            # paper Fig 8 & 9
+    print()
+    bench_engine.main()              # beyond paper: DES throughput
+    print()
+    bench_kernels.main()             # kernel paths
+
+    # roofline table if dry-run artifacts exist
+    import os
+    if os.path.isdir("artifacts/dryrun"):
+        print("\n# roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+        from benchmarks import roofline
+        rows = roofline.load("artifacts/dryrun")
+        if rows:
+            print(f"# {len(rows)} cells analyzed — table in EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

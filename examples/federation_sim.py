@@ -1,0 +1,54 @@
+"""Federated clouds (the paper's future work, realized): multiple
+datacenters register with the CIS, a broker shops user fleets to the
+cheapest feasible provider, every datacenter simulates independently —
+vmap on one device here, shard_map over a (16,16) pod in production
+(see core/federation.py and tests/test_federation.py).
+
+    PYTHONPATH=src python examples/federation_sim.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import cis
+from repro.core import federation as F
+from repro.core import state as S
+
+# three providers: different live capacity (same array capacity — stacked
+# state needs uniform shapes; capacity differences live in the valid mask)
+def provider(n_hosts, cpu_rate, slots=64):
+    import dataclasses
+    hosts = S.make_uniform_hosts(slots, pes=2)
+    hosts = dataclasses.replace(
+        hosts, valid=jnp.arange(slots) < n_hosts,
+        free_ram=jnp.where(jnp.arange(slots) < n_hosts, hosts.free_ram, 0))
+    vms = B.build_fleet([B.VmSpec(count=8, pes=1)])
+    cl = B.build_waves(8, B.WaveSpec(waves=3, length_mi=90_000.0,
+                                     period=60.0))
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=True,
+                             rates=S.make_market(cpu_rate, 1e-3, 1e-4,
+                                                 2e-3))
+
+
+dcs = [provider(32, 0.05), provider(64, 0.01), provider(8, 0.02)]
+stack = jax.tree.map(lambda *x: jnp.stack(x), *dcs)
+
+# CIS registry + broker match-making (Figure 5 flow)
+table = jax.vmap(cis.register)(stack)
+demand = F.UserDemand(pes=jnp.array([16.0, 64.0, 8.0]),
+                      mips=jnp.array([1000.0] * 3),
+                      ram=jnp.array([4096.0] * 3),
+                      storage=jnp.array([8000.0] * 3))
+assign = np.asarray(F.assign_users(table, demand))
+for u, d in enumerate(assign):
+    where = f"DC{d} (rate ${float(table.cost_per_cpu_sec[d]):.2f}/PE-s)" \
+        if d >= 0 else "REJECTED (no capacity)"
+    print(f"user{u} ({float(demand.pes[u]):.0f} PEs) -> {where}")
+
+# run the federation (vmap = single-device reference of the shard_map path)
+final, reports, _ = F.vmap_federation(stack, max_steps=512)
+for i in range(3):
+    print(f"DC{i}: completed {int(reports.n_completed[i])}/24, "
+          f"makespan {float(reports.makespan[i]):.0f}s, "
+          f"revenue ${float(reports.total_cost[i]):.2f}")

@@ -1,0 +1,178 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, elastic.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      pytree structure + dtypes + mesh metadata
+            shard_<k>.npz      flattened leaves, chunked ~512MB per file
+
+Atomicity: everything is written into ``step_<N>.tmp`` and ``os.rename``d
+(POSIX-atomic) once fsynced — a crash mid-save can never corrupt the
+latest-complete checkpoint.  ``restore`` takes an optional mesh + spec tree
+and ``device_put``s each leaf with its NEW sharding, so a checkpoint taken
+on a (16,16) mesh restores cleanly onto (2,16,16) or a degraded (15,16)
+replacement fleet (elastic rescale after node loss).
+
+Async: ``save(..., blocking=False)`` snapshots to host memory and writes on
+a daemon thread — training continues during I/O (checkpoint/compute
+overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(directory: str, step: int, tree, *, blocking: bool = True,
+         extra_meta: Optional[dict] = None) -> threading.Thread | None:
+    """Write ``tree`` at ``<directory>/step_<step>`` (atomic rename)."""
+    os.makedirs(directory, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    # snapshot to host BEFORE going async — device buffers may be donated
+    host = [np.asarray(x) for x in leaves]
+
+    def write():
+        tmp = os.path.join(directory, f"step_{step}.tmp")
+        final = os.path.join(directory, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": [], "shards": 0,
+                    "extra": extra_meta or {}}
+        shard, shard_bytes, shard_idx = {}, 0, 0
+
+        def flush():
+            nonlocal shard, shard_bytes, shard_idx
+            if shard:
+                np.savez(os.path.join(tmp, f"shard_{shard_idx}.npz"),
+                         **shard)
+                shard, shard_bytes = {}, 0
+                shard_idx += 1
+
+        for p, arr in zip(paths, host):
+            key = p.replace("/", "__")
+            manifest["leaves"].append(
+                {"path": p, "key": key, "shard": shard_idx,
+                 "dtype": str(arr.dtype), "shape": list(arr.shape)})
+            shard[key] = arr
+            shard_bytes += arr.nbytes
+            if shard_bytes >= _SHARD_BYTES:
+                flush()
+        flush()
+        manifest["shards"] = shard_idx
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return None
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and os.path.exists(os.path.join(directory, name,
+                                                "manifest.json")):
+            steps.append(int(name.split("_", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like, *, mesh=None, specs=None):
+    """Load ``step`` into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  With mesh+specs, every leaf is device_put with its
+    new sharding — elastic restore onto a different mesh."""
+    folder = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(folder, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_shard: dict[int, list] = {}
+    for leaf in manifest["leaves"]:
+        by_shard.setdefault(leaf["shard"], []).append(leaf)
+    data: dict[str, np.ndarray] = {}
+    for sh, leaves in by_shard.items():
+        with np.load(os.path.join(folder, f"shard_{sh}.npz")) as z:
+            for leaf in leaves:
+                data[leaf["path"]] = z[leaf["key"]]
+
+    paths, like_leaves, treedef = _flatten_with_paths(like)
+    out = []
+    spec_leaves = None
+    if specs is not None:
+        spec_leaves = treedef.flatten_up_to(specs)
+    for i, (p, ref) in enumerate(zip(paths, like_leaves)):
+        arr = data[p]
+        want_dtype = ref.dtype if hasattr(ref, "dtype") else arr.dtype
+        arr = arr.astype(want_dtype)
+        if mesh is not None and spec_leaves is not None:
+            sharding = jax.sharding.NamedSharding(mesh, spec_leaves[i])
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Keep-last-k rotation + async handles (the production interface)."""
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        self._pending: list[threading.Thread] = []
+
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra_meta: Optional[dict] = None):
+        t = save(self.directory, step, tree, blocking=blocking,
+                 extra_meta=extra_meta)
+        if t is not None:
+            self._pending.append(t)
+        self._gc()
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+    def restore_latest(self, like, *, mesh=None, specs=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore(self.directory, step, like, mesh=mesh,
+                             specs=specs)
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(n.split("_", 1)[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            path = os.path.join(self.directory, f"step_{s}")
+            if os.path.exists(os.path.join(path, "manifest.json")):
+                shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,38 @@
+"""Tensorized CloudSim core — the paper's contribution as composable JAX.
+
+Layer map (paper §3/§4 -> modules):
+  state.py         entity model (Datacenter/Host/VM/Cloudlet/Market)
+  scheduling.py    two-level space/time-shared shares (Fig. 3 2x2)
+  provisioning.py  VMProvisioner + BW/Memory admission (first/best/worst-fit)
+  engine.py        discrete-event engine (SimJava layer, tensorized)
+  broker.py        DatacenterBroker builders + result collection
+  cis.py           Cloud Information Service registry + match-making
+  market.py        §3.3 cost model: quotes, bills, pricing policies
+  workloads.py     arrival processes + LM-fleet profiles (dry-run linked)
+  telemetry.py     trace reducers (completion curves, utilization, gantt)
+  federation.py    shard_map multi-datacenter simulation over a mesh
+"""
+from repro.core import (  # noqa: F401
+    broker,
+    cis,
+    engine,
+    federation,
+    market,
+    provisioning,
+    scheduling,
+    state,
+    telemetry,
+    workloads,
+)
+from repro.core.engine import run, run_trace, step  # noqa: F401
+from repro.core.state import (  # noqa: F401
+    DatacenterState,
+    SPACE_SHARED,
+    TIME_SHARED,
+    make_cloudlets,
+    make_datacenter,
+    make_hosts,
+    make_market,
+    make_uniform_hosts,
+    make_vms,
+)

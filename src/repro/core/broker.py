@@ -1,0 +1,158 @@
+"""DatacenterBroker — mediates between users and datacenters (§4, §4.2).
+
+The broker (i) builds VM fleets and cloudlet submission waves from user
+specs, (ii) consults the CIS for a datacenter match, (iii) deploys, and
+(iv) collects results.  CloudSim implements it as one of the three JVM
+threads; here it is a set of pure builders + reducers around the dense
+state, so an entire broker "conversation" is jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as S
+
+__all__ = ["VmSpec", "WaveSpec", "build_fleet", "build_waves",
+           "BrokerReport", "collect", "destroy_idle_vms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VmSpec:
+    """User request for one VM class (the §5 experiment: 1 PE, 512MB, 1GB)."""
+    count: int
+    pes: int = 1
+    mips: float = 1000.0
+    ram: float = 512.0
+    bw: float = 10.0
+    size: float = 1000.0
+    submit_time: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSpec:
+    """Cloudlet waves: ``waves`` groups of one-cloudlet-per-VM, ``period`` apart."""
+    waves: int
+    length_mi: float = 1_200_000.0
+    period: float = 600.0
+    first_at: float = 0.0
+    file_size: float = 0.3
+    output_size: float = 0.3
+
+
+def build_fleet(specs: Sequence[VmSpec]) -> S.VmState:
+    """Concatenate VM classes into one dense VmState (submission order)."""
+    pes, mips, ram, bw, size, sub = [], [], [], [], [], []
+    for sp in specs:
+        pes += [sp.pes] * sp.count
+        mips += [sp.mips] * sp.count
+        ram += [sp.ram] * sp.count
+        bw += [sp.bw] * sp.count
+        size += [sp.size] * sp.count
+        sub += [sp.submit_time] * sp.count
+    return S.VmState(
+        req_pes=jnp.asarray(pes, jnp.int32),
+        req_mips=jnp.asarray(mips, jnp.float32),
+        ram=jnp.asarray(ram, jnp.float32),
+        bw=jnp.asarray(bw, jnp.float32),
+        size=jnp.asarray(size, jnp.float32),
+        submit_time=jnp.asarray(sub, jnp.float32),
+        host=jnp.full((len(pes),), -1, jnp.int32),
+        state=jnp.full((len(pes),), S.VM_PENDING, jnp.int32),
+        create_time=jnp.full((len(pes),), S.INF),
+    )
+
+
+def build_waves(n_vms: int, spec: WaveSpec) -> S.CloudletState:
+    """§5 workload: every ``period`` seconds submit one cloudlet to each VM.
+
+    Emitted grouped-by-VM (the state.py invariant) with ranks ascending in
+    wave order, which *is* FCFS submission order per VM.
+    """
+    vm_ids = np.repeat(np.arange(n_vms, dtype=np.int32), spec.waves)
+    waves = np.tile(np.arange(spec.waves, dtype=np.float32), n_vms)
+    submit = spec.first_at + waves * spec.period
+    return S.make_cloudlets(vm_ids, spec.length_mi, submit,
+                            spec.file_size, spec.output_size)
+
+
+class BrokerReport(NamedTuple):
+    """What the broker hands back to the user after collection (§4.2)."""
+    n_submitted: jnp.ndarray
+    n_completed: jnp.ndarray
+    n_failed: jnp.ndarray
+    makespan: jnp.ndarray          # last finish over completed cloudlets
+    mean_response: jnp.ndarray     # finish - submit
+    p99_response: jnp.ndarray
+    mean_exec: jnp.ndarray         # finish - start (pure service time)
+    total_cost: jnp.ndarray        # §3.3 market total
+    cpu_cost: jnp.ndarray
+    mem_cost: jnp.ndarray
+    storage_cost: jnp.ndarray
+    bw_cost: jnp.ndarray
+
+
+def collect(dc: S.DatacenterState) -> BrokerReport:
+    """Reduce final datacenter state into the user-facing report."""
+    cl = dc.cloudlets
+    done = cl.state == S.CL_DONE
+    n_done = jnp.sum(done.astype(jnp.int32))
+    resp = jnp.where(done, cl.finish_time - cl.submit_time, jnp.nan)
+    exe = jnp.where(done, cl.finish_time - cl.start_time, jnp.nan)
+    makespan = jnp.max(jnp.where(done, cl.finish_time, -jnp.inf))
+    p99 = jnp.nanpercentile(resp, 99.0)
+    return BrokerReport(
+        n_submitted=jnp.sum((cl.state != S.CL_EMPTY).astype(jnp.int32)),
+        n_completed=n_done,
+        n_failed=jnp.sum((cl.state == S.CL_FAILED).astype(jnp.int32)),
+        makespan=makespan,
+        mean_response=jnp.nanmean(resp),
+        p99_response=p99,
+        mean_exec=jnp.nanmean(exe),
+        total_cost=dc.acct.total,
+        cpu_cost=dc.acct.cpu_cost,
+        mem_cost=dc.acct.mem_cost,
+        storage_cost=dc.acct.storage_cost,
+        bw_cost=dc.acct.bw_cost,
+    )
+
+
+def destroy_idle_vms(dc: S.DatacenterState) -> S.DatacenterState:
+    """VM destruction (§3.1 life cycle): release resources of drained VMs.
+
+    A VM is drained when it is ACTIVE and none of its cloudlets can ever run
+    again (all DONE/FAILED and none still CREATED).  Freed RAM/BW/storage/PEs
+    return to the host pools so later fleets can be admitted.
+    """
+    vms, cl, hosts = dc.vms, dc.cloudlets, dc.hosts
+    nv = vms.req_pes.shape[0]
+    nh = hosts.num_pes.shape[0]
+    seg = jnp.clip(cl.vm, 0, nv - 1)
+    open_work = jax.ops.segment_sum(
+        (cl.state == S.CL_CREATED).astype(jnp.int32), seg, num_segments=nv)
+    had_any = jax.ops.segment_sum(
+        (cl.state != S.CL_EMPTY).astype(jnp.int32), seg, num_segments=nv)
+    drained = (vms.state == S.VM_ACTIVE) & (open_work == 0) & (had_any > 0)
+
+    h = jnp.clip(vms.host, 0, nh - 1)
+    w = drained.astype(jnp.float32)
+    give = lambda pool, amt: pool.at[h].add(w * amt)
+    reserve = jnp.where(dc.reserve_pes == 1,
+                        vms.req_pes.astype(jnp.float32), 0.0)
+    return dataclasses.replace(
+        dc,
+        hosts=dataclasses.replace(
+            hosts,
+            free_ram=give(hosts.free_ram, vms.ram),
+            free_bw=give(hosts.free_bw, vms.bw),
+            free_storage=give(hosts.free_storage, vms.size),
+            free_pes=give(hosts.free_pes, reserve)),
+        vms=dataclasses.replace(
+            vms,
+            state=jnp.where(drained, S.VM_DESTROYED, vms.state),
+            host=jnp.where(drained, -1, vms.host)),
+    )

@@ -1,0 +1,69 @@
+"""Cloud Information Service — registry + match-making (§4.2, Figure 5).
+
+Every Datacenter registers a resource descriptor; brokers query the CIS for
+providers whose offer matches the user's requirements and deploy with the
+best match.  In the federated (multi-device) simulation the registry row of
+each datacenter lives on its own device and the table is assembled with an
+``all_gather`` (see federation.py) — the registry lookup *is* the collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as S
+
+__all__ = ["CisEntry", "register", "match", "rank_by_cost"]
+
+
+class CisEntry(NamedTuple):
+    """One registry row per datacenter (dense, so rows stack/gather)."""
+    total_pes: jnp.ndarray        # f32[]
+    max_mips_pe: jnp.ndarray      # f32[]
+    free_ram: jnp.ndarray         # f32[]
+    free_storage: jnp.ndarray     # f32[]
+    free_bw: jnp.ndarray          # f32[]
+    free_pes: jnp.ndarray         # f32[]
+    cost_per_cpu_sec: jnp.ndarray
+    cost_per_mem: jnp.ndarray
+
+
+def register(dc: S.DatacenterState) -> CisEntry:
+    """Datacenter -> registry row (the §4.2 'register' arrow)."""
+    h = dc.hosts
+    v = h.valid
+    f = lambda x: jnp.sum(jnp.where(v, x, 0.0))
+    return CisEntry(
+        total_pes=f(h.num_pes.astype(jnp.float32)),
+        max_mips_pe=jnp.max(jnp.where(v, h.mips_per_pe, 0.0)),
+        free_ram=f(h.free_ram),
+        free_storage=f(h.free_storage),
+        free_bw=f(h.free_bw),
+        free_pes=f(h.free_pes),
+        cost_per_cpu_sec=dc.rates.cost_per_cpu_sec,
+        cost_per_mem=dc.rates.cost_per_mem,
+    )
+
+
+def match(table: CisEntry, *, need_pes: float, need_mips: float,
+          need_ram: float, need_storage: float, need_bw: float = 0.0
+          ) -> jnp.ndarray:
+    """bool[D] — datacenters able to host the request (database match)."""
+    return ((table.free_pes >= need_pes)
+            & (table.max_mips_pe >= need_mips)
+            & (table.free_ram >= need_ram)
+            & (table.free_storage >= need_storage)
+            & (table.free_bw >= need_bw))
+
+
+def rank_by_cost(table: CisEntry, feasible: jnp.ndarray) -> jnp.ndarray:
+    """i32[D] — feasible datacenters ordered cheapest-first (infeasible last).
+
+    The broker's default negotiation: pick the cheapest matching provider.
+    """
+    big = jnp.float32(1e30)
+    score = jnp.where(feasible, table.cost_per_cpu_sec, big)
+    return jnp.argsort(score, stable=True).astype(jnp.int32)

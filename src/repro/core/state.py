@@ -1,0 +1,250 @@
+"""Dense struct-of-arrays state for the tensorized CloudSim core.
+
+CloudSim (2009) models a cloud as Datacenter -> Hosts -> VMs -> Cloudlets
+with Java objects and threads.  On a TPU the same semantics are carried by
+fixed-capacity struct-of-arrays pytrees with validity masks: every entity
+class in the paper's Figure 4 becomes a field block below.
+
+All arrays are 1-D over their entity axis so the whole state is `vmap`-able
+over independent simulation scenarios and `shard_map`-able over datacenters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+INF = jnp.float32(1e30)
+
+# scheduling policy codes (host level and VM level use the same codes)
+SPACE_SHARED = 0
+TIME_SHARED = 1
+
+# VM life cycle (paper 3.1: provisioning, creation, destruction, migration)
+VM_EMPTY = 0      # unused slot
+VM_PENDING = 1    # submitted, awaiting placement by the VMProvisioner
+VM_ACTIVE = 2     # placed on a host (CREATED)
+VM_FAILED = 3     # provisioning failed (no host satisfied the request)
+VM_DESTROYED = 4  # explicitly destroyed; resources returned
+
+# Cloudlet life cycle
+CL_EMPTY = 0
+CL_CREATED = 1    # exists; becomes runnable when submit_time is reached
+CL_DONE = 2
+CL_FAILED = 3     # its VM could not be provisioned
+
+
+def pytree_dataclass(cls):
+    """Register a dataclass whose every field is pytree data."""
+    cls = dataclasses.dataclass(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    return jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Hosts  (paper: Host component — PEs, MIPS/PE, RAM, storage, BW)
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class HostState:
+    num_pes: jnp.ndarray        # i32[H]
+    mips_per_pe: jnp.ndarray    # f32[H]
+    ram: jnp.ndarray            # f32[H]   (MB)
+    bw: jnp.ndarray             # f32[H]   (MB/s link capacity)
+    storage: jnp.ndarray        # f32[H]   (MB)
+    # dynamic free capacity, maintained by the provisioners
+    free_ram: jnp.ndarray       # f32[H]
+    free_bw: jnp.ndarray        # f32[H]
+    free_storage: jnp.ndarray   # f32[H]
+    free_pes: jnp.ndarray       # f32[H]  (reserved only under space-shared placement)
+    valid: jnp.ndarray          # bool[H]
+
+    @property
+    def capacity_mips(self):
+        return self.num_pes.astype(jnp.float32) * self.mips_per_pe
+
+
+# ---------------------------------------------------------------------------
+# VMs  (paper: VirtualMachine + VMCharacteristics)
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class VmState:
+    req_pes: jnp.ndarray        # i32[V]
+    req_mips: jnp.ndarray       # f32[V]  per-PE MIPS requested
+    ram: jnp.ndarray            # f32[V]
+    bw: jnp.ndarray             # f32[V]
+    size: jnp.ndarray           # f32[V]  image size (storage)
+    submit_time: jnp.ndarray    # f32[V]
+    host: jnp.ndarray           # i32[V]  -1 while unplaced
+    state: jnp.ndarray          # i32[V]  VM_* codes
+    create_time: jnp.ndarray    # f32[V]  when placed (INF before)
+
+
+# ---------------------------------------------------------------------------
+# Cloudlets  (paper: Cloudlet — application task unit, length in MI)
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class CloudletState:
+    vm: jnp.ndarray             # i32[C]   owning VM slot
+    length: jnp.ndarray         # f32[C]   total MI
+    remaining: jnp.ndarray      # f32[C]   MI left
+    file_size: jnp.ndarray      # f32[C]   MB in  (BW cost, SAN delay)
+    output_size: jnp.ndarray    # f32[C]   MB out
+    submit_time: jnp.ndarray    # f32[C]
+    start_time: jnp.ndarray     # f32[C]   first instant with CPU (-1 before)
+    finish_time: jnp.ndarray    # f32[C]   INF until done
+    rank_in_vm: jnp.ndarray     # i32[C]   FCFS submission rank within its VM
+    state: jnp.ndarray          # i32[C]   CL_* codes
+
+
+# ---------------------------------------------------------------------------
+# Market rates  (paper 3.3: four market-related properties per datacenter)
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class MarketRates:
+    cost_per_cpu_sec: jnp.ndarray   # $ per PE-second actually consumed
+    cost_per_mem: jnp.ndarray      # $ per MB at VM creation
+    cost_per_storage: jnp.ndarray  # $ per MB at VM creation
+    cost_per_bw: jnp.ndarray       # $ per MB transferred
+
+
+@pytree_dataclass
+class Accounting:
+    cpu_cost: jnp.ndarray       # f32[] accrued processing cost
+    mem_cost: jnp.ndarray       # f32[]
+    storage_cost: jnp.ndarray   # f32[]
+    bw_cost: jnp.ndarray        # f32[]
+
+    @property
+    def total(self):
+        return self.cpu_cost + self.mem_cost + self.storage_cost + self.bw_cost
+
+
+# ---------------------------------------------------------------------------
+# Datacenter = hosts + vms + cloudlets + policies + clock
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class DatacenterState:
+    hosts: HostState
+    vms: VmState
+    cloudlets: CloudletState
+    rates: MarketRates
+    acct: Accounting
+    time: jnp.ndarray           # f32[]
+    # policy codes as traced scalars so policy sweeps can be vmapped
+    vm_policy: jnp.ndarray      # i32[]  host-level (VMScheduler): SPACE/TIME
+    task_policy: jnp.ndarray    # i32[]  VM-level  (CloudletScheduler): SPACE/TIME
+    # placement semantics flag: 1 => space-shared placement reserves PEs
+    # (paper 5: "only one VM was allowed to be hosted in a host"); 0 => VMs
+    # co-hosted and queued for cores (paper Figure 3 semantics).
+    reserve_pes: jnp.ndarray    # i32[]
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+def make_hosts(num_pes, mips_per_pe, ram, bw, storage) -> HostState:
+    """Build a host block from per-host sequences (python/numpy)."""
+    num_pes = jnp.asarray(num_pes, jnp.int32)
+    h = num_pes.shape[0]
+    f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (h,))
+    ram, bw, storage = f(ram), f(bw), f(storage)
+    return HostState(
+        num_pes=num_pes,
+        mips_per_pe=f(mips_per_pe),
+        ram=ram, bw=bw, storage=storage,
+        free_ram=ram, free_bw=bw, free_storage=storage,
+        free_pes=num_pes.astype(jnp.float32),
+        valid=jnp.ones((h,), bool),
+    )
+
+
+def make_uniform_hosts(n, *, pes=1, mips=1000.0, ram=1024.0, bw=1000.0,
+                       storage=2_000_000.0) -> HostState:
+    """The paper's 5 test configuration: 1 core @1000 MIPS, 1GB RAM, 2TB."""
+    return make_hosts(np.full(n, pes), np.full(n, float(mips)),
+                      np.full(n, float(ram)), np.full(n, float(bw)),
+                      np.full(n, float(storage)))
+
+
+def make_vms(req_pes, req_mips, ram, bw, size, submit_time=0.0) -> VmState:
+    req_pes = jnp.asarray(req_pes, jnp.int32)
+    v = req_pes.shape[0]
+    f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (v,))
+    return VmState(
+        req_pes=req_pes,
+        req_mips=f(req_mips), ram=f(ram), bw=f(bw), size=f(size),
+        submit_time=f(submit_time),
+        host=jnp.full((v,), -1, jnp.int32),
+        state=jnp.full((v,), VM_PENDING, jnp.int32),
+        create_time=jnp.full((v,), INF),
+    )
+
+
+def make_cloudlets(vm, length, submit_time=0.0, file_size=0.0,
+                   output_size=0.0) -> CloudletState:
+    """Cloudlet slots MUST be grouped by vm with ranks ascending (FCFS order).
+
+    The broker emits them that way; `rank_in_vm` is derived here assuming the
+    invariant and double-checked (host-side) by `validate_cloudlet_order`.
+    """
+    vm = jnp.asarray(vm, jnp.int32)
+    c = vm.shape[0]
+    f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (c,))
+    length = f(length)
+    # FCFS rank within owning VM under the grouped invariant:
+    # rank[i] = i - first index of this vm's run.
+    idx = jnp.arange(c, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), vm[1:] != vm[:-1]])
+    run_start = jnp.maximum.accumulate(jnp.where(is_start, idx, -1))
+    rank = idx - run_start
+    return CloudletState(
+        vm=vm, length=length, remaining=length,
+        file_size=f(file_size), output_size=f(output_size),
+        submit_time=f(submit_time),
+        start_time=jnp.full((c,), -1.0, jnp.float32),
+        finish_time=jnp.full((c,), INF),
+        rank_in_vm=rank,
+        state=jnp.full((c,), CL_CREATED, jnp.int32),
+    )
+
+
+def validate_cloudlet_order(vm_ids) -> bool:
+    """Host-side invariant check: cloudlet slots grouped by vm id runs."""
+    arr = np.asarray(vm_ids)
+    seen, prev = set(), None
+    for x in arr.tolist():
+        if x != prev:
+            if x in seen:
+                return False
+            seen.add(x)
+            prev = x
+    return True
+
+
+def make_market(cost_per_cpu_sec=0.0, cost_per_mem=0.0, cost_per_storage=0.0,
+                cost_per_bw=0.0) -> MarketRates:
+    g = lambda x: jnp.asarray(x, jnp.float32)
+    return MarketRates(g(cost_per_cpu_sec), g(cost_per_mem),
+                       g(cost_per_storage), g(cost_per_bw))
+
+
+def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
+                    *, vm_policy=SPACE_SHARED, task_policy=SPACE_SHARED,
+                    reserve_pes=True, rates: MarketRates | None = None
+                    ) -> DatacenterState:
+    zero = jnp.float32(0.0)
+    return DatacenterState(
+        hosts=hosts, vms=vms, cloudlets=cloudlets,
+        rates=rates if rates is not None else make_market(),
+        acct=Accounting(zero, zero, zero, zero),
+        time=jnp.float32(0.0),
+        vm_policy=jnp.int32(vm_policy),
+        task_policy=jnp.int32(task_policy),
+        reserve_pes=jnp.int32(1 if reserve_pes else 0),
+    )

@@ -1,0 +1,67 @@
+"""Telemetry reducers — turn engine traces + final state into analyses.
+
+CloudSim's monitoring (§4.1 "dynamic monitoring") maps to two artifacts:
+the per-event ``StepRecord`` trace from ``engine.run_trace`` and the final
+``DatacenterState``.  Everything here is NumPy post-processing (outside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core import state as S
+from repro.core.engine import StepRecord
+
+__all__ = ["completion_curve", "utilization_timeline", "gantt",
+           "summarize_trace"]
+
+
+def completion_curve(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, cumulative completions) — the Fig. 8/9 x/y data."""
+    act = np.asarray(trace.active)
+    t = np.asarray(trace.time)[act]
+    done = np.asarray(trace.n_done)[act]
+    return t, done
+
+
+def utilization_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, fleet MIPS utilization in [0,1]) per event step."""
+    act = np.asarray(trace.active)
+    return np.asarray(trace.time)[act], np.asarray(trace.utilization)[act]
+
+
+def gantt(dc: S.DatacenterState) -> Dict[int, list]:
+    """Per-VM list of (cloudlet slot, start, finish) for completed tasks."""
+    cl = dc.cloudlets
+    state = np.asarray(cl.state)
+    vm = np.asarray(cl.vm)
+    st = np.asarray(cl.start_time)
+    ft = np.asarray(cl.finish_time)
+    out: Dict[int, list] = {}
+    for i in np.nonzero(state == S.CL_DONE)[0]:
+        out.setdefault(int(vm[i]), []).append(
+            (int(i), float(st[i]), float(ft[i])))
+    return out
+
+
+def summarize_trace(trace: StepRecord) -> Dict[str, float]:
+    act = np.asarray(trace.active)
+    util = np.asarray(trace.utilization)[act]
+    t = np.asarray(trace.time)[act]
+    if len(t) == 0:
+        return {"events": 0, "makespan": 0.0, "mean_util": 0.0,
+                "peak_util": 0.0}
+    # time-weighted mean utilization over event intervals
+    if len(t) > 1:
+        dt = np.diff(np.concatenate([[0.0], t]))
+        mean_util = float(np.average(util, weights=np.maximum(dt, 1e-12)))
+    else:
+        mean_util = float(util[0])
+    return {
+        "events": int(act.sum()),
+        "makespan": float(t[-1]),
+        "mean_util": mean_util,
+        "peak_util": float(util.max()),
+    }

@@ -1,0 +1,120 @@
+"""Workload generators — arrival processes and LM-fleet profiles.
+
+Two sources of cloudlets:
+
+1. **Synthetic arrival processes** (deterministic waves, Poisson, bursty
+   on/off) for classic CloudSim-style policy studies.
+
+2. **LM serving/training profiles** — the integration between the paper's
+   simulator and this repo's LM substrate.  A compiled dry-run of an
+   (architecture x shape) cell yields HLO FLOPs + bytes (launch/dryrun.py);
+   ``profile_from_roofline`` converts them into cloudlet terms, with the
+   convention **1 MI = 1e6 FLOPs** and **1 simulated MIPS = 1 MFLOP/s**, so
+   a TPU-v5e-class host is ``mips_per_pe = 197e6`` (197 TFLOP/s bf16).
+   The simulator then answers provider questions about LM fleets (queueing,
+   cost, utilization under space/time-shared allocation) that the dry-run
+   alone cannot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as S
+
+__all__ = ["poisson_arrivals", "bursty_arrivals", "LmWorkloadProfile",
+           "profile_from_roofline", "cloudlets_from_profile",
+           "TPU_V5E_MIPS", "make_tpu_hosts"]
+
+# 1 simulated MIPS == 1 MFLOP/s  =>  one v5e chip = 197e6 "MIPS"
+TPU_V5E_MIPS = 197e6
+_MI_PER_FLOP = 1e-6
+
+
+def poisson_arrivals(key, n_vms: int, *, rate_per_vm: float, horizon: float,
+                     max_per_vm: int, length_mi: float,
+                     file_size: float = 0.0, output_size: float = 0.0
+                     ) -> S.CloudletState:
+    """Poisson process per VM: exponential gaps, arrivals past horizon parked.
+
+    Fixed-capacity (``max_per_vm`` slots per VM); excess arrivals beyond the
+    horizon are emitted as EMPTY slots so shapes stay static.
+    """
+    gaps = jax.random.exponential(key, (n_vms, max_per_vm)) / rate_per_vm
+    times = jnp.cumsum(gaps, axis=1)
+    vm_ids = jnp.repeat(jnp.arange(n_vms, dtype=jnp.int32), max_per_vm)
+    submit = times.reshape(-1)
+    cl = S.make_cloudlets(vm_ids, length_mi, submit, file_size, output_size)
+    alive = submit <= horizon
+    return dataclasses.replace(
+        cl,
+        state=jnp.where(alive, cl.state, S.CL_EMPTY),
+        remaining=jnp.where(alive, cl.remaining, 0.0))
+
+
+def bursty_arrivals(key, n_vms: int, *, burst_every: float, burst_size: int,
+                    n_bursts: int, jitter: float, length_mi: float
+                    ) -> S.CloudletState:
+    """On/off bursts: every ``burst_every`` s each VM gets ``burst_size``
+    cloudlets with +-jitter on submission (flash-crowd studies)."""
+    per_vm = burst_size * n_bursts
+    base = jnp.repeat(jnp.arange(n_bursts, dtype=jnp.float32) * burst_every,
+                      burst_size)
+    noise = jax.random.uniform(key, (n_vms, per_vm), minval=0.0,
+                               maxval=jitter)
+    submit = (base[None, :] + noise).reshape(-1)
+    vm_ids = jnp.repeat(jnp.arange(n_vms, dtype=jnp.int32), per_vm)
+    return S.make_cloudlets(vm_ids, length_mi, submit)
+
+
+# ---------------------------------------------------------------------------
+# LM-fleet profiles (simulator <- dry-run roofline integration)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LmWorkloadProfile:
+    """One (arch x shape) cell rendered as cloudlet parameters."""
+    name: str
+    length_mi: float        # HLO FLOPs per step/request, in MI (1e6 FLOP)
+    file_size_mb: float     # input bytes per request (tokens, embeddings)
+    output_size_mb: float   # output bytes per request
+    hbm_gb_per_chip: float  # from memory_analysis — sets VM RAM demand
+    chips: int              # mesh size the cell was compiled for
+
+
+def profile_from_roofline(name: str, *, hlo_gflops: float,
+                          in_bytes: float = 0.0, out_bytes: float = 0.0,
+                          hbm_bytes_per_chip: float = 0.0, chips: int = 256
+                          ) -> LmWorkloadProfile:
+    """Convert dry-run cost/memory analysis into simulator units."""
+    return LmWorkloadProfile(
+        name=name,
+        length_mi=hlo_gflops * 1e9 * _MI_PER_FLOP,
+        file_size_mb=in_bytes / 1e6,
+        output_size_mb=out_bytes / 1e6,
+        hbm_gb_per_chip=hbm_bytes_per_chip / 1e9,
+        chips=chips,
+    )
+
+
+def cloudlets_from_profile(profile: LmWorkloadProfile, n_vms: int,
+                           *, requests_per_vm: int, period: float,
+                           first_at: float = 0.0) -> S.CloudletState:
+    """Steady request stream of this LM workload against a VM fleet."""
+    vm_ids = np.repeat(np.arange(n_vms, dtype=np.int32), requests_per_vm)
+    waves = np.tile(np.arange(requests_per_vm, dtype=np.float32), n_vms)
+    submit = first_at + waves * period
+    return S.make_cloudlets(vm_ids, profile.length_mi, submit,
+                            profile.file_size_mb, profile.output_size_mb)
+
+
+def make_tpu_hosts(n_chips: int, *, hbm_gb: float = 16.0,
+                   ici_gbps: float = 50.0) -> S.HostState:
+    """A pool of TPU-v5e-class hosts in simulator units (1 chip = 1 PE)."""
+    return S.make_hosts(
+        np.full(n_chips, 1), np.full(n_chips, TPU_V5E_MIPS),
+        np.full(n_chips, hbm_gb * 1024.0),          # "RAM" = HBM in MB
+        np.full(n_chips, ici_gbps * 1000.0),        # MB/s
+        np.full(n_chips, 1e9))

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticConfig,
+    make_batch,
+    batch_iterator,
+)

@@ -1,0 +1,81 @@
+"""Deterministic synthetic token pipeline.
+
+Tokens are a pure function of (step, batch index, position) via
+``jax.random.fold_in`` — every data-parallel shard regenerates its slice
+independently (no host I/O, no cross-host broadcast), restarts are exactly
+reproducible from the step counter alone, and the stream is identical
+regardless of mesh shape (elastic-rescale safe).
+
+Targets are next-token shifted with a simple learnable structure mixed in
+(a periodic n-gram pattern) so a few hundred training steps show a clearly
+decreasing loss rather than floor noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["SyntheticConfig", "make_batch", "batch_iterator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    batch: int
+    seq_len: int
+    vocab_size: int
+    num_codebooks: int = 0
+    vision_tokens: int = 0
+    d_model: int = 0
+    pattern_period: int = 7     # learnable bigram structure strength
+    structured_frac: float = 0.75
+
+
+def _tokens_for(key, scfg: SyntheticConfig, shape) -> jnp.ndarray:
+    noise = jax.random.randint(key, shape, 0, scfg.vocab_size)
+    # periodic structure: token at t is (seed + t) % vocab on a fraction of
+    # positions -> a model can learn it, loss visibly decreases
+    pos = jnp.arange(shape[1])
+    base = (jax.random.randint(jax.random.fold_in(key, 1),
+                               (shape[0],) + (1,) * (len(shape) - 1),
+                               0, scfg.pattern_period)
+            + pos.reshape(1, -1, *([1] * (len(shape) - 2)))) \
+        % scfg.pattern_period
+    structured = base % scfg.vocab_size
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 2),
+                                scfg.structured_frac, shape)
+    return jnp.where(mask, structured, noise).astype(jnp.int32)
+
+
+def make_batch(scfg: SyntheticConfig, step: int, *, seed: int = 0) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    shape = (scfg.batch, scfg.seq_len + 1)
+    if scfg.num_codebooks:
+        shape = shape + (scfg.num_codebooks,)
+    toks = _tokens_for(key, scfg, shape)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    if scfg.vision_tokens:
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 3),
+            (scfg.batch, scfg.vision_tokens, scfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_iterator(scfg: SyntheticConfig, *, start_step: int = 0,
+                   seed: int = 0):
+    step = start_step
+    while True:
+        yield step, make_batch(scfg, step, seed=seed)
+        step += 1
+
+
+def config_for(cfg: ModelConfig, batch: int, seq_len: int
+               ) -> SyntheticConfig:
+    return SyntheticConfig(batch=batch, seq_len=seq_len,
+                           vocab_size=cfg.vocab_size,
+                           num_codebooks=cfg.num_codebooks,
+                           vision_tokens=cfg.vision_tokens,
+                           d_model=cfg.d_model)

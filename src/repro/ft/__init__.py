@@ -1,0 +1,9 @@
+from repro.ft.supervisor import (  # noqa: F401
+    FailureInjector,
+    Supervisor,
+    SupervisorReport,
+)
+from repro.ft.straggler import (  # noqa: F401
+    simulate_sync_training,
+    StragglerReport,
+)

@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (causal GQA prefill/train forward).
+
+Grid (B, H, num_q_tiles, num_kv_tiles) — the last dimension iterates
+sequentially on TPU, so the running (max, denom, accumulator) state lives
+in VMEM scratch and the output tile is finalized when the last KV tile has
+been consumed.  GQA is expressed in the k/v index_map (query head h reads
+kv head h // group).  Block shapes keep the [bq, bk] score tile and the
+[bq, hd] accumulator in VMEM; hd is MXU-lane aligned by construction
+(multiples of 128 for every assigned arch except danube's 80, which pads).
+
+Causal + sliding-window masking is applied per score tile from absolute
+positions; fully-masked tiles still run (masked) — acceptable 2x slack
+that a production kernel would skip via a trimmed kv grid per q tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, skv: int, causal: bool,
+                  window, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale         # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                 # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)                 # [bk, hd]
+    s = q @ k.T                                         # [bq, bk]
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < skv
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,Sq,H,hd], k/v [B,Skv,KH,hd] -> [B,Sq,H,hd] (GQA: KH | H)."""
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / float(hd) ** 0.5
+
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    pad_q = (-sq) % bq_
+    pad_k = (-skv) % bk_
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3)                           # [B,H,Sq',hd]
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3)                           # [B,KH,Skv',hd]
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3)
+    nq = (sq + pad_q) // bq_
+    nk = (skv + pad_k) // bk_
+
+    kernel = functools.partial(_flash_kernel, bq=bq_, bk=bk_, skv=skv,
+                               causal=causal, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk_, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk_, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),           # running max
+            pltpu.VMEM((bq_, 1), jnp.float32),           # running denom
+            pltpu.VMEM((bq_, hd), jnp.float32),          # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Dispatching wrapper: Pallas flash kernel on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention", "attention_ref", "flash_attention"]
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None):
+    if jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=False)
+    return attention_ref(q, k, v, causal=causal, window=window)

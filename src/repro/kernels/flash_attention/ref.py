@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel: exact softmax attention
+with causal/window masking and GQA grouping (shared with models.attention's
+chunked path, restated naively for clarity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q [B,Sq,H,hd], k/v [B,Skv,KH,hd] -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((sq, skv), bool)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.selective_scan.ops import (  # noqa: F401
+    selective_scan,
+    selective_scan_pallas,
+    selective_scan_ref,
+)

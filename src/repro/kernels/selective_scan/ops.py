@@ -1,0 +1,16 @@
+"""Dispatching wrapper: Pallas selective scan on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.selective_scan.scan import selective_scan_pallas
+
+__all__ = ["selective_scan", "selective_scan_ref", "selective_scan_pallas"]
+
+
+def selective_scan(dt, x, b_ssm, c_ssm, a, d_skip):
+    if jax.default_backend() == "tpu":
+        return selective_scan_pallas(dt, x, b_ssm, c_ssm, a, d_skip,
+                                     interpret=False)
+    return selective_scan_ref(dt, x, b_ssm, c_ssm, a, d_skip)

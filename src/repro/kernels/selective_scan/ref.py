@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the selective-scan kernel: plain sequential
+recurrence over time (the semantic ground truth both the Pallas kernel and
+models.ssm's chunked associative scan must match)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, x, b_ssm, c_ssm, a, d_skip):
+    """dt/x f32[B,S,di]; b/c f32[B,S,N]; a f32[di,N]; d f32[di]."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        h = jnp.exp(dt_t[..., None] * a) * h \
+            + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (swap(dt), swap(x), swap(b_ssm), swap(c_ssm)))
+    return swap(ys) + x * d_skip

@@ -1,0 +1,1 @@
+from repro.kernels.simstep.ops import simstep, simstep_pallas, simstep_ref  # noqa

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the simstep kernel.
+
+Dense [V, K] cloudlet layout (V VM rows, K cloudlet slots per VM — the
+TPU-native view of the grouped-by-VM invariant).  Given each VM's granted
+capacity (host-level shares, computed outside), produce:
+
+  rates  f32[V, K]  MIPS per cloudlet under the VM-level policy
+  dt_min f32[V]     earliest completion among the VM's running cloudlets
+
+This is exactly ``scheduling.vm_level_rates`` + the per-VM event-time
+min-reduction, restated on the dense layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e30)
+SPACE_SHARED = 0
+TIME_SHARED = 1
+
+
+def simstep_ref(remaining: jnp.ndarray, runnable: jnp.ndarray,
+                vm_capacity: jnp.ndarray, req_pes: jnp.ndarray,
+                task_policy: jnp.ndarray | int):
+    """remaining f32[V,K]; runnable bool[V,K]; vm_capacity f32[V];
+    req_pes f32[V]; policy scalar.  Returns (rates [V,K], dt_min [V])."""
+    runnable = runnable & (remaining > 0.0)
+    pes = jnp.maximum(req_pes, 1.0)[:, None]            # [V,1]
+    cap = vm_capacity[:, None]                          # [V,1]
+    per_pe = cap / pes
+
+    # FCFS rank among runnable slots within the row (slots are stored in
+    # submission order — the state.py invariant)
+    rank = jnp.cumsum(runnable.astype(jnp.int32), axis=1) - 1
+    space = jnp.where(rank < pes.astype(jnp.int32), per_pe, 0.0)
+
+    n_run = jnp.sum(runnable, axis=1, keepdims=True).astype(jnp.float32)
+    time = cap / jnp.maximum(n_run, pes)
+
+    rates = jnp.where(jnp.asarray(task_policy) == SPACE_SHARED, space, time)
+    rates = jnp.where(runnable, rates, 0.0)
+
+    dt = jnp.where(rates > 0.0, remaining / jnp.maximum(rates, 1e-30), INF)
+    return rates, jnp.min(dt, axis=1)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel for the DES advance hot loop.
+
+CloudSim's ``updateVMsProcessing`` walks Java objects per VM per event; here
+one fused kernel pass computes, for a [V, K] tile resident in VMEM, the
+VM-level shares (both policies, branch-free select) and the per-VM earliest
+completion time.  Rows are VMs (tiled 8/sublane), slots are cloudlets
+(lane dim, padded to 128) — the layout maps the two-level scheduling
+reductions (rank-cumsum over K, min over K) onto lane-wise VPU ops.
+
+Grid: (V // TV,) — each step owns a [TV, K] tile; all inputs stream through
+VMEM BlockSpecs; no HBM traffic beyond the tile itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = jnp.float32(1e30)
+SPACE_SHARED = 0
+
+
+def _simstep_kernel(policy_ref, remaining_ref, runnable_ref, cap_ref,
+                    pes_ref, rates_ref, dtmin_ref):
+    remaining = remaining_ref[...]                       # [TV, K]
+    runnable = runnable_ref[...] & (remaining > 0.0)
+    cap = cap_ref[...][:, None]                          # [TV, 1]
+    pes = jnp.maximum(pes_ref[...], 1.0)[:, None]
+    policy = policy_ref[0]
+
+    per_pe = cap / pes
+    rank = jnp.cumsum(runnable.astype(jnp.int32), axis=1) - 1
+    space = jnp.where(rank < pes.astype(jnp.int32), per_pe, 0.0)
+    n_run = jnp.sum(runnable, axis=1, keepdims=True).astype(jnp.float32)
+    time = cap / jnp.maximum(n_run, pes)
+
+    rates = jnp.where(policy == SPACE_SHARED, space, time)
+    rates = jnp.where(runnable, rates, 0.0)
+    rates_ref[...] = rates
+
+    dt = jnp.where(rates > 0.0, remaining / jnp.maximum(rates, 1e-30),
+                   jnp.float32(1e30))
+    dtmin_ref[...] = jnp.min(dt, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v", "interpret"))
+def simstep_pallas(remaining: jnp.ndarray, runnable: jnp.ndarray,
+                   vm_capacity: jnp.ndarray, req_pes: jnp.ndarray,
+                   task_policy, *, tile_v: int = 8,
+                   interpret: bool = True):
+    """Pallas version of simstep_ref (see ref.py for semantics)."""
+    v, k = remaining.shape
+    pad_v = (-v) % tile_v
+    if pad_v:
+        padf = lambda a: jnp.pad(a, ((0, pad_v), (0, 0)))
+        remaining = padf(remaining)
+        runnable = jnp.pad(runnable, ((0, pad_v), (0, 0)))
+        vm_capacity = jnp.pad(vm_capacity, (0, pad_v))
+        req_pes = jnp.pad(req_pes, (0, pad_v))
+    vp = v + pad_v
+    policy = jnp.asarray(task_policy, jnp.int32).reshape(1)
+
+    grid = (vp // tile_v,)
+    row_spec = pl.BlockSpec((tile_v, k), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((tile_v,), lambda i: (i,))
+    rates, dtmin = pl.pallas_call(
+        _simstep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                # policy
+            row_spec,                                          # remaining
+            row_spec,                                          # runnable
+            vec_spec,                                          # capacity
+            vec_spec,                                          # req_pes
+        ],
+        out_specs=[row_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((vp, k), jnp.float32),
+            jax.ShapeDtypeStruct((vp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(policy, remaining, runnable, vm_capacity, req_pes)
+    return rates[:v], dtmin[:v]

@@ -1,0 +1,4 @@
+# Launchers: mesh construction, multi-pod dry-run, train/serve/simulate
+# drivers.  NOTE: dryrun.py must be executed as its own process
+# (python -m repro.launch.dryrun) — it fakes 512 host devices via XLA_FLAGS
+# before jax initializes, which must never leak into tests or benches.

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory/cost/collective analyses.
+
+MUST run as its own process (the XLA_FLAGS line above executes before any
+jax import): ``PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b
+--shape train_4k --mesh single`` or ``--all``.
+
+Cost accounting: XLA's HloCostAnalysis counts a while-loop body ONCE
+irrespective of trip count, so a depth-L scanned model reports ~1/L of its
+true FLOPs.  The dry-run therefore compiles three programs per cell:
+
+  full    — the real scanned program (memory analysis + compile proof)
+  depth-1 — pattern unrolled once   (cost c1)
+  depth-2 — pattern unrolled twice  (cost c2)
+
+and extrapolates exactly for the linear-in-depth program:
+  cost(L) = c1 + (L-1) * (c2 - c1).
+FLOPs, bytes-accessed and per-collective wire bytes all use this rule.
+
+Per cell it emits artifacts/dryrun/<arch>__<shape>__<mesh>[__opts].json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _mesh_and_chips(which: str):
+    from repro.launch.mesh import make_production_mesh
+    if which == "multi":
+        return make_production_mesh(multi_pod=True), 512
+    return make_production_mesh(multi_pod=False), 256
+
+
+def _rules_for(shape_name: str, mesh, sp: bool, kv_model: bool,
+               fsdp: bool, ep_fsdp: bool = True):
+    import dataclasses as _dc
+
+    from repro.launch.mesh import rules_for_mesh
+    if shape_name == "long_500k":
+        r = rules_for_mesh(mesh, kv_seq=("data", "model"), fsdp=fsdp)
+    elif shape_name == "decode_32k":
+        r = rules_for_mesh(mesh, kv_seq=("model",) if kv_model else (),
+                           fsdp=fsdp)
+    else:
+        r = rules_for_mesh(mesh, sp=sp, fsdp=fsdp)
+    return _dc.replace(r, expert_fsdp=ep_fsdp)
+
+
+def lower_cell(cfg, shape_name: str, mesh, chips: int, *,
+               sp: bool = True, kv_model: bool = True, fsdp: bool = True,
+               ep_fsdp: bool = True, ssm_bf16: bool = False,
+               remat: str = "nothing", microbatches: int = 1,
+               unroll: bool = False):
+    """Lower+compile one program; returns (compiled, info)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs as CFG
+    from repro.launch import specs as SP
+    from repro.models import model as M
+    from repro.sharding.rules import (batch_pspec, cache_pspecs,
+                                      make_constrain, param_pspecs)
+    from repro.train import AdamWConfig, TrainConfig, make_train_step
+
+    shape = CFG.SHAPES[shape_name]
+    if ssm_bf16:
+        cfg = dataclasses.replace(cfg, ssm_scan_bf16=True)
+    rules = _rules_for(shape_name, mesh, sp, kv_model, fsdp, ep_fsdp)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    leafp = lambda x: isinstance(x, P)
+
+    pshapes = SP.params_shapes(cfg)
+    pspecs = param_pspecs(pshapes, mesh, rules)
+    b = shape.global_batch
+    constrain = make_constrain(mesh, rules, b)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(opt=AdamWConfig(), remat=remat,
+                           microbatches=microbatches, unroll=unroll)
+        state_shapes = SP.train_state_shapes(cfg, tcfg)
+        from repro.train.optimizer import OptState
+        from repro.train.step import TrainState
+        state_specs = TrainState(params=pspecs,
+                                 opt=OptState(step=P(), m=pspecs, v=pspecs),
+                                 ef_error=None)
+        batch = SP.train_inputs(cfg, shape)
+        batch_specs = jax.tree.map(
+            lambda s: batch_pspec(mesh, rules, len(s.shape), b), batch)
+        step = make_train_step(cfg, tcfg, constrain=constrain)
+        fn = jax.jit(step, in_shardings=(
+            jax.tree.map(ns, state_specs, is_leaf=leafp),
+            jax.tree.map(ns, batch_specs, is_leaf=leafp)),
+            donate_argnums=0)
+        args = (state_shapes, batch)
+        model_flops = 6 * cfg.active_param_count() * b * shape.seq_len
+
+    elif shape.kind == "prefill":
+        batch = SP.prefill_inputs(cfg, shape)
+        batch_specs = jax.tree.map(
+            lambda s: batch_pspec(mesh, rules, len(s.shape), b), batch)
+
+        def prefill_fn(params, inputs):
+            return M.prefill(params, cfg, inputs["tokens"],
+                             vision_embeds=inputs.get("vision_embeds"),
+                             constrain=constrain, unroll=unroll)
+
+        fn = jax.jit(prefill_fn, in_shardings=(
+            jax.tree.map(ns, pspecs, is_leaf=leafp),
+            jax.tree.map(ns, batch_specs, is_leaf=leafp)))
+        args = (pshapes, batch)
+        model_flops = 2 * cfg.active_param_count() * b * shape.seq_len
+
+    else:  # decode
+        inputs = SP.decode_inputs(cfg, shape)
+        cspecs = cache_pspecs(cfg, mesh, rules, b, inputs["caches"])
+
+        def decode_fn(params, tokens_new, caches, position):
+            return M.decode_step(params, cfg, tokens_new, caches, position,
+                                 unroll=unroll)
+
+        fn = jax.jit(decode_fn, in_shardings=(
+            jax.tree.map(ns, pspecs, is_leaf=leafp),
+            ns(batch_pspec(mesh, rules, inputs["tokens_new"].ndim, b)),
+            jax.tree.map(ns, cspecs, is_leaf=leafp),
+            ns(batch_pspec(mesh, rules, 1, b))),
+            donate_argnums=2)
+        args = (pshapes, inputs["tokens_new"], inputs["caches"],
+                inputs["position"])
+        model_flops = 2 * cfg.active_param_count() * b  # one token each
+
+    from repro.models import costmode
+    t0 = time.time()
+    # count inner chunk loops fully (REPRO_INNER_EXACT=0 restores the
+    # loop-counted-once accounting for apples-to-apples comparisons)
+    costmode.UNROLL_INNER = unroll and \
+        os.environ.get("REPRO_INNER_EXACT", "1") == "1"
+
+    try:
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    finally:
+        costmode.UNROLL_INNER = False
+
+    return compiled, {"lower_s": t_lower, "compile_s": t_compile,
+                      "model_flops": model_flops}
+
+
+def _costs(compiled) -> dict:
+    from repro.launch.hlo_analysis import collective_bytes
+    ca = compiled.cost_analysis() or {}
+    stats = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": stats.wire_bytes,
+            "by_kind": stats.by_kind,
+            "counts": stats.counts}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             with_cost: bool = True, cost_only: bool = False,
+             **opts) -> dict:
+    from repro import configs as CFG
+    from repro.launch.hlo_analysis import roofline_terms
+
+    cfg = CFG.get_config(arch)
+    if not CFG.shape_applicable(cfg, shape_name):
+        raise SystemExit(
+            f"{arch} x {shape_name}: documented skip (quadratic attention)")
+    mesh, chips = _mesh_and_chips(mesh_kind)
+
+    tag0 = f"{arch}__{shape_name}__{mesh_kind}"
+    nd0 = {k: v for k, v in opts.items()
+           if (k, v) not in (("sp", True), ("kv_model", True),
+                             ("fsdp", True), ("ep_fsdp", True),
+                             ("ssm_bf16", False), ("remat", "nothing"),
+                             ("microbatches", 1))}
+    if nd0:
+        tag0 += "__" + "__".join(f"{k}-{v}" for k, v in sorted(nd0.items()))
+    existing_path = os.path.join(out_dir, tag0 + ".json")
+
+    if cost_only and os.path.exists(existing_path):
+        # reuse the (expensive) full-program compile results; refresh only
+        # the depth-1/-2 cost programs under the current accounting
+        with open(existing_path) as f:
+            prev = json.load(f)
+        mem = prev["memory"]
+        info = {"lower_s": prev.get("lower_s", 0.0),
+                "compile_s": prev.get("compile_s", 0.0),
+                "model_flops": prev["model_flops"]}
+    else:
+        # 1) the real scanned program: compile proof + memory analysis
+        compiled, info = lower_cell(cfg, shape_name, mesh, chips, **opts)
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        }
+        mem["peak_bytes_per_device"] = (mem["argument_bytes"]
+                                        + mem["output_bytes"]
+                                        + mem["temp_bytes"]
+                                        - mem["alias_bytes"])
+
+    # 2) depth-1 / depth-2 unrolled programs: exact per-depth costs
+    if not with_cost:
+        # multi-pod pass: compile proof + memory only (roofline is
+        # single-pod per the brief) — skip the cost programs
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "chips": chips, "params": cfg.param_count(),
+                  "active_params": cfg.active_param_count(),
+                  "options": opts, **info, "memory": mem}
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{mesh_kind}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1, default=float)
+        print(f"[dryrun] {tag}: COMPILED peak/dev="
+              f"{mem['peak_bytes_per_device']/1e9:.2f}GB "
+              f"(compile {info['compile_s']:.0f}s)", flush=True)
+        return result
+
+    plen = len(cfg.pattern)
+    cfg1 = dataclasses.replace(cfg, num_layers=plen)
+    cfg2 = dataclasses.replace(cfg, num_layers=2 * plen)
+    c1, _ = lower_cell(cfg1, shape_name, mesh, chips, unroll=True,
+                       **{k: v for k, v in opts.items() if k != "unroll"})
+    c2, _ = lower_cell(cfg2, shape_name, mesh, chips, unroll=True,
+                       **{k: v for k, v in opts.items() if k != "unroll"})
+    k1, k2 = _costs(c1), _costs(c2)
+    nb = cfg.num_blocks
+    # the microbatch accumulation scan body is also counted once by the
+    # cost analysis — scale by the trip count (over-counts the elementwise
+    # optimizer update by (mb-1)x, negligible vs matmul flops)
+    mb = opts.get("microbatches", 1)
+    extrap = lambda a, b2: (a + (nb - 1) * (b2 - a)) * mb
+    flops = extrap(k1["flops"], k2["flops"])
+    nbytes = extrap(k1["bytes"], k2["bytes"])
+    wire = extrap(k1["wire"], k2["wire"])
+    by_kind = {k: extrap(k1["by_kind"][k], k2["by_kind"][k])
+               for k in k1["by_kind"]}
+
+    roof = roofline_terms(hlo_flops=flops, hlo_bytes=nbytes,
+                          collective_wire_bytes=wire, chips=chips,
+                          model_flops=info["model_flops"])
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips, "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "options": opts, **info,
+        "memory": mem,
+        "cost_per_device": {"flops": flops, "bytes_accessed": nbytes},
+        "cost_depth1": k1, "cost_depth2": k2,
+        "collectives": {"wire_bytes": wire, "by_kind": by_kind,
+                        "counts_depth2": k2["counts"]},
+        "roofline": roof,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    nondefault = {k: v for k, v in opts.items()
+                  if (k, v) not in (("sp", True), ("kv_model", True),
+                                    ("fsdp", True), ("ep_fsdp", True),
+                                    ("ssm_bf16", False),
+                                    ("remat", "nothing"),
+                                    ("microbatches", 1))}
+    if nondefault:
+        tag += "__" + "__".join(f"{k}-{v}"
+                                for k, v in sorted(nondefault.items()))
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    r = roof
+    print(f"[dryrun] {tag}: peak/dev="
+          f"{mem['peak_bytes_per_device']/1e9:.2f}GB "
+          f"compute={r['compute_s']*1e3:.2f}ms "
+          f"memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms "
+          f"dominant={r['dominant']} "
+          f"frac={r['roofline_fraction']:.3f}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--sp", type=int, default=1)
+    ap.add_argument("--kv-model", type=int, default=1)
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--ep-fsdp", type=int, default=1)
+    ap.add_argument("--ssm-bf16", type=int, default=0)
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="compile proof + memory only (multi-pod pass)")
+    ap.add_argument("--cost-only", action="store_true",
+                    help="refresh depth-1/-2 cost programs, reuse the "
+                         "existing full-program artifact")
+    args = ap.parse_args()
+
+    from repro import configs as CFG
+
+    opts = dict(sp=bool(args.sp), kv_model=bool(args.kv_model),
+                fsdp=bool(args.fsdp), ep_fsdp=bool(args.ep_fsdp),
+                ssm_bf16=bool(args.ssm_bf16), remat=args.remat,
+                microbatches=args.microbatches)
+    if args.all:
+        ok, failed, skipped = 0, [], 0
+        for arch, shape_name, applicable in CFG.all_cells():
+            if not applicable:
+                skipped += 1
+                print(f"[dryrun] SKIP {arch} x {shape_name} "
+                      f"(quadratic attention at 500k, see DESIGN.md)",
+                      flush=True)
+                continue
+            try:
+                tag = f"{arch}__{shape_name}__{args.mesh}"
+                if args.skip_existing and os.path.exists(
+                        os.path.join(args.out, tag + ".json")):
+                    ok += 1
+                    print(f"[dryrun] exists, skip {tag}", flush=True)
+                    continue
+                run_cell(arch, shape_name, args.mesh, args.out,
+                         with_cost=not args.no_cost,
+                         cost_only=args.cost_only, **opts)
+                ok += 1
+            except Exception as e:     # noqa: BLE001
+                failed.append((arch, shape_name, repr(e)))
+                traceback.print_exc()
+        print(f"[dryrun] mesh={args.mesh} ok={ok} skipped={skipped} "
+              f"failed={len(failed)}")
+        for f in failed:
+            print("[dryrun] FAILED:", f)
+        raise SystemExit(1 if failed else 0)
+
+    run_cell(args.arch, args.shape, args.mesh, args.out,
+             with_cost=not args.no_cost, cost_only=args.cost_only, **opts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""HLO-text analysis: collective traffic + roofline terms from a compiled
+dry-run artifact.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed but NOT collective
+traffic, so we parse the (optimized) HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction contributes
+wire bytes estimated with ring-algorithm cost over its replica-group size n:
+
+  all-reduce       2 * size * (n-1)/n      (reduce-scatter + all-gather)
+  all-gather       size_out * (n-1)/n
+  reduce-scatter   size_in  * (n-1)/n  ==  size_out * (n-1)
+  all-to-all       size * (n-1)/n
+  collective-permute  size                  (point to point)
+
+Sizes are parsed from the instruction's result shape (tuples summed).
+Roofline terms use TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "roofline_terms", "HW", "CollectiveStats"]
+
+# hardware constants (TPU v5e class, per the assignment brief)
+HW = {
+    "peak_flops": 197e12,       # bf16 per chip
+    "hbm_bw": 819e9,            # bytes/s per chip
+    "ici_bw": 50e9,             # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every shape literal in a result-type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    m = _GROUPS_IOTA_RE.search(line)   # [groups,size] iota form
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float                   # per-device bytes on the wire
+    by_kind: Dict[str, float]
+    counts: Dict[str, int]
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 2
+                     ) -> CollectiveStats:
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ROOT "):
+            stripped = stripped[5:]
+        # instruction lines look like:  %name = TYPE op-name(args), attrs
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):   # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        size = _shape_bytes(result_type)
+        n = _group_size(stripped, default_group)
+        if kind == "all-reduce":
+            wire = 2 * size * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            wire = size * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)          # size is the scattered output
+        elif kind == "all-to-all":
+            wire = size * (n - 1) / max(n, 1)
+        else:                               # collective-permute
+            wire = size
+        by_kind[kind] += wire
+        counts[kind] += 1
+    return CollectiveStats(
+        wire_bytes=sum(by_kind.values()), by_kind=by_kind, counts=counts)
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_wire_bytes: float, chips: int,
+                   model_flops: float, links_per_chip: float = 3.0) -> dict:
+    """The three roofline times (seconds) + bottleneck + usefulness ratio.
+
+    ``cost_analysis`` on a compiled pjit function reports the PARTITIONED
+    (per-device) module — calibrated empirically in
+    tests/test_hlo_analysis.py — so flops/bytes here are per-chip, and so
+    are the parsed collective wire bytes.  ``model_flops`` is the GLOBAL
+    analytic 6·N·D count and is divided by ``chips`` for comparison.
+    A v5e chip has ~4 ICI links; we credit 3 concurrently usable for
+    collectives on a 2D torus slice.
+    """
+    t_compute = hlo_flops / HW["peak_flops"]
+    t_memory = hlo_bytes / HW["hbm_bw"]
+    t_collective = collective_wire_bytes / (HW["ici_bw"] * links_per_chip)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_per_chip = model_flops / chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_per_chip / hlo_flops
+        if hlo_flops else 0.0,
+        # step-time lower bound = the slowest roofline resource; the
+        # roofline fraction scores useful work against that bound
+        "step_lower_bound_s": bound,
+        "roofline_fraction": (model_per_chip / HW["peak_flops"]) / bound
+        if bound > 0 else 0.0,
+    }

@@ -1,0 +1,37 @@
+"""Production mesh construction (functions, not module constants — importing
+this module never touches jax device state).
+
+Topology: TPU v5e pods of 256 chips as a (16,16) ("data","model") grid;
+multi-pod adds a leading "pod" axis (2,16,16) = 512 chips.  Data-parallel
+traffic crosses pods (DCN-ish); model-parallel traffic stays inside the
+(16,16) ICI torus.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.rules import ShardingRules
+
+__all__ = ["make_production_mesh", "make_local_mesh", "rules_for_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> Mesh:
+    """All locally visible devices on ("data","model") = (n, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def rules_for_mesh(mesh: Mesh, *, sp: bool = False, fsdp: bool = True,
+                   kv_seq: tuple[str, ...] = ()) -> ShardingRules:
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # FSDP stays inside a pod (over "data"): cross-pod traffic is then only
+    # the gradient all-reduce, which is the right split for DCN-ish links.
+    return ShardingRules(batch=batch, model="model", sp=sp,
+                         fsdp=("data",) if fsdp else (), kv_seq=kv_seq)

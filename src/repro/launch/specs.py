@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation ever happens here: the dry-run lowers/compiles against
+these specs only.  Shapes follow the assignment:
+  train_4k     train_step  tokens/targets [B=256, S=4096]
+  prefill_32k  prefill     tokens [B=32, S=32768]
+  decode_32k   serve_step  one token, KV cache of 32768, B=128
+  long_500k    serve_step  one token, cache of 524288, B=1 (sub-quadratic)
+
+For llava the text tokens are S - vision_tokens and ``vision_embeds``
+supplies the patch-embedding stub, so total context length equals the
+assigned S.  Musicgen tokens carry the trailing codebook dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as CFG
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+__all__ = ["train_inputs", "prefill_inputs", "decode_inputs",
+           "train_state_shapes", "params_shapes"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _tok_shape(cfg: ModelConfig, b: int, s: int):
+    return (b, s, cfg.num_codebooks) if cfg.num_codebooks else (b, s)
+
+
+def train_inputs(cfg: ModelConfig, shape: CFG.ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (cfg.vision_tokens or 0)
+    batch = {
+        "tokens": SDS(_tok_shape(cfg, b, s_text), jnp.int32),
+        "targets": SDS(_tok_shape(cfg, b, s_text), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                     jnp.float32)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: CFG.ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - (cfg.vision_tokens or 0)
+    out = {"tokens": SDS(_tok_shape(cfg, b, s_text), jnp.int32)}
+    if cfg.vision_tokens:
+        out["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                   jnp.float32)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: CFG.ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    return {
+        "tokens_new": SDS(_tok_shape(cfg, b, 1), jnp.int32),
+        "caches": caches,
+        "position": SDS((b,), jnp.int32),
+    }
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_shapes(cfg: ModelConfig, tcfg):
+    from repro.train import init_train_state
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,19 @@
+"""LM substrate: one configurable decoder covers all assigned families
+(dense GQA, MoE, Mamba-1 SSM, hybrid, multi-codebook audio, VLM-stub)."""
+from repro.models import attention, config, layers, model, moe, ssm  # noqa
+from repro.models import transformer  # noqa: F401
+from repro.models.config import (  # noqa: F401
+    LayerSpec,
+    ModelConfig,
+    jamba_pattern,
+    mamba_pattern,
+    uniform_pattern,
+)
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)

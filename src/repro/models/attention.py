@@ -1,0 +1,185 @@
+"""GQA attention: chunked-online-softmax (flash-style) prefill/train path,
+plus a cached decode path.  Supports QKV bias (qwen1.5/qwen2), qk-norm
+(qwen3), and sliding windows (h2o-danube).
+
+The chunked path scans KV blocks with running (max, sum, acc) statistics —
+the same algorithm as kernels/flash_attention, which replaces the inner
+block computation with a Pallas kernel on TPU.  Chunking bounds the score
+matrix to [Sq, kv_chunk] so a 32k-token prefill never materialises an
+S x S tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import costmode
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), d, dtype),
+        "wk": dense_init(ks[1], (d, k * hd), d, dtype),
+        "wv": dense_init(ks[2], (d, k * hd), d, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((k * hd,), dtype)
+        p["bv"] = jnp.zeros((k * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,S,K,hd] with bias/qknorm/rope."""
+    b, s, _ = x.shape
+    h, k, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    kk = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        kk = kk + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    kk = kk.reshape(b, s, k, hd)
+    v = v.reshape(b, s, k, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        kk = rms_norm(kk, params["k_norm"], cfg.norm_eps)
+    sin, cos = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    kk = apply_rope(kk, sin, cos)
+    return q, kk, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        q_offset: int = 0, kv_chunk: int = 1024):
+    """q [B,Sq,H,hd], k/v [B,Skv,K,hd] -> [B,Sq,H,hd].
+
+    Scans KV in chunks keeping per-query running max/denominator/accumulator
+    (online softmax).  ``q_offset`` is the absolute position of q[0] within
+    the KV sequence (for prefill continuation).  GQA: H query heads grouped
+    over K kv heads.
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = (skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    ks = k.reshape(b, n_chunks, kv_chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, kv_chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        (kc, vc), ci = inp
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        # scores: [B, Sq, Kh, G, chunk]
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kc.astype(jnp.float32))
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((sq, kv_chunk), bool)
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (kv_pos < skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kh, g, hd), jnp.float32)
+    # checkpoint per KV chunk: backward recomputes each chunk's scores from
+    # the (small) carry instead of stacking all [.., Sq, chunk] probability
+    # tensors — the flash-backward memory property.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc), _ = costmode.scan(
+        body, (m0, l0, a0), ((ks, vs), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: int | None = None):
+    """Single-token decode: q [B,1,H,hd] against cache [B,Smax,K,hd].
+
+    ``cache_len`` i32[B] — number of valid positions.  Memory-bound by
+    design (one pass over the cache, no chunk scan needed).
+    """
+    b, _, h, hd = q.shape
+    _, smax, kh, _ = k_cache.shape
+    g = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kh, g, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(smax)[None, :]                  # [1, Smax]
+    mask = pos < cache_len[:, None]
+    if window is not None:
+        mask = mask & (pos >= cache_len[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full sub-layer entry points
+# ---------------------------------------------------------------------------
+def attention_block(params, cfg: ModelConfig, x, positions, *,
+                    kv_chunk: int = 1024):
+    """Train/prefill attention sub-layer: [B,S,D] -> ([B,S,D], (k, v))."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = flash_attention_ref(q, k, v, causal=True,
+                              window=cfg.sliding_window, kv_chunk=kv_chunk)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ params["wo"], (k, v)
+
+
+def attention_decode_block(params, cfg: ModelConfig, x, cache, position):
+    """Decode sub-layer: x [B,1,D], cache {k,v: [B,Smax,K,hd]},
+    position i32[B] = current index.  Returns (out, new_cache)."""
+    q, k_new, v_new = _project_qkv(params, cfg, x, position[:, None])
+    # ring-buffer write for SWA caches, plain write otherwise
+    smax = cache["k"].shape[1]
+    slot = position % smax
+    bidx = jnp.arange(x.shape[0])
+    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    cache_len = jnp.minimum(position + 1, smax)
+    window = cfg.sliding_window
+    out = decode_attention(q, k_cache, v_cache, cache_len, window=window)
+    b = x.shape[0]
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,34 @@
+"""Cost-measurement mode: unroll inner chunk loops at trace time.
+
+XLA's HloCostAnalysis counts a while body once regardless of trip count.
+The dry-run handles *layer* scans by extrapolating depth-1/-2 unrolled
+programs, but flash attention's KV-chunk scan and the selective scan's
+chunk loop are inner while-loops with the same problem.  When
+``UNROLL_INNER`` is set (only by launch/dryrun.py while tracing the
+depth-1/-2 cost programs), ``scan`` below unrolls into a Python loop so
+every chunk's FLOPs/bytes/collectives are counted.
+
+Never enabled for the real (memory-analysis) program or at runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL_INNER = False
+
+
+def scan(body, carry, xs):
+    """lax.scan, or an unrolled loop under cost-measurement mode."""
+    if not UNROLL_INNER:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked

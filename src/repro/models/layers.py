@@ -1,0 +1,71 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU MLP, initializers.
+
+Pure-functional (params are plain dict pytrees); dtype policy is
+"params in cfg.dtype, reductions in f32".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "rope", "apply_rope", "swiglu", "dense_init",
+           "init_mlp", "mlp"]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    """RMSNorm with f32 statistics regardless of activation dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(positions: jnp.ndarray, head_dim: int, theta: float
+         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(sin, cos) tables for the given positions: [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Rotate pairs (x1,x2) -> (x1 cos - x2 sin, x2 cos + x1 sin).
+
+    x: [B, S, H, hd]; sin/cos: [B, S, hd//2] (broadcast over heads).
+    """
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def dense_init(key, shape, in_axis_size: int, dtype) -> jnp.ndarray:
+    """Scaled-normal init: std = 1/sqrt(fan_in)."""
+    std = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "down": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU feed-forward: x [.., D] -> [.., D]."""
+    g = x @ params["gate"]
+    u = x @ params["up"]
+    return swiglu(g, u) @ params["down"]

@@ -1,0 +1,163 @@
+"""Top-level LM: embeddings (text / multi-codebook / VLM-stub), block stack,
+head(s), loss, prefill and decode entry points.
+
+The same module serves all 10 assigned architectures — differences are pure
+config.  Modality frontends are stubs per the assignment: llava consumes
+precomputed patch embeddings [B, P, D]; musicgen consumes EnCodec codebook
+ids [B, S, CB] directly (the backbone's real input).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["init_params", "forward", "compute_logits", "loss_fn",
+           "prefill", "decode_step", "init_cache"]
+
+MOE_AUX_COEF = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    cb = max(cfg.num_codebooks, 1)
+    emb_shape = (cfg.vocab_size, cfg.d_model) if cb == 1 else \
+        (cb, cfg.vocab_size, cfg.d_model)
+    params = {
+        "embed": dense_init(k_emb, emb_shape, cfg.d_model, dt),
+        "blocks": tfm.init_blocks(k_blocks, cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        head_shape = (cfg.d_model, cfg.vocab_size) if cb == 1 else \
+            (cb, cfg.d_model, cfg.vocab_size)
+        params["head"] = dense_init(k_head, head_shape, cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 vision_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens [B,S] (or [B,S,CB] for codebooks) -> [B, S(+P), D]."""
+    if cfg.num_codebooks:
+        # sum of per-codebook embeddings
+        parts = [jnp.take(params["embed"][c], tokens[..., c], axis=0)
+                 for c in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def compute_logits(params, cfg: ModelConfig, hidden: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """hidden [B,S,D] -> logits [B,S,V] (or [B,S,CB,V])."""
+    if cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            return jnp.einsum("bsd,cvd->bscv", hidden, params["embed"])
+        return hidden @ params["embed"].T
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,cdv->bscv", hidden, params["head"])
+    return hidden @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *,
+            vision_embeds=None, remat: str = "nothing",
+            collect_kv: bool = False,
+            constrain: Callable = lambda a: a, unroll: bool = False):
+    """Returns (hidden [B,Stot,D], kv_caches | None, moe_aux)."""
+    x = embed_tokens(params, cfg, tokens, vision_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = constrain(x)
+    x, kvs, aux = tfm.apply_blocks(params["blocks"], cfg, x, positions,
+                                   remat=remat, collect_kv=collect_kv,
+                                   constrain=constrain, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, kvs, aux
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray, mask: jnp.ndarray):
+    """Mean masked cross-entropy in f32; logits [..., V], targets [...]."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *,
+            remat: str = "nothing", constrain: Callable = lambda a: a,
+            unroll: bool = False):
+    """batch: tokens [B,S]/[B,S,CB], targets (same shape), optional
+    vision_embeds [B,P,D], optional loss_mask.  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    hidden, _, aux = forward(params, cfg, tokens,
+                             vision_embeds=batch.get("vision_embeds"),
+                             remat=remat, constrain=constrain,
+                             unroll=unroll)
+    if cfg.vision_tokens and batch.get("vision_embeds") is not None:
+        hidden = hidden[:, batch["vision_embeds"].shape[1]:]
+    logits = compute_logits(params, cfg, hidden)
+    logits = getattr(constrain, "logits", lambda a: a)(logits)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    xent = _xent(logits, targets, mask.astype(jnp.float32))
+    loss = xent + MOE_AUX_COEF * aux
+    return loss, {"xent": xent, "moe_aux": aux,
+                  "perplexity": jnp.exp(xent)}
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return tfm.init_block_caches(cfg, batch, max_seq)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+            constrain: Callable = lambda a: a, unroll: bool = False):
+    """Full forward collecting KV; returns (last-token logits, kv stacks).
+
+    kv stacks: tuple per attn sub-layer of (k, v) [num_blocks, B, S, K, hd].
+    """
+    hidden, kvs, _ = forward(params, cfg, tokens,
+                             vision_embeds=vision_embeds, remat="none",
+                             collect_kv=True, constrain=constrain,
+                             unroll=unroll)
+    logits = compute_logits(params, cfg, hidden[:, -1:])
+    return logits, kvs
+
+
+def decode_step(params, cfg: ModelConfig, tokens_new, caches, position,
+                *, unroll: bool = False):
+    """One token for every sequence: tokens_new [B,1] (or [B,1,CB]),
+    position i32[B].  Returns (logits [B,1,V...], new caches)."""
+    x = embed_tokens(params, cfg, tokens_new)
+    x, new_caches = tfm.apply_blocks_decode(params["blocks"], caches, cfg,
+                                            x, position, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return compute_logits(params, cfg, x), new_caches

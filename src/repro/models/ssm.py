@@ -1,0 +1,160 @@
+"""Mamba-1 selective SSM (falcon-mamba, jamba's mamba sub-layers).
+
+Train/prefill runs a **chunked selective scan**: the sequence is split into
+chunks; within a chunk the recurrence h_t = exp(dt*A) h_{t-1} + dt*B_t*x_t
+is evaluated with an associative scan (log-depth), and a tiny [B, d_inner,
+N] state carries between chunks via ``lax.scan``.  This bounds the
+materialised [B, Q, d_inner, N] tensor to one chunk — the TPU adaptation of
+Mamba's fused CUDA kernel, whose whole purpose is exactly to avoid
+materialising [B, S, d_inner, N] in HBM.  kernels/selective_scan provides
+the Pallas version of the chunk body.
+
+Decode is the O(1) recurrent step with a rolling conv window + SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import costmode
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode_block",
+           "init_mamba_cache", "selective_scan"]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    r, n, kw = cfg.dt_rank_, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A: A[d, n] = -(1..n)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": dense_init(ks[1], (di, kw), kw, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * n), di, dtype),
+        "dt_proj": dense_init(ks[3], (r, di), r, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(dtype),
+        "A_log": jnp.log(a),                        # f32 [di, n]
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv: x [B,S,di], w [di,k] — k shifted adds."""
+    k = w.shape[1]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + s] * w[:, j] for j in range(k))
+    return out + b
+
+
+def _ssm_inputs(params, cfg: ModelConfig, xc: jnp.ndarray):
+    """Shared projections: xc [..., di] -> (dt [..., di], B/C [..., n])."""
+    r, n = cfg.dt_rank_, cfg.ssm_state
+    proj = xc @ params["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def selective_scan(dt, b_ssm, c_ssm, xc, a, d_skip, *, chunk: int = 256,
+                   compute_dtype=jnp.float32):
+    """Chunked selective scan.
+
+    dt, xc: [B,S,di] f32;  b_ssm, c_ssm: [B,S,n] f32;  a: [di,n] (negative).
+    Returns y [B,S,di] f32.  ``compute_dtype`` sets the precision of the
+    [B,Q,di,N] decay/cumprod tensors (bf16 halves their HBM traffic; the
+    inter-chunk carry h stays f32).
+    """
+    bsz, s, di = xc.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    resh = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:]) \
+        .transpose(1, 0, 2, *range(3, t.ndim + 1))
+    dt_c, x_c = resh(dt), resh(xc)
+    b_c, c_c = resh(b_ssm), resh(c_ssm)
+
+    def chunk_body(h0, inp):
+        dtk, xk, bk, ck = inp          # [B,Q,di] / [B,Q,n]
+        da = dtk[..., None] * a        # [B,Q,di,n]  (<= 0)
+        dbx = ((dtk * xk)[..., None]
+               * bk[:, :, None, :]).astype(compute_dtype)
+        decay = jnp.exp(da).astype(compute_dtype)
+
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+
+        a_cum, bx_cum = jax.lax.associative_scan(
+            comb, (decay, dbx), axis=1)
+        h = (a_cum.astype(jnp.float32) * h0[:, None]
+             + bx_cum.astype(jnp.float32))            # [B,Q,di,n]
+        y = jnp.einsum("bqdn,bqn->bqd", h, ck)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    # checkpoint per chunk: the inner backward otherwise stacks every
+    # chunk's [B,Q,di,N] decay/cumprod residuals — the full [B,S,di,N]
+    # materialisation this chunked scan exists to avoid.
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    _, ys = costmode.scan(chunk_body, h0, (dt_c, x_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y + xc * d_skip
+
+
+def mamba_block(params, cfg: ModelConfig, x: jnp.ndarray, *,
+                chunk: int = 256) -> jnp.ndarray:
+    """Train/prefill Mamba sub-layer: [B,S,D] -> [B,S,D]."""
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    xc, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(_causal_conv(xc, params["conv_w"], params["conv_b"]))
+    dt, b_ssm, c_ssm = _ssm_inputs(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])
+    cdt = jnp.bfloat16 if cfg.ssm_scan_bf16 else jnp.float32
+    y = selective_scan(dt, b_ssm, c_ssm, xc.astype(jnp.float32), a,
+                       params["D"], chunk=chunk, compute_dtype=cdt)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    return out @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (O(1) per token)
+# ---------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode_block(params, cfg: ModelConfig, x: jnp.ndarray, cache: dict
+                       ) -> tuple[jnp.ndarray, dict]:
+    """x [B,1,D], cache {conv [B,k-1,di], h [B,di,n]} -> (y [B,1,D], cache)."""
+    di = cfg.d_inner
+    xz = x[:, 0] @ params["in_proj"]
+    xc, z = jnp.split(xz, [di], axis=-1)
+
+    win = jnp.concatenate([cache["conv"], xc[:, None]], axis=1)  # [B,k,di]
+    conv_out = jnp.einsum("bkd,dk->bd", win, params["conv_w"]) \
+        + params["conv_b"]
+    xc = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:]
+
+    dt, b_ssm, c_ssm = _ssm_inputs(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt[..., None] * a)                 # [B,di,n]
+    h = decay * cache["h"] + (dt * xc.astype(jnp.float32))[..., None] \
+        * b_ssm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm) + xc.astype(jnp.float32) \
+        * params["D"]
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    return (out @ params["out_proj"])[:, None], {"conv": new_conv, "h": h}

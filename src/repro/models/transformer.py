@@ -1,0 +1,218 @@
+"""Block assembly: pattern sub-layers stacked with ``lax.scan``.
+
+The compiled HLO contains ONE copy of the pattern (e.g. one layer for
+uniform archs, the 8-sub-layer super-block for Jamba) regardless of depth —
+essential for compiling 94-layer models on a single-core dry-run host.
+
+Remat: each scan step is wrapped in ``jax.checkpoint`` (policy selectable),
+so the backward pass recomputes block internals and only the per-block
+residual stream is saved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import init_mlp, mlp, rms_norm
+
+__all__ = ["init_blocks", "apply_blocks", "apply_blocks_decode",
+           "init_block_caches", "REMAT_POLICIES"]
+
+REMAT_POLICIES = {
+    "none": None,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _has_mlp(cfg: ModelConfig, spec: LayerSpec) -> bool:
+    return spec.moe or cfg.d_ff > 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(k1, cfg, dt)
+    else:
+        p["mixer"] = ssm.init_mamba(k1, cfg, dt)
+    if _has_mlp(cfg, spec):
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        if spec.moe:
+            p["mlp"] = moe_mod.init_moe(k2, cfg, dt)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_blocks(key, cfg: ModelConfig) -> dict:
+    """{'sub{i}': pytree stacked over num_blocks} for scan consumption."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), cfg.num_blocks)
+        stacked = jax.vmap(lambda k: _init_sublayer(k, cfg, spec))(keys)
+        out[f"sub{i}"] = stacked
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _sublayer_fwd(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                  collect_kv: bool, constrain=lambda a: a):
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    kv = None
+    if spec.mixer == "attn":
+        mix, kv = attn.attention_block(params["mixer"], cfg, h, positions)
+    else:
+        mix = ssm.mamba_block(params["mixer"], cfg, h)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if _has_mlp(cfg, spec):
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if spec.moe:
+            y, metrics = moe_mod.moe_block(params["mlp"], cfg, h2,
+                                           constrain=constrain)
+            aux = metrics["load_balance_loss"]
+        else:
+            y = mlp(params["mlp"], h2)
+        x = x + y
+    return x, (kv if collect_kv else None), aux
+
+
+def apply_blocks(blocks: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, *, remat: str = "nothing",
+                 collect_kv: bool = False,
+                 constrain: Callable[[jnp.ndarray], jnp.ndarray] = lambda a: a,
+                 unroll: bool = False):
+    """Run all layers. Returns (x, stacked kv per attn sub-layer | None,
+    summed moe aux loss).
+
+    ``unroll=True`` replaces the scan with a Python loop — identical math,
+    used by the dry-run cost extrapolation (XLA cost analysis counts a
+    while body once regardless of trip count) and available as a perf knob.
+    """
+
+    def block_fn(x, block_params):
+        kvs, aux = [], jnp.float32(0.0)
+        for i, spec in enumerate(cfg.pattern):
+            x, kv, a = _sublayer_fwd(block_params[f"sub{i}"], cfg, spec, x,
+                                     positions, collect_kv, constrain)
+            if kv is not None:
+                kvs.append(kv)
+            aux = aux + a
+            x = constrain(x)
+        return x, (tuple(kvs), aux)
+
+    if REMAT_POLICIES.get(remat, None) is not None:
+        block_fn = jax.checkpoint(block_fn,
+                                  policy=REMAT_POLICIES[remat],
+                                  prevent_cse=False)
+    elif remat != "none":
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+
+    if unroll:
+        kv_list, aux_total = [], jnp.float32(0.0)
+        for j in range(cfg.num_blocks):
+            slice_j = jax.tree.map(lambda a: a[j], blocks)
+            x, (kvs, aux) = block_fn(x, slice_j)
+            kv_list.append(kvs)
+            aux_total = aux_total + aux
+        if kv_list and kv_list[0]:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+        else:
+            stacked = ()
+        return x, stacked, aux_total
+
+    x, (kvs, aux) = jax.lax.scan(block_fn, x, blocks)
+    return x, kvs, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode (cached, one token)
+# ---------------------------------------------------------------------------
+def init_block_caches(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Cache pytree mirroring init_blocks structure (stacked per block).
+
+    Attention sub-layers get [num_blocks, B, Smax, K, hd] ring/linear KV
+    buffers (Smax = window for SWA archs); Mamba sub-layers get conv + state
+    caches.  Position bookkeeping lives with the caller.
+    """
+    dt = _dtype(cfg)
+    caches = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer == "attn":
+            smax = min(max_seq, cfg.sliding_window or max_seq)
+            shape = (cfg.num_blocks, batch, smax, cfg.num_kv_heads,
+                     cfg.head_dim)
+            caches[f"sub{i}"] = {"k": jnp.zeros(shape, dt),
+                                 "v": jnp.zeros(shape, dt)}
+        else:
+            one = ssm.init_mamba_cache(cfg, batch, dt)
+            caches[f"sub{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.num_blocks, *a.shape)), one)
+    return caches
+
+
+def apply_blocks_decode(blocks: dict, caches: dict, cfg: ModelConfig,
+                        x: jnp.ndarray, position: jnp.ndarray,
+                        *, unroll: bool = False):
+    """One decode step through all layers.
+
+    x [B,1,D]; position i32[B] (absolute index of the new token).
+    Returns (x, new_caches).
+    """
+
+    def block_fn(x, slices):
+        block_params, cache = slices
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            p = block_params[f"sub{i}"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            if spec.mixer == "attn":
+                mix, c = attn.attention_decode_block(p["mixer"], cfg, h,
+                                                     cache[f"sub{i}"],
+                                                     position)
+            else:
+                mix, c = ssm.mamba_decode_block(p["mixer"], cfg, h,
+                                                cache[f"sub{i}"])
+            new_cache[f"sub{i}"] = c
+            x = x + mix
+            if _has_mlp(cfg, spec):
+                h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+                if spec.moe:
+                    y, _ = moe_mod.moe_block(p["mlp"], cfg, h2)
+                else:
+                    y = mlp(p["mlp"], h2)
+                x = x + y
+        return x, new_cache
+
+    if unroll:
+        outs = []
+        for j in range(cfg.num_blocks):
+            sl = jax.tree.map(lambda a: a[j], (blocks, caches))
+            x, c = block_fn(x, sl)
+            outs.append(c)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(block_fn, x, (blocks, caches))
+    return x, new_caches

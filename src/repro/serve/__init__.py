@@ -1,0 +1,7 @@
+from repro.serve.engine import (  # noqa: F401
+    ServeConfig,
+    ServerState,
+    init_server,
+    make_serve_step,
+    submit,
+)

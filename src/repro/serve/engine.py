@@ -1,0 +1,153 @@
+"""Serving engine: slot-based continuous batching over the decode step.
+
+A fixed pool of B slots each owns a stripe of the KV/SSM caches.  Requests
+occupy a free slot (prompt is prefill-by-decode: fed token-by-token through
+the same jitted step — simple, and exercises exactly the serve_step the
+dry-run lowers), generate until EOS/limit, then free the slot for the next
+request — slots at different sequence positions advance together in ONE
+batched decode step (continuous batching).
+
+All state transitions are pure (ServerState is a pytree); the host-side
+``submit`` queue is the only Python-land component.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+__all__ = ["ServeConfig", "ServerState", "init_server", "make_serve_step",
+           "submit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 8
+    max_seq: int = 256
+    temperature: float = 0.0        # 0 => greedy
+    eos_token: int = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServerState:
+    caches: dict
+    position: jnp.ndarray        # i32[B] next index to write
+    active: jnp.ndarray          # bool[B] slot generating
+    in_prompt: jnp.ndarray       # i32[B] remaining prompt tokens to consume
+    prompts: jnp.ndarray         # i32[B, Pmax(,CB)] queued prompt tokens
+    last_token: jnp.ndarray      # i32[B(,CB)] token to feed next
+    generated: jnp.ndarray       # i32[B, Gmax(,CB)] output buffer
+    n_generated: jnp.ndarray     # i32[B]
+    budget: jnp.ndarray          # i32[B] max new tokens per request
+
+
+def _tok_shape(cfg: ModelConfig, *lead):
+    return (*lead, cfg.num_codebooks) if cfg.num_codebooks else lead
+
+
+def init_server(cfg: ModelConfig, scfg: ServeConfig, *, prompt_max: int = 64,
+                gen_max: int = 64) -> ServerState:
+    b = scfg.slots
+    return ServerState(
+        caches=M.init_cache(cfg, b, scfg.max_seq),
+        position=jnp.zeros((b,), jnp.int32),
+        active=jnp.zeros((b,), bool),
+        in_prompt=jnp.zeros((b,), jnp.int32),
+        prompts=jnp.zeros(_tok_shape(cfg, b, prompt_max), jnp.int32),
+        last_token=jnp.zeros(_tok_shape(cfg, b), jnp.int32),
+        generated=jnp.zeros(_tok_shape(cfg, b, gen_max), jnp.int32),
+        n_generated=jnp.zeros((b,), jnp.int32),
+        budget=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def submit(state: ServerState, slot: int, prompt: np.ndarray,
+           max_new: int) -> ServerState:
+    """Host-side request admission into a free slot."""
+    assert not bool(state.active[slot]), f"slot {slot} busy"
+    p = len(prompt)
+    prompts = state.prompts.at[slot, :p].set(jnp.asarray(prompt, jnp.int32))
+    return dataclasses.replace(
+        state,
+        prompts=prompts,
+        position=state.position.at[slot].set(0),
+        in_prompt=state.in_prompt.at[slot].set(p),
+        active=state.active.at[slot].set(True),
+        last_token=state.last_token.at[slot].set(prompts[slot, 0]),
+        n_generated=state.n_generated.at[slot].set(0),
+        budget=state.budget.at[slot].set(max_new),
+    )
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig, params):
+    """One continuous-batching step over all slots (jitted)."""
+
+    def sample(logits, key):
+        if scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / scfg.temperature, axis=-1).astype(jnp.int32)
+
+    @jax.jit
+    def step(state: ServerState, key):
+        toks = state.last_token[:, None]           # [B,1(,CB)]
+        logits, caches = M.decode_step(params, cfg, toks, state.caches,
+                                       state.position)
+        next_tok = sample(logits[:, 0], key)       # [B(,CB)]
+
+        pos = state.position + 1
+        in_prompt = jnp.maximum(state.in_prompt - 1, 0)
+        still_prompt = in_prompt > 0
+        # while consuming the prompt, the next input is the next prompt
+        # token; afterwards it is the sampled one
+        gather_idx = jnp.minimum(pos, state.prompts.shape[1] - 1)
+        prompt_next = jnp.take_along_axis(
+            state.prompts, gather_idx[:, None, *([None] *
+                                                 (state.prompts.ndim - 2))],
+            axis=1)[:, 0]
+        feed = jnp.where(_bcast(still_prompt, prompt_next), prompt_next,
+                         next_tok)
+
+        emitting = state.active & ~still_prompt
+        gslot = jnp.minimum(state.n_generated,
+                            state.generated.shape[1] - 1)
+        gen = _scatter_tok(state.generated, gslot, next_tok, emitting)
+        n_gen = state.n_generated + emitting.astype(jnp.int32)
+
+        eos = next_tok == scfg.eos_token
+        if cfg.num_codebooks:
+            eos = eos.all(-1)
+        done = emitting & (eos | (n_gen >= state.budget)
+                           | (pos >= scfg.max_seq - 1))
+        active = state.active & ~done
+
+        new = dataclasses.replace(
+            state, caches=caches, position=pos, in_prompt=in_prompt,
+            last_token=jnp.where(_bcast(state.active, feed), feed,
+                                 state.last_token),
+            generated=gen, n_generated=n_gen, active=active)
+        return new, next_tok
+
+    return step
+
+
+def _bcast(mask, like):
+    return mask.reshape(mask.shape + (1,) * (like.ndim - mask.ndim))
+
+
+def _scatter_tok(buf, idx, tok, emitting):
+    # buf [B,G(,CB)], idx i32[B], tok [B(,CB)]
+    b = buf.shape[0]
+    upd = jnp.where(_bcast(emitting, tok), tok,
+                    jnp.take_along_axis(
+                        buf, idx[:, None, *([None] * (buf.ndim - 2))],
+                        axis=1)[:, 0])
+    return buf.at[jnp.arange(b), idx].set(upd)

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    batch_pspec,
+    cache_pspecs,
+    make_constrain,
+    param_pspecs,
+)

@@ -1,0 +1,274 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, divisibility-safe).
+
+Every parameter leaf is assigned *logical* axes by name (vocab / heads / kv
+/ ffn / expert / inner); logical axes map to mesh axes through the rule
+table; any assignment whose dimension is not divisible by the mesh axis
+size falls back to replication (GSPMD tolerates uneven sharding but pads —
+padding 56 heads onto 16 chips wastes 12.5% of attention FLOPs, so we
+prefer an explicit, analyzable fallback).
+
+Parallelism delivered through these rules:
+  DP  — batch over ("pod","data")
+  TP  — heads/ffn/vocab/inner over "model"
+  EP  — MoE expert dim over "model" (dispatch becomes an all-to-all)
+  SP  — optional sequence sharding of the residual stream over "model"
+  long-context decode — KV-cache sequence dim over ("data","model")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShardingRules", "param_pspecs", "batch_pspec", "cache_pspecs",
+           "make_constrain", "named_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: tuple[str, ...] = ("data",)       # ("pod","data") multi-pod
+    model: str = "model"
+    # FSDP/ZeRO-3: the non-TP dim of every 2-D weight shards over these
+    # axes (weights are all-gathered per layer at use time).  () disables.
+    fsdp: tuple[str, ...] = ("data",)
+    # FSDP on expert-stacked MoE weights: they are already sharded E-ways
+    # over "model"; gathering them back per layer costs a full all-gather
+    # of E/model_size experts.  Worth it at 235B (28 GB/dev otherwise),
+    # wasteful at 16-28B — hence a per-run knob (see EXPERIMENTS §Perf).
+    expert_fsdp: bool = True
+    # sequence-parallel residual stream (train/prefill activations)
+    sp: bool = False
+    # shard decode KV cache sequence dim over these axes (long-context)
+    kv_seq: tuple[str, ...] = ()
+
+    def axis_size(self, mesh: Mesh, name) -> int:
+        if isinstance(name, tuple):
+            out = 1
+            for n in name:
+                out *= mesh.shape[n]
+            return out
+        return mesh.shape[name]
+
+
+# logical axis name -> rule field providing the mesh axis
+_LOGICAL = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "expert": "model",
+    "inner": "model",
+    "fsdp": "fsdp",
+}
+
+# parameter leaf name -> logical axes per dim (trailing dims; leading
+# stacked-block dims are padded with None by the caller)
+# first listed logical axis wins when two map to the same mesh axis
+_PARAM_AXES = {
+    "embed": {2: ("vocab", "fsdp"), 3: (None, "vocab", "fsdp")},
+    "head": {2: ("fsdp", "vocab"), 3: (None, "fsdp", "vocab")},
+    "wq": {2: ("fsdp", "heads")},
+    "wk": {2: ("fsdp", "kv")},
+    "wv": {2: ("fsdp", "kv")},
+    "wo": {2: ("heads", "fsdp")},
+    "bq": {1: ("heads",)},
+    "bk": {1: ("kv",)},
+    "bv": {1: ("kv",)},
+    "router": {2: (None, "expert")},
+    # MoE expert-stacked weights: EP over the expert dim + FSDP inside
+    "gate": {3: ("expert", "fsdp", "ffn"), 2: ("fsdp", "ffn")},
+    "up": {3: ("expert", "fsdp", "ffn"), 2: ("fsdp", "ffn")},
+    "down": {3: ("expert", "ffn", "fsdp"), 2: ("ffn", "fsdp")},
+    # Mamba
+    "in_proj": {2: ("fsdp", "inner")},
+    "conv_w": {2: ("inner", None)},
+    "conv_b": {1: ("inner",)},
+    "x_proj": {2: ("inner", "fsdp")},
+    "dt_proj": {2: ("fsdp", "inner")},
+    "dt_bias": {1: ("inner",)},
+    "A_log": {2: ("inner", None)},
+    "D": {1: ("inner",)},
+    "out_proj": {2: ("inner", "fsdp")},
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _mesh_axis_for(rules: ShardingRules, logical: Optional[str]):
+    if logical is None:
+        return None
+    field = _LOGICAL[logical]
+    axis = getattr(rules, field)
+    if isinstance(axis, tuple):
+        return axis if axis else None
+    return axis
+
+
+def _spec_for_leaf(path, leaf, mesh: Mesh, rules: ShardingRules) -> P:
+    name = _leaf_name(path)
+    ndim = len(leaf.shape)
+    in_blocks = any(isinstance(e, jax.tree_util.DictKey)
+                    and str(e.key) == "blocks" for e in path)
+    lead = 1 if in_blocks else 0            # stacked num_blocks axis
+    table = _PARAM_AXES.get(name)
+    if table is None or (ndim - lead) not in table:
+        return P()
+    axes = table[ndim - lead]
+    if (not rules.expert_fsdp and ndim - lead == 3
+            and name in ("gate", "up", "down")):
+        axes = tuple(a if a != "fsdp" else None for a in axes)
+    spec = [None] * lead
+    used: set = set()                       # a mesh axis shards ONE dim;
+    for dim, logical in zip(leaf.shape[lead:], axes):   # first listed wins
+        mesh_axis = _mesh_axis_for(rules, logical)
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if (mesh_axis is not None and not (set(flat) & used)
+                and dim % rules.axis_size(mesh, mesh_axis) == 0):
+            spec.append(mesh_axis)
+            used.update(flat)
+        else:
+            spec.append(None)               # divisibility / conflict fallback
+    return P(*spec)
+
+
+def param_pspecs(params_shape, mesh: Mesh, rules: ShardingRules):
+    """Pytree of PartitionSpec matching a params (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_leaf(path, leaf, mesh, rules),
+        params_shape)
+
+
+def batch_pspec(mesh: Mesh, rules: ShardingRules, ndim: int,
+                batch_size: int) -> P:
+    """Input batch arrays [B, S, ...]: B over the batch axes (divisible
+    prefix of them), rest replicated."""
+    axes = []
+    for a in rules.batch:
+        size = mesh.shape[a]
+        if batch_size % size == 0 and size > 1:
+            axes.append(a)
+            batch_size //= size
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                 batch: int, cache_shapes) -> dict:
+    """Specs for decode caches (see transformer.init_block_caches layout).
+
+    Attention KV [nb, B, Smax, K, hd]: batch over rules.batch when it
+    divides, sequence over rules.kv_seq (long-context decode), kv heads
+    over model when divisible.  Mamba conv/h: batch + inner over model.
+    """
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        b_axes = [a for a in rules.batch
+                  if batch % mesh.shape[a] == 0 and mesh.shape[a] > 1]
+        b_spec = tuple(b_axes) if b_axes else None
+        if name in ("k", "v") and ndim == 5:
+            smax = leaf.shape[2]
+            seq_ok = rules.kv_seq and \
+                smax % rules.axis_size(mesh, tuple(rules.kv_seq)) == 0
+            seq_spec = tuple(rules.kv_seq) if seq_ok else None
+            kv = leaf.shape[3]
+            kv_spec = rules.model if (
+                kv % mesh.shape[rules.model] == 0
+                and rules.model not in (seq_spec or ())
+                and not seq_ok) else None
+            return P(None, b_spec, seq_spec, kv_spec, None)
+        if name == "conv" and ndim == 4:
+            di = leaf.shape[3]
+            m = rules.model if di % mesh.shape[rules.model] == 0 else None
+            return P(None, b_spec, None, m)
+        if name == "h" and ndim == 4:
+            di = leaf.shape[2]
+            m = rules.model if di % mesh.shape[rules.model] == 0 else None
+            return P(None, b_spec, m, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+class Constrainer:
+    """Activation sharding constraints.
+
+    Callable on the residual stream [B,S,D] (batch over DP axes, optional
+    sequence-parallel over the model axis); exposes ``moe_buf`` for the
+    [E, cap, ...] expert dispatch buffers (E over the model axis — keeps
+    GSPMD from replicating the dispatch path, which otherwise dominates
+    temp memory at MoE scale) and ``moe_tok`` for flat token-major tensors
+    [T(,D)] (T over the DP axes)."""
+
+    def __init__(self, mesh: Mesh, rules: ShardingRules, batch_size: int):
+        self._mesh = mesh
+        self._rules = rules
+        b = batch_pspec(mesh, rules, 3, batch_size)
+        self._lead = b[0]
+        self._seq = rules.model if rules.sp else None
+
+    def _put(self, x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self._mesh, spec))
+
+    def __call__(self, x):
+        if x.ndim != 3:
+            return x
+        seq = self._seq
+        if seq is not None and x.shape[1] % self._mesh.shape[seq] != 0:
+            seq = None
+        return self._put(x, P(self._lead, seq, None))
+
+    def moe_buf(self, x):
+        """[E, cap, D/F] — expert-major: E over the model axis."""
+        e = x.shape[0]
+        m = self._rules.model
+        if e % self._mesh.shape[m] != 0:
+            return x
+        return self._put(x, P(m, *([None] * (x.ndim - 1))))
+
+    def moe_tok(self, x):
+        """[T(, D)] token-major flats: T over the DP axes."""
+        if self._lead is None:
+            return x
+        size = self._rules.axis_size(self._mesh, tuple(self._rules.batch))
+        if x.shape[0] % size != 0:
+            return x
+        return self._put(x, P(self._lead, *([None] * (x.ndim - 1))))
+
+    def logits(self, x):
+        """[B,S,V] or [B,S,CB,V]: vocab over the model axis (the f32 xent
+        intermediates at 152k vocab dominate temp memory if replicated)."""
+        m = self._rules.model
+        if x.shape[-1] % self._mesh.shape[m] != 0:
+            return x
+        mid = [None] * (x.ndim - 2)
+        return self._put(x, P(self._lead, *mid, m))
+
+    def ep_context(self):
+        """(mesh, batch_axes, model_axis_size) when explicit shard_map EP
+        applies (model axis > 1); None on trivial meshes."""
+        m = self._mesh.shape[self._rules.model]
+        if m <= 1:
+            return None
+        return self._mesh, self._rules.batch, m
+
+
+def make_constrain(mesh: Mesh, rules: ShardingRules, batch_size: int):
+    """Activation constraints for the residual stream + MoE internals."""
+    return Constrainer(mesh, rules, batch_size)
+
+
+def named_shardings(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

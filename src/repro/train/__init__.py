@@ -1,0 +1,13 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    warmup_cosine,
+)
+from repro.train.step import (  # noqa: F401
+    TrainConfig,
+    TrainState,
+    init_train_state,
+    make_train_step,
+)

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device;
+only launch/dryrun.py fakes 512 devices (and only in its own process)."""
+import os
+
+import numpy as np
+import pytest
+
+# Keep CPU tests deterministic and fast.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,78 @@
+"""Broker/CIS communication flow (§4.2, Figure 5): register -> query ->
+match -> deploy -> collect, plus VM destruction returning resources."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import cis
+from repro.core import state as S
+from repro.core.engine import run
+from repro.core.provisioning import provision_pending
+
+
+def _small_dc(cpu_rate=0.01, n_hosts=4):
+    hosts = S.make_uniform_hosts(n_hosts, pes=2, mips=1000.0)
+    vms = B.build_fleet([B.VmSpec(count=2, pes=1)])
+    cl = B.build_waves(2, B.WaveSpec(waves=2, length_mi=30_000.0,
+                                     period=10.0))
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=True,
+                             rates=S.make_market(cpu_rate, 0.0, 0.0, 0.0))
+
+
+def test_register_reports_capacity():
+    dc = _small_dc()
+    entry = cis.register(dc)
+    assert float(entry.total_pes) == 8.0
+    assert float(entry.max_mips_pe) == 1000.0
+    assert float(entry.free_ram) == 4 * 1024.0
+
+
+def test_match_and_rank():
+    rows = [cis.register(_small_dc(cpu_rate=c, n_hosts=n))
+            for c, n in [(0.05, 4), (0.01, 4), (0.02, 1)]]
+    table = jax.tree.map(lambda *x: jnp.stack(x), *rows)
+    feas = cis.match(table, need_pes=4, need_mips=1000.0, need_ram=2048.0,
+                     need_storage=1000.0)
+    np.testing.assert_array_equal(np.asarray(feas), [True, True, False])
+    order = np.asarray(cis.rank_by_cost(table, feas))
+    assert order[0] == 1 and order[1] == 0     # cheapest feasible first
+
+
+def test_broker_end_to_end_report():
+    out = run(_small_dc(), max_steps=256)
+    rep = B.collect(out)
+    assert int(rep.n_submitted) == 4
+    assert int(rep.n_completed) == 4
+    assert int(rep.n_failed) == 0
+    # 30000 MI @1000 MIPS = 30s each, dedicated PE per VM; wave 2 (t=10s)
+    # queues behind wave 1 -> runs [30, 60]
+    np.testing.assert_allclose(float(rep.mean_exec), 30.0, rtol=1e-5)
+    np.testing.assert_allclose(float(rep.makespan), 60.0, rtol=1e-5)
+    np.testing.assert_allclose(float(rep.cpu_cost), 4 * 30 * 0.01, rtol=1e-5)
+
+
+def test_destroy_returns_resources():
+    dc = _small_dc()
+    out = run(dc, max_steps=256)
+    before = float(np.asarray(out.hosts.free_pes).sum())
+    out2 = B.destroy_idle_vms(out)
+    after = float(np.asarray(out2.hosts.free_pes).sum())
+    assert after == before + 2                 # both 1-PE VMs released
+    assert np.all(np.asarray(out2.vms.state) == S.VM_DESTROYED)
+    # freed capacity admits a new fleet
+    vms2 = B.build_fleet([B.VmSpec(count=2, pes=1, submit_time=100.0)])
+    cl2 = S.make_cloudlets([0, 1], 1000.0, submit_time=100.0)
+    dc3 = dataclasses.replace(out2, vms=vms2, cloudlets=cl2,
+                              time=jnp.float32(100.0))
+    out3 = provision_pending(dc3)
+    assert np.all(np.asarray(out3.vms.state) == S.VM_ACTIVE)
+
+
+def test_wave_builder_grouped_invariant():
+    cl = B.build_waves(3, B.WaveSpec(waves=4, length_mi=10.0, period=5.0))
+    from repro.core.state import validate_cloudlet_order
+    assert validate_cloudlet_order(cl.vm)
+    np.testing.assert_array_equal(np.asarray(cl.rank_in_vm)[:4], [0, 1, 2, 3])

@@ -1,0 +1,69 @@
+"""Federated multi-datacenter simulation: shard_map path == vmap reference,
+and the CIS-driven user assignment respects feasibility + cost order."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import federation as F
+from repro.core import state as S
+
+
+def _dc(cpu_rate, n_hosts=6):
+    hosts = S.make_uniform_hosts(n_hosts, pes=2, mips=1000.0)
+    vms = B.build_fleet([B.VmSpec(count=3, pes=1)])
+    cl = B.build_waves(3, B.WaveSpec(waves=2, length_mi=20_000.0,
+                                     period=15.0))
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=True,
+                             rates=S.make_market(cpu_rate, 0.0, 0.0, 0.0))
+
+
+def _stack(*dcs):
+    return jax.tree.map(lambda *x: jnp.stack(x), *dcs)
+
+
+def test_shard_map_matches_vmap_reference():
+    stack = _stack(_dc(0.01), _dc(0.02))
+    ov, rv, tv = F.vmap_federation(stack, max_steps=256)
+
+    mesh = jax.make_mesh((1,), ("dc",))   # 1 CPU device: 2 DCs on one shard?
+    # one-device mesh can only hold a stack of size 1 per shard — run each
+    # datacenter through the sharded path separately and compare.
+    for i in range(2):
+        one = jax.tree.map(lambda x: x[i:i + 1], stack)
+        os_, rs, ts = F.federated_run(mesh, one, max_steps=256)
+        np.testing.assert_allclose(
+            np.asarray(rs.makespan)[0], np.asarray(rv.makespan)[i],
+            rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(ts.free_pes)[0], np.asarray(tv.free_pes)[i],
+            rtol=1e-6)
+
+
+def test_assignment_prefers_cheapest_feasible():
+    import repro.core.cis as cis
+    rows = [cis.register(_dc(0.05)), cis.register(_dc(0.01)),
+            cis.register(_dc(0.03, n_hosts=1))]
+    table = jax.tree.map(lambda *x: jnp.stack(x), *rows)
+    demand = F.UserDemand(
+        pes=jnp.array([8.0, 8.0, 8.0]),
+        mips=jnp.array([1000.0] * 3),
+        ram=jnp.array([1024.0] * 3),
+        storage=jnp.array([1000.0] * 3))
+    got = np.asarray(F.assign_users(table, demand))
+    # DC1 is cheapest (12 PEs): takes user0; remaining 4 PEs can't host
+    # user1 -> DC0; user2 -> nothing left with 8 free PEs except DC0 (4
+    # left? no: DC0 had 12, minus 8 = 4) -> infeasible everywhere = -1
+    np.testing.assert_array_equal(got, [1, 0, -1])
+
+
+def test_assignment_capacity_is_sequential():
+    import repro.core.cis as cis
+    table = jax.tree.map(lambda *x: jnp.stack(x),
+                         cis.register(_dc(0.01)), cis.register(_dc(0.01)))
+    demand = F.UserDemand(
+        pes=jnp.array([12.0, 12.0]), mips=jnp.array([1000.0] * 2),
+        ram=jnp.array([512.0] * 2), storage=jnp.array([100.0] * 2))
+    got = np.asarray(F.assign_users(table, demand))
+    assert got[0] != got[1]            # second user pushed to the other DC
+    assert set(got.tolist()) == {0, 1}

@@ -1,0 +1,136 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp
+oracles, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.selective_scan import (
+    selective_scan_pallas,
+    selective_scan_ref,
+)
+from repro.kernels.simstep import simstep_pallas, simstep_ref
+
+
+# ---------------------------------------------------------------------------
+# simstep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("v,k", [(4, 8), (16, 32), (33, 16), (8, 128)])
+@pytest.mark.parametrize("policy", [0, 1])
+def test_simstep_matches_ref(v, k, policy):
+    rng = np.random.default_rng(v * 100 + k + policy)
+    remaining = jnp.asarray(
+        rng.uniform(0, 1e5, (v, k)).astype(np.float32))
+    runnable = jnp.asarray(rng.random((v, k)) < 0.6)
+    cap = jnp.asarray(rng.uniform(100, 4000, v).astype(np.float32))
+    pes = jnp.asarray(rng.integers(1, 4, v).astype(np.float32))
+    r1, d1 = simstep_ref(remaining, runnable, cap, pes, policy)
+    r2, d2 = simstep_pallas(remaining, runnable, cap, pes, policy,
+                            interpret=True)
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+    np.testing.assert_allclose(d1, d2, rtol=1e-6)
+
+
+def test_simstep_all_idle():
+    v, k = 8, 16
+    remaining = jnp.zeros((v, k), jnp.float32)
+    runnable = jnp.zeros((v, k), bool)
+    cap = jnp.ones((v,), jnp.float32) * 1000
+    pes = jnp.ones((v,), jnp.float32)
+    r, d = simstep_pallas(remaining, runnable, cap, pes, 0, interpret=True)
+    assert np.all(np.asarray(r) == 0.0)
+    assert np.all(np.asarray(d) >= 1e29)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sq,skv,h,kh,hd,window", [
+    (128, 128, 4, 4, 64, None),
+    (256, 256, 8, 2, 64, None),        # GQA 4:1
+    (128, 128, 4, 2, 128, 48),         # SWA
+    (96, 96, 2, 2, 64, None),          # ragged vs 128 tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(sq, skv, h, kh, hd, window, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (2, sq, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(keys[1], (2, skv, kh, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(keys[2], (2, skv, kh, hd),
+                          jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_block_shape_invariance():
+    """Different VMEM tilings must agree bit-for-bit-ish."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, 256, 4, 64))
+    k = jax.random.normal(keys[1], (1, 256, 4, 64))
+    v = jax.random.normal(keys[2], (1, 256, 4, 64))
+    a = flash_attention(q, k, v, bq=128, bk=128, interpret=True)
+    b = flash_attention(q, k, v, bq=64, bk=32, interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,di,n,dtile,schunk", [
+    (64, 32, 8, 32, 32),
+    (128, 64, 16, 32, 64),
+    (256, 128, 16, 128, 128),
+])
+def test_selective_scan_matches_ref(s, di, n, dtile, schunk):
+    keys = jax.random.split(jax.random.PRNGKey(2), 5)
+    b = 2
+    dt = jax.nn.softplus(jax.random.normal(keys[0], (b, s, di)))
+    x = jax.random.normal(keys[1], (b, s, di))
+    bs = jax.random.normal(keys[2], (b, s, n))
+    cs = jax.random.normal(keys[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(keys[4], (di, n)))
+    d = jnp.ones((di,))
+    got = selective_scan_pallas(dt, x, bs, cs, a, d, dtile=dtile,
+                                schunk=schunk, interpret=True)
+    want = selective_scan_ref(dt, x, bs, cs, a, d)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_selective_scan_state_carries_across_chunks():
+    """schunk < S: the VMEM scratch must carry h between grid steps."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, s, di, n = 1, 64, 16, 4
+    dt = jax.nn.softplus(jax.random.normal(keys[0], (b, s, di)))
+    x = jax.random.normal(keys[1], (b, s, di))
+    bs = jax.random.normal(keys[2], (b, s, n))
+    cs = jax.random.normal(keys[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(keys[4], (di, n)))
+    d = jnp.zeros((di,))
+    whole = selective_scan_pallas(dt, x, bs, cs, a, d, dtile=16,
+                                  schunk=64, interpret=True)
+    chunked = selective_scan_pallas(dt, x, bs, cs, a, d, dtile=16,
+                                    schunk=16, interpret=True)
+    np.testing.assert_allclose(whole, chunked, atol=1e-5, rtol=1e-5)
+
+
+def test_models_ssm_matches_kernel_oracle():
+    """models.ssm chunked associative scan == kernel oracle semantics."""
+    from repro.models.ssm import selective_scan as assoc_scan
+    keys = jax.random.split(jax.random.PRNGKey(4), 5)
+    b, s, di, n = 2, 64, 16, 4
+    dt = jax.nn.softplus(jax.random.normal(keys[0], (b, s, di)))
+    x = jax.random.normal(keys[1], (b, s, di))
+    bs = jax.random.normal(keys[2], (b, s, n))
+    cs = jax.random.normal(keys[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(keys[4], (di, n)))
+    d = jnp.ones((di,))
+    got = assoc_scan(dt, bs, cs, x, a, d, chunk=16)
+    want = selective_scan_ref(dt, x, bs, cs, a, d)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,87 @@
+"""§3.3 market model: creation-time memory/storage costs, CPU per use,
+bandwidth per transfer — 'if VMs were created but no task units were
+executed on them, only the costs of memory and storage will incur.'"""
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import market as M
+from repro.core import state as S
+from repro.core.engine import run
+from repro.core.provisioning import provision_pending
+
+RATES = S.make_market(cost_per_cpu_sec=0.01, cost_per_mem=0.001,
+                      cost_per_storage=0.0001, cost_per_bw=0.002)
+
+
+def _dc(task_policy=S.SPACE_SHARED, with_work=True):
+    hosts = S.make_uniform_hosts(4, pes=1, mips=1000.0)
+    vms = B.build_fleet([B.VmSpec(count=2, ram=512.0, size=1000.0)])
+    if with_work:
+        cl = S.make_cloudlets([0, 1], 60_000.0, file_size=5.0,
+                              output_size=3.0)
+    else:
+        cl = S.make_cloudlets([0, 1], 1.0)
+        import dataclasses
+        import jax.numpy as jnp
+        cl = dataclasses.replace(
+            cl, state=jnp.full((2,), S.CL_EMPTY, jnp.int32))
+    return S.make_datacenter(hosts, vms, cl, task_policy=task_policy,
+                             reserve_pes=True, rates=RATES)
+
+
+def test_creation_costs_only_without_work():
+    out = run(_dc(with_work=False), max_steps=16)
+    acct = out.acct
+    np.testing.assert_allclose(float(acct.mem_cost), 2 * 512.0 * 0.001,
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(acct.storage_cost), 2 * 1000.0 * 1e-4,
+                               rtol=1e-6)
+    assert float(acct.cpu_cost) == 0.0
+    assert float(acct.bw_cost) == 0.0
+
+
+def test_cpu_cost_per_pe_second():
+    out = run(_dc(), max_steps=64)
+    # 2 cloudlets x 60000 MI @1000 MIPS = 60s each -> 120 PE-s x $0.01
+    np.testing.assert_allclose(float(out.acct.cpu_cost), 1.2, rtol=1e-5)
+
+
+def test_bw_cost_on_completion():
+    out = run(_dc(), max_steps=64)
+    np.testing.assert_allclose(float(out.acct.bw_cost),
+                               2 * (5.0 + 3.0) * 0.002, rtol=1e-6)
+
+
+def test_cpu_cost_policy_invariant():
+    """Fluid sharing stretches wall-clock, not PE-seconds: equal CPU bill."""
+    a = run(_dc(S.SPACE_SHARED), max_steps=64)
+    b = run(_dc(S.TIME_SHARED), max_steps=64)
+    np.testing.assert_allclose(float(a.acct.cpu_cost),
+                               float(b.acct.cpu_cost), rtol=1e-5)
+
+
+def test_quotes_match_realized_costs():
+    dc = _dc()
+    vm_quote = M.quote_vm(RATES, ram=512.0, size=1000.0)
+    cl_quote = M.quote_cloudlet(RATES, length_mi=60_000.0,
+                                host_mips_pe=1000.0, file_size=5.0,
+                                output_size=3.0)
+    out = run(dc, max_steps=64)
+    expect = 2 * float(vm_quote) + 2 * float(cl_quote)
+    np.testing.assert_allclose(float(out.acct.total), expect, rtol=1e-5)
+
+
+def test_bill_by_vm_partitions_total():
+    out = run(_dc(), max_steps=64)
+    bills = np.asarray(M.bill_by_vm(out))
+    np.testing.assert_allclose(bills.sum(), float(out.acct.total), rtol=1e-5)
+    np.testing.assert_allclose(bills[0], bills[1], rtol=1e-6)
+
+
+def test_surge_pricing():
+    pol = M.PricingPolicy(base=RATES, surge_threshold=np.float32(0.8),
+                          surge_factor=np.float32(3.0))
+    hot = M.tiered_cpu_rates(pol, np.float32(0.9))
+    cold = M.tiered_cpu_rates(pol, np.float32(0.2))
+    np.testing.assert_allclose(float(hot.cost_per_cpu_sec), 0.03, rtol=1e-6)
+    np.testing.assert_allclose(float(cold.cost_per_cpu_sec), 0.01, rtol=1e-6)

@@ -1,0 +1,281 @@
+"""Model-zoo correctness: decode==forward consistency per family, flash
+attention vs naive oracle, chunked selective scan vs sequential oracle,
+sort-based MoE vs per-expert loop oracle, gradient health."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import config as C
+from repro.models import model as M
+from repro.models.attention import decode_attention, flash_attention_ref
+from repro.models.moe import init_moe, moe_block
+from repro.models.ssm import selective_scan
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+def naive_attention(q, k, v, *, causal=True, window=None):
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qf,
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((sq, skv), bool)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd)
+
+
+def sequential_scan(dt, b_ssm, c_ssm, xc, a, d_skip):
+    bsz, s, di = xc.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        dtt, xt, bt, ct = inp
+        h = jnp.exp(dtt[..., None] * a) * h \
+            + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (swap(dt), swap(xc), swap(b_ssm),
+                                    swap(c_ssm)))
+    return swap(ys) + xc * d_skip
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sq,skv,h,kh,window,chunk", [
+    (16, 16, 4, 4, None, 8),
+    (16, 16, 8, 2, None, 16),      # GQA
+    (32, 32, 4, 2, 7, 8),          # SWA
+    (1, 24, 4, 2, None, 8),        # decode-shaped query
+])
+def test_flash_matches_naive(sq, skv, h, kh, window, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (2, sq, h, 16), jnp.float32)
+    k = jax.random.normal(keys[1], (2, skv, kh, 16), jnp.float32)
+    v = jax.random.normal(keys[2], (2, skv, kh, 16), jnp.float32)
+    causal = sq == skv
+    got = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              kv_chunk=chunk)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_flash_ragged_chunk():
+    """Skv not divisible by the chunk size (padding path)."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, 10, 4, 8))
+    k = jax.random.normal(keys[1], (1, 10, 4, 8))
+    v = jax.random.normal(keys[2], (1, 10, 4, 8))
+    got = flash_attention_ref(q, k, v, causal=True, kv_chunk=4)
+    want = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_last_row():
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    skv = 20
+    q = jax.random.normal(keys[0], (2, 1, 4, 16))
+    k = jax.random.normal(keys[1], (2, skv, 2, 16))
+    v = jax.random.normal(keys[2], (2, skv, 2, 16))
+    got = decode_attention(q, k, v, jnp.full((2,), skv, jnp.int32))
+    # naive full attention where q sits at the final position
+    qfull = jnp.concatenate([jnp.zeros((2, skv - 1, 4, 16)), q], axis=1)
+    want = naive_attention(qfull, k, v, causal=True)[:, -1:]
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,chunk", [(32, 8), (32, 32), (64, 16)])
+def test_chunked_scan_matches_sequential(s, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, di, n = 2, 8, 4
+    dt = jax.nn.softplus(jax.random.normal(keys[0], (b, s, di)))
+    bs = jax.random.normal(keys[1], (b, s, n))
+    cs = jax.random.normal(keys[2], (b, s, n))
+    xc = jax.random.normal(keys[3], (b, s, di))
+    a = -jnp.exp(jax.random.normal(keys[4], (di, n)))
+    d = jnp.ones((di,))
+    got = selective_scan(dt, bs, cs, xc, a, d, chunk=chunk)
+    want = sequential_scan(dt, bs, cs, xc, a, d)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_oracle(params, cfg, x):
+    """Loop-over-experts reference with unlimited capacity."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    w = w / w.sum(-1, keepdims=True)
+    y = jnp.zeros_like(xf)
+    for e in range(cfg.num_experts):
+        g = xf @ params["gate"][e]
+        u = xf @ params["up"][e]
+        o = (jax.nn.silu(g) * u) @ params["down"][e]
+        we = jnp.where(idx == e, w, 0.0).sum(-1)
+        y = y + o * we[:, None]
+    return y.reshape(b, s, d)
+
+
+def test_moe_matches_oracle_no_drop():
+    cfg = C.ModelConfig(name="m", num_layers=1, d_model=32, num_heads=2,
+                        num_kv_heads=2, head_dim=16, d_ff=48, vocab_size=11,
+                        pattern=C.uniform_pattern(moe=True), num_experts=8,
+                        num_experts_per_tok=2, capacity_factor=64.0,
+                        dtype="float32")
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    got, aux = moe_block(params, cfg, x)
+    want = moe_oracle(params, cfg, x)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = C.ModelConfig(name="m", num_layers=1, d_model=32, num_heads=2,
+                        num_kv_heads=2, head_dim=16, d_ff=48, vocab_size=11,
+                        pattern=C.uniform_pattern(moe=True), num_experts=4,
+                        num_experts_per_tok=2, capacity_factor=0.25,
+                        dtype="float32")
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    _, aux = moe_block(params, cfg, x)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert float(aux["load_balance_loss"]) >= 1.0 - 1e-3  # >= 1 at optimum
+
+
+# ---------------------------------------------------------------------------
+# whole-model decode == forward (per family)
+# ---------------------------------------------------------------------------
+def _roundtrip(cfg, toks):
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    hidden, _, _ = M.forward(params, cfg, toks, remat="none")
+    logits_full = M.compute_logits(params, cfg, hidden)
+    b, s = toks.shape[:2]
+    cache = M.init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = M.decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                  jnp.full((b,), t, jnp.int32))
+        outs.append(lg)
+    return logits_full, jnp.concatenate(outs, axis=1)
+
+
+FAMILIES = {
+    "dense+bias+qknorm": C.ModelConfig(
+        name="d", num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=97, qkv_bias=True, qk_norm=True,
+        dtype="float32"),
+    "swa": C.ModelConfig(
+        name="s", num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=97, sliding_window=5,
+        dtype="float32"),
+    "mamba": C.ModelConfig(
+        name="mm", num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+        head_dim=0, d_ff=0, vocab_size=97, pattern=C.mamba_pattern(),
+        ssm_state=8, dtype="float32"),
+    "hybrid-moe": C.ModelConfig(
+        name="h", num_layers=8, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=97, pattern=C.jamba_pattern(),
+        num_experts=4, num_experts_per_tok=2, ssm_state=8,
+        capacity_factor=16.0, dtype="float32"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_decode_matches_forward(family):
+    cfg = FAMILIES[family]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    full, dec = _roundtrip(cfg, toks)
+    np.testing.assert_allclose(full, dec, atol=5e-4, rtol=1e-3)
+
+
+def test_musicgen_decode_matches_forward():
+    cfg = C.ModelConfig(name="mg", num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, head_dim=16, d_ff=128,
+                        vocab_size=33, num_codebooks=4, dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10, 4), 0, 33)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    hidden, _, _ = M.forward(params, cfg, toks, remat="none")
+    full = M.compute_logits(params, cfg, hidden)
+    cache = M.init_cache(cfg, 2, 10)
+    outs = []
+    for t in range(10):
+        lg, cache = M.decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                  jnp.full((2,), t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    assert full.shape == (2, 10, 4, 33)
+    np.testing.assert_allclose(full, dec, atol=5e-4, rtol=1e-3)
+
+
+def test_vlm_stub_prepends_vision():
+    cfg = C.ModelConfig(name="v", num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=2, head_dim=16, d_ff=128,
+                        vocab_size=97, vision_tokens=6, dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 97)
+    vis = jax.random.normal(jax.random.PRNGKey(2), (2, 6, 64))
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1),
+             "vision_embeds": vis}
+    loss, _ = M.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    hidden, _, _ = M.forward(params, cfg, toks, vision_embeds=vis,
+                             remat="none")
+    assert hidden.shape == (2, 16, 64)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_grads_finite_and_nonzero(family):
+    cfg = FAMILIES[family]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in flat)
+    assert total > 0.0
+
+
+def test_remat_matches_no_remat():
+    cfg = FAMILIES["dense+bias+qknorm"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 97)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    l1, _ = M.loss_fn(params, cfg, batch, remat="none")
+    l2, _ = M.loss_fn(params, cfg, batch, remat="nothing")
+    l3, _ = M.loss_fn(params, cfg, batch, remat="dots")
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(float(l1), float(l3), rtol=1e-6)
+
+
+def test_param_count_matches_actual():
+    for name in ("dense+bias+qknorm", "mamba", "hybrid-moe"):
+        cfg = FAMILIES[name]
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        assert abs(actual - cfg.param_count()) / actual < 0.02, name

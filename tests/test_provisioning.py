@@ -1,0 +1,114 @@
+"""VMProvisioner tests (§4): FCFS first-fit default + policy variants and
+the BW/Memory/storage admission chain."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as S
+from repro.core.provisioning import (
+    BEST_FIT,
+    FIRST_FIT,
+    ROUND_ROBIN,
+    WORST_FIT,
+    provision_pending,
+)
+
+
+def _dc(hosts, vms, *, reserve=True, n_cl=None):
+    n = int(np.asarray(vms.req_pes).shape[0]) if n_cl is None else n_cl
+    cl = S.make_cloudlets(np.arange(n, dtype=np.int32), 100.0)
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=reserve)
+
+
+def test_first_fit_sequential_order():
+    """Paper: 'Hosts are considered for mapping in a sequential order.'"""
+    hosts = S.make_uniform_hosts(4, pes=2)
+    vms = S.make_vms([1, 1, 1], 1000.0, 128.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), FIRST_FIT)
+    # host0 has 2 PEs -> takes VM0 and VM1; VM2 spills to host1
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [0, 0, 1])
+    assert np.all(np.asarray(out.vms.state) == S.VM_ACTIVE)
+
+
+def test_memory_admission_rejects():
+    """MemoryProvisioner: deployment only if free memory suffices."""
+    hosts = S.make_hosts([1, 1], [1000.0, 1000.0], [256.0, 2048.0],
+                         1000.0, 1e6)
+    vms = S.make_vms([1], 1000.0, 512.0, 1.0, 10.0)   # needs 512MB
+    out = provision_pending(_dc(hosts, vms), FIRST_FIT)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [1])
+
+
+def test_failed_vm_fails_cloudlets():
+    hosts = S.make_hosts([1], [1000.0], [256.0], 1000.0, 1e6)
+    vms = S.make_vms([1], 1000.0, 512.0, 1.0, 10.0)   # can't fit anywhere
+    out = provision_pending(_dc(hosts, vms), FIRST_FIT)
+    assert np.asarray(out.vms.state)[0] == S.VM_FAILED
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_FAILED)
+
+
+def test_pe_reservation_capacity():
+    """reserve_pes: a 1-core host holds exactly one 1-core VM (§5 setup)."""
+    hosts = S.make_uniform_hosts(2, pes=1)
+    vms = S.make_vms([1, 1, 1], 1000.0, 128.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), FIRST_FIT)
+    host = np.asarray(out.vms.host)
+    state = np.asarray(out.vms.state)
+    assert sorted(host[:2].tolist()) == [0, 1]
+    assert state[2] == S.VM_FAILED            # no third host
+    np.testing.assert_allclose(np.asarray(out.hosts.free_pes), [0.0, 0.0])
+
+
+def test_best_fit_packs_tightest():
+    hosts = S.make_hosts([1, 1, 1], [1000.0] * 3, [4096.0, 600.0, 2048.0],
+                         1000.0, 1e6)
+    vms = S.make_vms([1], 1000.0, 512.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), BEST_FIT)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [1])
+
+
+def test_worst_fit_spreads():
+    hosts = S.make_hosts([1, 1, 1], [1000.0] * 3, [4096.0, 600.0, 2048.0],
+                         1000.0, 1e6)
+    vms = S.make_vms([1], 1000.0, 512.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), WORST_FIT)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [0])
+
+
+def test_round_robin_rotates():
+    hosts = S.make_uniform_hosts(3, pes=4)
+    vms = S.make_vms([1, 1, 1], 1000.0, 128.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), ROUND_ROBIN)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [0, 1, 2])
+
+
+def test_mips_floor_respected():
+    hosts = S.make_hosts([1, 1], [500.0, 2000.0], 4096.0, 1000.0, 1e6)
+    vms = S.make_vms([1], 1000.0, 128.0, 1.0, 10.0)   # needs >=1000 MIPS
+    out = provision_pending(_dc(hosts, vms), FIRST_FIT)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [1])
+
+
+def test_submit_time_gates_placement():
+    hosts = S.make_uniform_hosts(2, pes=1)
+    vms = S.make_vms([1, 1], 1000.0, 128.0, 1.0, 10.0,
+                     submit_time=np.array([0.0, 50.0]))
+    dc = _dc(hosts, vms)
+    out = provision_pending(dc, FIRST_FIT)
+    state = np.asarray(out.vms.state)
+    assert state[0] == S.VM_ACTIVE and state[1] == S.VM_PENDING
+    later = dataclasses.replace(out, time=jnp.float32(50.0))
+    out2 = provision_pending(later, FIRST_FIT)
+    assert np.asarray(out2.vms.state)[1] == S.VM_ACTIVE
+
+
+def test_fcfs_by_submit_time_not_slot_order():
+    """A VM submitted earlier wins the last host even from a later slot."""
+    hosts = S.make_uniform_hosts(1, pes=1)
+    vms = S.make_vms([1, 1], 1000.0, 128.0, 1.0, 10.0,
+                     submit_time=np.array([10.0, 0.0]))
+    dc = dataclasses.replace(_dc(hosts, vms), time=jnp.float32(10.0))
+    out = provision_pending(dc, FIRST_FIT)
+    state = np.asarray(out.vms.state)
+    assert state[1] == S.VM_ACTIVE and state[0] == S.VM_FAILED

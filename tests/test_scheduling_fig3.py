@@ -1,0 +1,145 @@
+"""Exact Gantt assertions for the paper's Figure 3 (a)-(d).
+
+Scenario (from the paper): one host with 2 CPU cores receives two VMs, each
+requiring 2 cores and running 4 task units (t1..t4 in VM1, t5..t8 in VM2).
+With per-core rate r and task length L (u = L/r = 1s here), the four policy
+combinations must produce the figure's exact start/finish times.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import state as S
+from repro.core.engine import run
+from repro.core.scheduling import cloudlet_rates
+
+U = 1.0  # dedicated execution time of one task unit
+
+
+def _fig3(vm_policy, task_policy):
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=vm_policy,
+                           task_policy=task_policy, reserve_pes=False)
+    out = run(dc, max_steps=64)
+    return (np.asarray(out.cloudlets.start_time),
+            np.asarray(out.cloudlets.finish_time),
+            out)
+
+
+def test_fig3a_space_space():
+    st, ft, out = _fig3(S.SPACE_SHARED, S.SPACE_SHARED)
+    # VM1 monopolizes both cores; inside it tasks run 2-at-a-time FCFS.
+    np.testing.assert_allclose(ft, [1, 1, 2, 2, 3, 3, 4, 4], rtol=1e-6)
+    np.testing.assert_allclose(st, [0, 0, 1, 1, 2, 2, 3, 3], atol=1e-6)
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+
+
+def test_fig3b_space_time():
+    st, ft, _ = _fig3(S.SPACE_SHARED, S.TIME_SHARED)
+    # tasks context-switch inside each VM: all four stretch across the
+    # VM's whole window ("significantly affecting completion time of task
+    # units that head the queue").
+    np.testing.assert_allclose(ft, [2, 2, 2, 2, 4, 4, 4, 4], rtol=1e-6)
+    np.testing.assert_allclose(st, [0, 0, 0, 0, 2, 2, 2, 2], atol=1e-6)
+
+
+def test_fig3c_time_space():
+    st, ft, _ = _fig3(S.TIME_SHARED, S.SPACE_SHARED)
+    # VMs share cores (half rate each); tasks are space-shared inside.
+    np.testing.assert_allclose(ft, [2, 2, 4, 4, 2, 2, 4, 4], rtol=1e-6)
+    np.testing.assert_allclose(st, [0, 0, 2, 2, 0, 0, 2, 2], atol=1e-6)
+
+
+def test_fig3d_time_time():
+    st, ft, _ = _fig3(S.TIME_SHARED, S.TIME_SHARED)
+    # "no queues either for virtual machines or for task units"
+    np.testing.assert_allclose(ft, [4] * 8, rtol=1e-6)
+    np.testing.assert_allclose(st, [0] * 8, atol=1e-6)
+
+
+def test_policy_codes_are_traced_scalars():
+    """Policy sweep via vmap over the 2x2 grid in one compiled call."""
+    import jax
+
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False)
+
+    def finish(vm_p, task_p):
+        import dataclasses
+        d = dataclasses.replace(dc, vm_policy=vm_p, task_policy=task_p)
+        return run(d, max_steps=64).cloudlets.finish_time
+
+    vm_p = jnp.array([0, 0, 1, 1], jnp.int32)
+    task_p = jnp.array([0, 1, 0, 1], jnp.int32)
+    fts = jax.vmap(finish)(vm_p, task_p)
+    np.testing.assert_allclose(np.asarray(fts[0]), [1, 1, 2, 2, 3, 3, 4, 4],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fts[3]), [4] * 8, rtol=1e-6)
+
+
+def test_time_shared_host_caps_at_demand():
+    """An undersubscribed time-shared host must not overdrive a VM."""
+    hosts = S.make_hosts([4], [100.0], 1024.0, 1000.0, 1e6)  # 4 cores
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0)       # wants 1 core
+    cl = S.make_cloudlets([0], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.TIME_SHARED,
+                           task_policy=S.TIME_SHARED, reserve_pes=False)
+    out = run(dc, max_steps=16)
+    # full single-core rate, not 4x
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), [1.0],
+                               rtol=1e-6)
+
+
+def test_space_shared_fcfs_head_of_line():
+    """Strict FCFS core queue: a waiting 2-PE VM blocks even though one PE
+    is idle (no backfilling), until the head VM drains."""
+    hosts = S.make_hosts([3], [100.0], 1024.0, 1000.0, 1e6)  # 3 cores
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 1], [200.0, 100.0])  # VM0: 2s, VM1: 1s
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED, reserve_pes=False)
+    out = run(dc, max_steps=32)
+    ft = np.asarray(out.cloudlets.finish_time)
+    # VM1's task waits for VM0 despite a free third core: [2, 2+1]
+    np.testing.assert_allclose(ft, [2.0, 3.0], rtol=1e-6)
+
+
+def test_infeasible_vm_fails_at_provisioning():
+    """A VM larger than any host is rejected up-front (CloudSim allocation
+    failure) and its cloudlets are failed, not stranded."""
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([3, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 1], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED, reserve_pes=False)
+    out = run(dc, max_steps=16)
+    state = np.asarray(out.cloudlets.state)
+    assert state[0] == S.CL_FAILED          # VM0 could not be provisioned
+    assert state[1] == S.CL_DONE            # VM1 unaffected
+    assert np.isfinite(float(out.time))
+
+
+def test_rates_respect_host_capacity():
+    """Sum of granted MIPS on a host never exceeds its capacity (any policy)."""
+    rng = np.random.default_rng(1)
+    hosts = S.make_hosts(rng.integers(1, 5, 8), 100.0, 4096.0, 1000.0, 1e6)
+    vm_pes = rng.integers(1, 3, 16)
+    vms = S.make_vms(vm_pes, 100.0, 64.0, 1.0, 10.0)
+    owners = np.repeat(np.arange(16, dtype=np.int32), 3)
+    cl = S.make_cloudlets(owners, rng.uniform(50, 500, 48).astype(np.float32))
+    for vp in (S.SPACE_SHARED, S.TIME_SHARED):
+        for tp in (S.SPACE_SHARED, S.TIME_SHARED):
+            dc = S.make_datacenter(hosts, vms, cl, vm_policy=vp,
+                                   task_policy=tp, reserve_pes=False)
+            from repro.core.provisioning import provision_pending
+            dc = provision_pending(dc)
+            rates = np.asarray(cloudlet_rates(dc))
+            host_of = np.asarray(dc.vms.host)[np.asarray(dc.cloudlets.vm)]
+            cap = np.asarray(dc.hosts.capacity_mips)
+            for h in range(8):
+                got = rates[host_of == h].sum()
+                assert got <= cap[h] * (1 + 1e-5), (vp, tp, h, got, cap[h])

@@ -1,0 +1,106 @@
+"""End-to-end behaviour of the whole stack: CIS match -> broker deploy ->
+two-level scheduling -> market bill, plus workload generators and vmap
+scenario sweeps — the full Figure 5 data flow in one test module."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import cis
+from repro.core import state as S
+from repro.core.engine import run
+from repro.core.workloads import (
+    bursty_arrivals,
+    cloudlets_from_profile,
+    make_tpu_hosts,
+    poisson_arrivals,
+    profile_from_roofline,
+)
+
+
+def test_full_figure5_flow():
+    """register -> query -> deploy to matched DC -> execute -> collect."""
+    # two providers with different prices/capacities
+    mk = lambda n, c: S.make_datacenter(
+        S.make_uniform_hosts(n, pes=2), B.build_fleet([B.VmSpec(count=4)]),
+        B.build_waves(4, B.WaveSpec(waves=2, length_mi=60_000.0,
+                                    period=30.0)),
+        reserve_pes=True, rates=S.make_market(c, 0.001, 0.0001, 0.002))
+    dcs = [mk(8, 0.05), mk(8, 0.01)]
+    table = jax.tree.map(lambda *x: jnp.stack(x),
+                         *[cis.register(d) for d in dcs])
+    feas = cis.match(table, need_pes=4, need_mips=1000.0,
+                     need_ram=2048.0, need_storage=4000.0)
+    pick = int(np.asarray(cis.rank_by_cost(table, feas))[0])
+    assert pick == 1                       # cheapest feasible provider
+    out = run(dcs[pick], max_steps=256)
+    rep = B.collect(out)
+    assert int(rep.n_completed) == 8
+    assert float(rep.total_cost) > 0.0
+
+
+def test_poisson_and_bursty_generators():
+    key = jax.random.PRNGKey(0)
+    cl = poisson_arrivals(key, 4, rate_per_vm=0.1, horizon=100.0,
+                          max_per_vm=8, length_mi=1000.0)
+    alive = np.asarray(cl.state) == S.CL_CREATED
+    assert alive.sum() > 0
+    assert np.all(np.asarray(cl.submit_time)[alive] <= 100.0)
+
+    cl2 = bursty_arrivals(key, 3, burst_every=50.0, burst_size=2,
+                          n_bursts=3, jitter=5.0, length_mi=500.0)
+    assert np.asarray(cl2.vm).shape[0] == 3 * 6
+    from repro.core.state import validate_cloudlet_order
+    assert validate_cloudlet_order(cl2.vm)
+
+
+def test_lm_fleet_profile_roundtrip():
+    """Dry-run roofline numbers -> cloudlets -> simulated serving fleet."""
+    prof = profile_from_roofline(
+        "qwen2-1.5b/prefill_32k", hlo_gflops=1.0e5,   # 100 TFLOP / request
+        in_bytes=32768 * 4, out_bytes=2 * 151936, chips=256)
+    hosts = make_tpu_hosts(8)
+    vms = B.build_fleet([B.VmSpec(count=4, pes=1, mips=197e6,
+                                  ram=8 * 1024.0, size=100.0)])
+    cl = cloudlets_from_profile(prof, 4, requests_per_vm=3, period=0.1)
+    dc = S.make_datacenter(hosts, vms, cl, task_policy=S.TIME_SHARED,
+                           reserve_pes=True)
+    out = run(dc, max_steps=256)
+    done = np.asarray(out.cloudlets.state) == S.CL_DONE
+    assert done.all()
+    # one 1e14-FLOP request on a 197-TFLOP/s chip ~ 0.5s service time
+    exec_t = np.asarray(out.cloudlets.finish_time
+                        - out.cloudlets.start_time)[done]
+    assert exec_t.min() >= 1e5 * 1e9 * 1e-6 / 197e6 - 1e-3
+
+
+def test_vmap_scenario_sweep_one_compile():
+    """Monte-Carlo arrival sweeps batch through vmap (CloudSim: N JVM runs)."""
+    hosts = S.make_uniform_hosts(4, pes=1)
+    vms = B.build_fleet([B.VmSpec(count=2)])
+
+    def scenario(key):
+        cl = poisson_arrivals(key, 2, rate_per_vm=0.05, horizon=200.0,
+                              max_per_vm=4, length_mi=30_000.0)
+        dc = S.make_datacenter(hosts, vms, cl, reserve_pes=True)
+        out = run(dc, max_steps=256)
+        return B.collect(out).n_completed
+
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    ns = np.asarray(jax.vmap(scenario)(keys))
+    assert ns.shape == (5,)
+    assert (ns >= 0).all() and (ns <= 8).all()
+
+
+def test_horizon_stops_simulation():
+    hosts = S.make_uniform_hosts(2, pes=1)
+    vms = B.build_fleet([B.VmSpec(count=2)])
+    cl = B.build_waves(2, B.WaveSpec(waves=4, length_mi=600_000.0,
+                                     period=600.0))
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=True)
+    out = run(dc, max_steps=4096, horizon=700.0)
+    assert float(out.time) <= 1300.0       # one step may cross the horizon
+    done = (np.asarray(out.cloudlets.state) == S.CL_DONE).sum()
+    assert 0 < done < 8
