@@ -1,6 +1,10 @@
 """Paper Figures 8 & 9 at full scale: 10 000 hosts / 50 VMs / 500 cloudlets
 of 1.2M MI in waves of 50 every 10 min, space- vs time-shared task
-scheduling.  Reports the completion-time profile per wave + wall time."""
+scheduling.  Reports the completion-time profile per wave + wall time.
+
+``bench_sweep`` additionally measures the batched sweep runner: the same
+policy experiment replicated over a scenario batch, run as ONE vmapped
+XLA call vs a sequential loop of single runs."""
 from __future__ import annotations
 
 import time
@@ -43,6 +47,71 @@ def bench(n_hosts=10_000, n_vms=50, waves=10):
     return out
 
 
+def bench_sweep(batch=64, n_hosts=64, n_vms=16, waves=4, max_steps=512):
+    """Policy-sweep mode: B scenarios x 2x2 policy grid in one compiled
+    vmapped call vs the same work as sequential single runs."""
+    import jax
+    import numpy as np
+
+    from repro.core import broker as B, state as S, sweep
+    from repro.core.engine import run
+
+    def scenario(seed):
+        rng = np.random.default_rng(seed)
+        hosts = S.make_uniform_hosts(n_hosts)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(
+            waves=waves, length_mi=float(rng.integers(600, 1200) * 1000),
+            period=600.0))
+        return S.make_datacenter(hosts, vms, cl, reserve_pes=True)
+
+    dcs = [scenario(s) for s in range(batch)]
+    stacked = sweep.stack_scenarios(dcs)
+    vm_p, task_p = sweep.policy_grid()
+
+    # one compiled call: [4 policies, B scenarios]
+    t0 = time.perf_counter()
+    grid = sweep.run_grid(stacked, vm_p, task_p, max_steps=max_steps)
+    jax.block_until_ready(grid.time)
+    compile_and_run = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    grid = sweep.run_grid(stacked, vm_p, task_p, max_steps=max_steps)
+    jax.block_until_ready(grid.time)
+    batched = time.perf_counter() - t0
+
+    # sequential baseline: same cells one run() at a time
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    def one(dc, vp, tp):
+        d = dataclasses.replace(dc, vm_policy=jnp.int32(vp),
+                                task_policy=jnp.int32(tp))
+        return jax.block_until_ready(run(d, max_steps=max_steps).time)
+
+    one(dcs[0], 0, 0)                        # warm up the single-run jit
+    sample = dcs[:8]                         # sample — full loop is O(4B)
+    t0 = time.perf_counter()
+    for dc in sample:
+        for vp, tp in ((0, 0), (0, 1), (1, 0), (1, 1)):
+            one(dc, vp, tp)
+    sequential_est = ((time.perf_counter() - t0) / (len(sample) * 4)
+                      * (batch * 4))
+
+    summ = sweep.summarize_batch(grid)
+    return {
+        "cells": int(4 * batch),
+        "compile_and_run_s": compile_and_run,
+        "batched_s": batched,
+        "sequential_est_s": sequential_est,
+        "speedup": sequential_est / max(batched, 1e-9),
+        "all_done": bool(np.all(np.asarray(summ.n_done)
+                                == n_vms * waves)),
+    }
+
+
 def main():
     print("# Fig 8/9: space vs time shared tasks (10k hosts, 50 VMs, "
           "500 cloudlets)")
@@ -56,6 +125,10 @@ def main():
     waves = ",".join(f"{x:.0f}" for x in tm["resp_by_wave"])
     print(f"fig9_time_shared,{tm['wall_s']*1e6:.0f},"
           f"resp_by_wave_s={waves}")
+    sw = bench_sweep()
+    print(f"policy_sweep_batched,{sw['batched_s']*1e6:.0f},"
+          f"cells={sw['cells']}_speedup_vs_sequential={sw['speedup']:.1f}x"
+          f"_all_done={sw['all_done']}")
 
 
 if __name__ == "__main__":

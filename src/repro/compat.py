@@ -1,0 +1,29 @@
+"""Compatibility shims for the pinned container toolchain.
+
+The code targets the modern JAX surface (``jax.shard_map`` with the
+``check_vma`` kwarg); the container pins jax 0.4.x where shard_map lives
+in ``jax.experimental.shard_map`` and the kwarg is ``check_rep``.  One
+shim keeps every call site on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map          # jax >= 0.5
+    _CHECK_KW = "check_vma"
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the modern signature on any supported jax."""
+    kwargs = {} if check_vma is None else {_CHECK_KW: check_vma}
+    if f is None:
+        return lambda g: _shard_map(g, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

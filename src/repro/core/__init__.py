@@ -2,7 +2,9 @@
 
 Layer map (paper §3/§4 -> modules):
   state.py         entity model (Datacenter/Host/VM/Cloudlet/Market)
+  segments.py      grouped-segment primitives (ranks/cumsums/mins per run)
   scheduling.py    two-level space/time-shared shares (Fig. 3 2x2)
+  sweep.py         batched scenario/policy sweeps (vmap over stacked states)
   provisioning.py  VMProvisioner + BW/Memory admission (first/best/worst-fit)
   engine.py        discrete-event engine (SimJava layer, tensorized)
   broker.py        DatacenterBroker builders + result collection
@@ -20,7 +22,9 @@ from repro.core import (  # noqa: F401
     market,
     provisioning,
     scheduling,
+    segments,
     state,
+    sweep,
     telemetry,
     workloads,
 )

@@ -29,6 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.segments import segment_cumsum
 from repro.core.state import (
     CL_CREATED,
     DatacenterState,
@@ -47,33 +48,9 @@ __all__ = [
     "segment_cumsum_grouped",
 ]
 
-
-# ---------------------------------------------------------------------------
-# Segmented helpers (cloudlets are stored grouped by VM — state.py invariant)
-# ---------------------------------------------------------------------------
-def _run_starts(seg_ids: jnp.ndarray) -> jnp.ndarray:
-    """Index of the first slot of each contiguous run, broadcast per slot."""
-    n = seg_ids.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), seg_ids[1:] != seg_ids[:-1]])
-    return jnp.maximum.accumulate(jnp.where(is_start, idx, -1))
-
-
-def segment_cumsum_grouped(values: jnp.ndarray, seg_ids: jnp.ndarray,
-                           *, exclusive: bool = True) -> jnp.ndarray:
-    """Cumulative sum restarting at each contiguous run of ``seg_ids``.
-
-    O(n) — relies on the grouped-slots invariant instead of a sort.
-    """
-    start = _run_starts(seg_ids)
-    csum = jnp.cumsum(values)
-    excl = csum - values                       # exclusive prefix sum
-    offset = excl[start]                       # value entering this run
-    out = excl - offset
-    if not exclusive:
-        out = out + values
-    return out
+# Back-compat alias: the grouped-segment helpers now live in
+# repro.core.segments (shared with state.py and models/moe.py).
+segment_cumsum_grouped = segment_cumsum
 
 
 # ---------------------------------------------------------------------------

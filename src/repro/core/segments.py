@@ -1,0 +1,80 @@
+"""Grouped-segment primitives shared by scheduling, state, and MoE dispatch.
+
+Several subsystems store entities as *contiguous runs* of a segment id —
+cloudlets grouped by owning VM (state.py invariant), VMs sorted by host
+(scheduling.py), (token, expert) pairs sorted by expert (models/moe.py).
+All of them need the same three O(n) primitives, previously duplicated
+(and broken: ``jnp.maximum.accumulate`` is a NumPy-only idiom with no JAX
+equivalent spelled that way — ``jax.lax.cummax`` is the scan that XLA
+actually provides).
+
+Everything here relies on the *grouped* (contiguous-runs) layout, not on
+globally unique segment ids: two runs with the same id are distinct
+segments.  That is exactly what the callers want — e.g. FCFS ranks must
+reset per VM run — and it avoids a sort.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "run_starts",
+    "run_ids",
+    "segment_rank",
+    "segment_cumsum",
+    "segment_min",
+]
+
+
+def _is_start(seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """bool[N] — True at the first slot of each contiguous run."""
+    return jnp.concatenate(
+        [jnp.ones((1,), bool), seg_ids[1:] != seg_ids[:-1]])
+
+
+def run_starts(seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """i32[N] index of the first slot of each contiguous run, per slot.
+
+    Implemented as a running max (``lax.cummax``) over start indices: each
+    slot sees the most recent run boundary at or before it.
+    """
+    n = seg_ids.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    marked = jnp.where(_is_start(seg_ids), idx, jnp.int32(-1))
+    return jax.lax.cummax(marked)
+
+
+def run_ids(seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """i32[N] dense 0-based run index per slot (monotone over slots)."""
+    return jnp.cumsum(_is_start(seg_ids).astype(jnp.int32)) - 1
+
+
+def segment_rank(seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """i32[N] position of each slot within its run (0-based, resets per run)."""
+    n = seg_ids.shape[0]
+    return jnp.arange(n, dtype=jnp.int32) - run_starts(seg_ids)
+
+
+def segment_cumsum(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                   *, exclusive: bool = True) -> jnp.ndarray:
+    """Cumulative sum restarting at each contiguous run of ``seg_ids``.
+
+    O(n) — a global prefix sum re-based at each run start; no sort, no
+    scatter.
+    """
+    start = run_starts(seg_ids)
+    csum = jnp.cumsum(values)
+    excl = csum - values                       # exclusive global prefix sum
+    out = excl - excl[start]                   # re-base at the run entry
+    if not exclusive:
+        out = out + values
+    return out
+
+
+def segment_min(values: jnp.ndarray, seg_ids: jnp.ndarray) -> jnp.ndarray:
+    """Minimum within each contiguous run, broadcast back per slot."""
+    n = values.shape[0]
+    rid = run_ids(seg_ids)
+    mins = jax.ops.segment_min(values, rid, num_segments=n)
+    return mins[rid]

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.segments import segment_rank
+
 # ---------------------------------------------------------------------------
 # Constants
 # ---------------------------------------------------------------------------
@@ -197,12 +199,8 @@ def make_cloudlets(vm, length, submit_time=0.0, file_size=0.0,
     c = vm.shape[0]
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (c,))
     length = f(length)
-    # FCFS rank within owning VM under the grouped invariant:
-    # rank[i] = i - first index of this vm's run.
-    idx = jnp.arange(c, dtype=jnp.int32)
-    is_start = jnp.concatenate([jnp.ones((1,), bool), vm[1:] != vm[:-1]])
-    run_start = jnp.maximum.accumulate(jnp.where(is_start, idx, -1))
-    rank = idx - run_start
+    # FCFS rank within owning VM under the grouped invariant.
+    rank = segment_rank(vm)
     return CloudletState(
         vm=vm, length=length, remaining=length,
         file_size=f(file_size), output_size=f(output_size),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.core.segments import segment_rank
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, swiglu
 
@@ -46,12 +48,7 @@ def init_moe(key, cfg: ModelConfig, dtype) -> dict:
 
 def _positions_within_expert(e_sorted: jnp.ndarray) -> jnp.ndarray:
     """Rank of each element within its (sorted, contiguous) expert run."""
-    n = e_sorted.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), e_sorted[1:] != e_sorted[:-1]])
-    run_start = jnp.maximum.accumulate(jnp.where(is_start, idx, -1))
-    return idx - run_start
+    return segment_rank(e_sorted)
 
 
 def moe_block(params: dict, cfg: ModelConfig, x: jnp.ndarray,
@@ -159,7 +156,7 @@ def moe_block_ep(params: dict, cfg: ModelConfig, x: jnp.ndarray,
         "down": P(model_axis, None, fsdp if fsdp else None),
     }
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(compat.shard_map, mesh=mesh,
              in_specs=(tok_spec, w_specs),
              out_specs=(tok_spec, P()), check_vma=False)
     def ep(xf, w):

@@ -1,0 +1,12 @@
+"""Pure-NumPy event-driven reference simulator — the conformance oracle.
+
+Replays CloudSim's per-event, object-style Host -> VM -> Cloudlet update
+walk literally (no tensorization, no JAX), so the dense engine in
+``repro.core`` can be differential-tested against an independent
+implementation of the paper's semantics.
+"""
+from repro.oracle.reference import (  # noqa: F401
+    OracleResult,
+    ReferenceSimulator,
+    simulate_dense,
+)

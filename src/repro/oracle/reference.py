@@ -1,0 +1,328 @@
+"""Event-by-event CloudSim reference simulator (pure NumPy / Python).
+
+This is the ground-truth oracle for the tensorized engine: it walks the
+Host -> VM -> Cloudlet object graph per event exactly the way CloudSim's
+``Datacenter.updateVMsProcessing`` / ``updateGridletsProcessing`` cascade
+does (§4.1 of the paper), with plain Python objects and loops — no JAX, no
+dense arrays, no vectorization tricks that could share a bug with the
+system under test.
+
+Covered semantics (all four Figure 3 policy combinations):
+
+  * first-fit FCFS VM provisioning with RAM/BW/storage/PE admission and
+    the ``reserve_pes`` placement flag (paper §5 vs Figure 3 semantics),
+  * host-level VMScheduler: SPACE_SHARED (FCFS whole-PE grants with strict
+    head-of-line blocking) and TIME_SHARED (proportional fluid slicing),
+  * VM-level CloudletScheduler: SPACE_SHARED (first ``req_pes`` runnable
+    task units by submission rank) and TIME_SHARED (equal fluid share,
+    at most one virtual PE per task unit),
+  * the discrete-event loop: next event = earliest completion / cloudlet
+    arrival / VM arrival; piecewise-constant rates between events.
+
+The completion-snap rule matches the engine bit-of-band
+(``finish_dt <= dt * (1 + 1e-5) + 1e-9``) so simultaneous completions
+collapse into the same event on both sides.
+
+Only FIRST_FIT provisioning is implemented — the conformance harness
+pins the engine's default policy; other policies are exercised by their
+own unit tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+# mirror repro.core.state codes without importing JAX
+SPACE_SHARED = 0
+TIME_SHARED = 1
+VM_EMPTY, VM_PENDING, VM_ACTIVE, VM_FAILED, VM_DESTROYED = 0, 1, 2, 3, 4
+CL_EMPTY, CL_CREATED, CL_DONE, CL_FAILED = 0, 1, 2, 3
+INF = float(1e30)
+
+_SNAP_REL = 1e-5
+_SNAP_ABS = 1e-9
+
+
+@dataclasses.dataclass
+class Host:
+    index: int
+    num_pes: int
+    mips_per_pe: float
+    ram: float
+    bw: float
+    storage: float
+    free_ram: float = 0.0
+    free_bw: float = 0.0
+    free_storage: float = 0.0
+    free_pes: float = 0.0
+    valid: bool = True
+    vms: List["Vm"] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Vm:
+    index: int
+    req_pes: int
+    req_mips: float
+    ram: float
+    bw: float
+    size: float
+    submit_time: float
+    state: int = VM_PENDING
+    host: Optional[Host] = None
+    create_time: float = INF
+    cloudlets: List["Cloudlet"] = dataclasses.field(default_factory=list)
+    capacity: float = 0.0           # MIPS granted by the host this event
+
+
+@dataclasses.dataclass
+class Cloudlet:
+    index: int
+    vm: int
+    length: float
+    submit_time: float
+    remaining: float = 0.0
+    start_time: float = -1.0
+    finish_time: float = INF
+    state: int = CL_CREATED
+    rate: float = 0.0               # MIPS granted this event
+
+
+@dataclasses.dataclass
+class OracleResult:
+    """Per-slot outcome arrays aligned with the dense state layout."""
+    start_time: np.ndarray          # f64[C]  (-1 if never started)
+    finish_time: np.ndarray         # f64[C]  (INF if not done)
+    cl_state: np.ndarray            # i32[C]
+    vm_state: np.ndarray            # i32[V]
+    vm_host: np.ndarray             # i32[V]  (-1 if unplaced)
+    time: float                     # clock at quiescence
+    n_events: int                   # events processed
+
+    @property
+    def n_done(self) -> int:
+        return int((self.cl_state == CL_DONE).sum())
+
+
+class ReferenceSimulator:
+    """Object-style CloudSim datacenter replay."""
+
+    def __init__(self, hosts: List[Host], vms: List[Vm],
+                 cloudlets: List[Cloudlet], *, vm_policy: int,
+                 task_policy: int, reserve_pes: bool,
+                 n_vm_slots: Optional[int] = None,
+                 n_cl_slots: Optional[int] = None):
+        self.hosts = hosts
+        self.vms = vms
+        self.cloudlets = cloudlets
+        self.vm_policy = int(vm_policy)
+        self.task_policy = int(task_policy)
+        self.reserve_pes = bool(reserve_pes)
+        self.n_vm_slots = n_vm_slots if n_vm_slots is not None else (
+            max((v.index for v in vms), default=-1) + 1)
+        self.n_cl_slots = n_cl_slots if n_cl_slots is not None else (
+            max((c.index for c in cloudlets), default=-1) + 1)
+        self.time = 0.0
+        self.n_events = 0
+        vm_by_index = {v.index: v for v in vms}
+        for cl in cloudlets:
+            cl.remaining = cl.length
+            owner = vm_by_index.get(cl.vm)
+            if owner is not None:
+                owner.cloudlets.append(cl)
+            else:                   # orphan cloudlet can never run
+                cl.state = CL_FAILED
+        for h in hosts:
+            h.free_ram, h.free_bw = h.ram, h.bw
+            h.free_storage, h.free_pes = h.storage, float(h.num_pes)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dc) -> "ReferenceSimulator":
+        """Build from a ``repro.core.state.DatacenterState`` pytree."""
+        g = lambda x: np.asarray(x)
+        h = dc.hosts
+        hosts = [
+            Host(i, int(g(h.num_pes)[i]), float(g(h.mips_per_pe)[i]),
+                 float(g(h.ram)[i]), float(g(h.bw)[i]),
+                 float(g(h.storage)[i]), valid=bool(g(h.valid)[i]))
+            for i in range(g(h.num_pes).shape[0]) if bool(g(h.valid)[i])
+        ]
+        v = dc.vms
+        vms = [
+            Vm(i, int(g(v.req_pes)[i]), float(g(v.req_mips)[i]),
+               float(g(v.ram)[i]), float(g(v.bw)[i]), float(g(v.size)[i]),
+               float(g(v.submit_time)[i]), state=int(g(v.state)[i]))
+            for i in range(g(v.req_pes).shape[0])
+            if int(g(v.state)[i]) != VM_EMPTY
+        ]
+        c = dc.cloudlets
+        cls_ = [
+            Cloudlet(i, int(g(c.vm)[i]), float(g(c.length)[i]),
+                     float(g(c.submit_time)[i]), state=int(g(c.state)[i]))
+            for i in range(g(c.vm).shape[0])
+            if int(g(c.state)[i]) != CL_EMPTY
+        ]
+        return cls(hosts, vms, cls_,
+                   vm_policy=int(g(dc.vm_policy)),
+                   task_policy=int(g(dc.task_policy)),
+                   reserve_pes=bool(int(g(dc.reserve_pes))),
+                   n_vm_slots=g(v.req_pes).shape[0],
+                   n_cl_slots=g(c.vm).shape[0])
+
+    # -- provisioning (the VMProvisioner walk) ------------------------------
+    def _feasible(self, host: Host, vm: Vm) -> bool:
+        pes_ok = (host.free_pes >= vm.req_pes if self.reserve_pes
+                  else host.num_pes >= vm.req_pes)
+        return (host.valid
+                and host.free_ram >= vm.ram
+                and host.free_bw >= vm.bw
+                and host.free_storage >= vm.size
+                and host.mips_per_pe >= vm.req_mips
+                and pes_ok)
+
+    def _provision(self):
+        """First-fit FCFS placement of every VM due at ``self.time``."""
+        due = [v for v in self.vms
+               if v.state == VM_PENDING and v.submit_time <= self.time]
+        for vm in sorted(due, key=lambda v: (v.submit_time, v.index)):
+            placed = None
+            for host in self.hosts:              # sequential first-fit scan
+                if self._feasible(host, vm):
+                    placed = host
+                    break
+            if placed is None:
+                vm.state = VM_FAILED
+                for cl in vm.cloudlets:
+                    if cl.state == CL_CREATED:
+                        cl.state = CL_FAILED
+                continue
+            placed.free_ram -= vm.ram
+            placed.free_bw -= vm.bw
+            placed.free_storage -= vm.size
+            if self.reserve_pes:
+                placed.free_pes -= vm.req_pes
+            placed.vms.append(vm)
+            vm.host = placed
+            vm.state = VM_ACTIVE
+            vm.create_time = self.time
+
+    # -- the two-level update walk (updateVMsProcessing cascade) ------------
+    def _runnable(self, cl: Cloudlet, vm: Vm) -> bool:
+        return (cl.state == CL_CREATED
+                and cl.submit_time <= self.time
+                and cl.remaining > 0.0
+                and vm.state == VM_ACTIVE)
+
+    def _update_rates(self):
+        for cl in self.cloudlets:
+            cl.rate = 0.0
+        for vm in self.vms:
+            vm.capacity = 0.0
+
+        # level 1: every host grants capacity to its VMs
+        for host in self.hosts:
+            eligible = []
+            for vm in host.vms:
+                if vm.state != VM_ACTIVE:
+                    continue
+                has_work = any(self._runnable(cl, vm) for cl in vm.cloudlets)
+                if self.reserve_pes or has_work:
+                    eligible.append(vm)
+            eligible.sort(key=lambda v: (v.create_time, v.index))
+
+            demands = [v.req_pes * min(v.req_mips, host.mips_per_pe)
+                       for v in eligible]
+            if self.vm_policy == SPACE_SHARED:
+                # FCFS whole-PE grants; a VM that does not fit behind the
+                # queue gets nothing (strict head-of-line blocking).
+                cum = 0
+                for vm, demand in zip(eligible, demands):
+                    cum += vm.req_pes
+                    vm.capacity = demand if cum <= host.num_pes else 0.0
+            else:
+                total = sum(demands)
+                host_cap = host.num_pes * host.mips_per_pe
+                scale = min(1.0, host_cap / total) if total > 0.0 else 0.0
+                for vm, demand in zip(eligible, demands):
+                    vm.capacity = demand * scale
+
+        # level 2: every VM divides its grant among runnable task units
+        for vm in self.vms:
+            if vm.state != VM_ACTIVE:
+                continue
+            runnable = [cl for cl in vm.cloudlets if self._runnable(cl, vm)]
+            if not runnable:
+                continue
+            pes = max(float(vm.req_pes), 1.0)
+            if self.task_policy == SPACE_SHARED:
+                per_pe = vm.capacity / pes
+                for rank, cl in enumerate(runnable):  # FCFS submission order
+                    cl.rate = per_pe if rank < int(pes) else 0.0
+            else:
+                share = vm.capacity / max(float(len(runnable)), pes)
+                for cl in runnable:
+                    cl.rate = share
+
+    # -- event queue --------------------------------------------------------
+    def _next_dt(self) -> float:
+        dt = INF
+        for cl in self.cloudlets:
+            if cl.state == CL_CREATED and cl.rate > 0.0:
+                dt = min(dt, cl.remaining / cl.rate)
+            if cl.state == CL_CREATED and cl.submit_time > self.time:
+                dt = min(dt, cl.submit_time - self.time)
+        for vm in self.vms:
+            if vm.state == VM_PENDING and vm.submit_time > self.time:
+                dt = min(dt, vm.submit_time - self.time)
+        return dt
+
+    def _advance(self, dt: float):
+        snap = dt * (1.0 + _SNAP_REL) + _SNAP_ABS
+        for cl in self.cloudlets:
+            if cl.state != CL_CREATED:
+                continue
+            if cl.rate > 0.0 and cl.start_time < 0.0:
+                cl.start_time = self.time
+            if cl.rate > 0.0 and cl.remaining / cl.rate <= snap:
+                cl.remaining = 0.0
+                cl.finish_time = self.time + dt
+                cl.state = CL_DONE
+            else:
+                cl.remaining = max(cl.remaining - cl.rate * dt, 0.0)
+        self.time += dt
+
+    def run(self, max_events: int = 100_000) -> OracleResult:
+        while self.n_events < max_events:
+            self._provision()
+            self._update_rates()
+            dt = self._next_dt()
+            if dt >= INF:
+                break
+            self._advance(dt)
+            self.n_events += 1
+        return self._result()
+
+    def _result(self) -> OracleResult:
+        st = np.full(self.n_cl_slots, -1.0)
+        ft = np.full(self.n_cl_slots, INF)
+        cs = np.zeros(self.n_cl_slots, np.int32)
+        for cl in self.cloudlets:
+            st[cl.index] = cl.start_time
+            ft[cl.index] = cl.finish_time
+            cs[cl.index] = cl.state
+        vs = np.zeros(self.n_vm_slots, np.int32)
+        vh = np.full(self.n_vm_slots, -1, np.int32)
+        for vm in self.vms:
+            vs[vm.index] = vm.state
+            vh[vm.index] = vm.host.index if vm.host is not None else -1
+        return OracleResult(start_time=st, finish_time=ft, cl_state=cs,
+                           vm_state=vs, vm_host=vh, time=self.time,
+                           n_events=self.n_events)
+
+
+def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:
+    """One-call oracle replay of a dense ``DatacenterState`` scenario."""
+    return ReferenceSimulator.from_dense(dc).run(max_events=max_events)

@@ -110,8 +110,9 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig, params):
         # token; afterwards it is the sampled one
         gather_idx = jnp.minimum(pos, state.prompts.shape[1] - 1)
         prompt_next = jnp.take_along_axis(
-            state.prompts, gather_idx[:, None, *([None] *
-                                                 (state.prompts.ndim - 2))],
+            state.prompts,
+            jnp.expand_dims(gather_idx,
+                            tuple(range(1, state.prompts.ndim))),
             axis=1)[:, 0]
         feed = jnp.where(_bcast(still_prompt, prompt_next), prompt_next,
                          next_tok)
@@ -148,6 +149,7 @@ def _scatter_tok(buf, idx, tok, emitting):
     b = buf.shape[0]
     upd = jnp.where(_bcast(emitting, tok), tok,
                     jnp.take_along_axis(
-                        buf, idx[:, None, *([None] * (buf.ndim - 2))],
+                        buf,
+                        jnp.expand_dims(idx, tuple(range(1, buf.ndim))),
                         axis=1)[:, 0])
     return buf.at[jnp.arange(b), idx].set(upd)

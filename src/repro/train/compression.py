@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["quantize_int8", "dequantize_int8", "ef_compress_tree",
            "allreduce_compressed"]
 
@@ -76,7 +78,7 @@ def allreduce_compressed(mesh: Mesh, axis: str, tree):
     nshards = mesh.shape[axis]
 
     def one(x):
-        @partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+        @partial(compat.shard_map, mesh=mesh, in_specs=P(axis),
                  out_specs=P(), check_vma=False)
         def go(block):
             local = block[0]                     # this pod's gradient

@@ -1,0 +1,313 @@
+"""Differential conformance: tensorized engine vs the NumPy event oracle.
+
+The oracle (``repro.oracle``) replays CloudSim's per-event object walk
+literally; the engine collapses it into dense reductions.  They must agree
+— on completion times (within 1e-3 s; the engine runs f32, the oracle
+f64), on exactly which cloudlets complete, and on the number of simulation
+events — across randomized scenarios covering the full 2x2 space/time-
+shared policy matrix, both placement semantics (``reserve_pes``), staggered
+VM/cloudlet arrivals, and provisioning failures.
+
+Also pinned here: the Pallas ``simstep`` kernel (interpret mode) drives a
+full dense replay to the same completions/events, and the batched sweep
+runner reproduces per-scenario single-run results bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scheduling, state as S, sweep
+from repro.core.engine import run, run_trace
+from repro.core.provisioning import provision_pending
+from repro.kernels.simstep import simstep_pallas, simstep_ref
+from repro.oracle import simulate_dense
+
+N_VMS, PER_VM = 4, 3
+POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
+               for tp in (S.SPACE_SHARED, S.TIME_SHARED)]
+SEEDS = list(range(26))                 # 26 seeds x 4 combos = 104 scenarios
+
+
+def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
+                  per_vm=PER_VM):
+    """Randomized heterogeneous scenario under the grouped-slots invariant.
+
+    Magnitudes are kept modest (makespans <~200 s) so f32 clock drift stays
+    well inside the 1e-3 s conformance tolerance.  Some seeds produce VMs
+    no host can admit — provisioning-failure paths are covered too.
+    """
+    rng = np.random.default_rng(seed)
+    hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
+                         rng.choice([250.0, 500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6)
+    vms = S.make_vms(
+        rng.integers(1, 3, n_vms),
+        rng.choice([250.0, 500.0, 1000.0], n_vms),
+        64.0, 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 5, n_vms), 2).astype(np.float32))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(                    # FCFS submission order per VM
+        np.round(rng.uniform(0, 20, (n_vms, per_vm)), 2),
+        axis=1).reshape(-1).astype(np.float32)
+    lengths = np.round(
+        rng.uniform(500, 8000, n_vms * per_vm)).astype(np.float32)
+    cl = S.make_cloudlets(owners, lengths, submit)
+    return S.make_datacenter(hosts, vms, cl, vm_policy=vm_policy,
+                             task_policy=task_policy,
+                             reserve_pes=bool(seed % 2))
+
+
+# ---------------------------------------------------------------------------
+# Engine vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle(vm_policy, task_policy):
+    """>= 100 scenarios total across the parametrized 2x2 policy matrix."""
+    for seed in SEEDS:
+        dc = make_scenario(seed, vm_policy, task_policy)
+        out, trace = run_trace(dc, num_steps=192)
+        res = simulate_dense(dc)
+        ctx = (seed, vm_policy, task_policy)
+
+        done_e = np.asarray(out.cloudlets.state) == S.CL_DONE
+        done_o = res.cl_state == S.CL_DONE
+        np.testing.assert_array_equal(done_e, done_o, err_msg=str(ctx))
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state), res.cl_state, err_msg=str(ctx))
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+
+        ft = np.asarray(out.cloudlets.finish_time, np.float64)
+        np.testing.assert_allclose(ft[done_e], res.finish_time[done_o],
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        st = np.asarray(out.cloudlets.start_time, np.float64)
+        np.testing.assert_allclose(st[done_e], res.start_time[done_o],
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        # VM placement walk agrees too (first-fit FCFS + admission)
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+
+
+def test_oracle_matches_fig3_exactly():
+    """The oracle independently reproduces the paper's Figure 3 numbers."""
+    expect = {
+        (S.SPACE_SHARED, S.SPACE_SHARED): [1, 1, 2, 2, 3, 3, 4, 4],
+        (S.SPACE_SHARED, S.TIME_SHARED): [2, 2, 2, 2, 4, 4, 4, 4],
+        (S.TIME_SHARED, S.SPACE_SHARED): [2, 2, 4, 4, 2, 2, 4, 4],
+        (S.TIME_SHARED, S.TIME_SHARED): [4] * 8,
+    }
+    for (vp, tp), ft in expect.items():
+        hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+        vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+        cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+        dc = S.make_datacenter(hosts, vms, cl, vm_policy=vp, task_policy=tp,
+                               reserve_pes=False)
+        res = simulate_dense(dc)
+        np.testing.assert_allclose(res.finish_time, ft, rtol=1e-9)
+        assert res.n_done == 8
+
+
+# ---------------------------------------------------------------------------
+# Pallas simstep kernel in the loop
+# ---------------------------------------------------------------------------
+def _simstep_replay(dc, *, max_events=192):
+    """Full dense replay with the Pallas kernel (interpret mode) computing
+    the VM-level stage of every event.  Returns (final dc, n_events)."""
+    n_events = 0
+    for _ in range(max_events):
+        dc = provision_pending(dc)
+        runnable = scheduling.cloudlet_runnable(dc)
+        active = dc.vms.state == S.VM_ACTIVE
+        eligible = jnp.where(dc.reserve_pes == 1, active,
+                             active & scheduling.vm_has_work(dc, runnable))
+        vm_cap = scheduling.host_level_shares(dc, eligible)
+
+        nv = dc.vms.req_pes.shape[0]
+        rem_d = dc.cloudlets.remaining.reshape(nv, -1)
+        run_d = runnable.reshape(nv, -1)
+        rates_d, _ = simstep_pallas(
+            rem_d, run_d, vm_cap, dc.vms.req_pes.astype(jnp.float32),
+            dc.task_policy, interpret=True)
+        rates = rates_d.reshape(-1)
+
+        cl = dc.cloudlets
+        finish_dt = jnp.where(rates > 0.0,
+                              cl.remaining / jnp.maximum(rates, 1e-30), S.INF)
+        future_cl = (cl.state == S.CL_CREATED) & (cl.submit_time > dc.time)
+        future_vm = ((dc.vms.state == S.VM_PENDING)
+                     & (dc.vms.submit_time > dc.time))
+        dt = jnp.minimum(
+            jnp.min(finish_dt, initial=S.INF),
+            jnp.minimum(
+                jnp.min(jnp.where(future_cl, cl.submit_time - dc.time,
+                                  S.INF), initial=S.INF),
+                jnp.min(jnp.where(future_vm, dc.vms.submit_time - dc.time,
+                                  S.INF), initial=S.INF)))
+        if not bool(dt < S.INF):
+            break
+        n_events += 1
+        finished = ((cl.state == S.CL_CREATED) & (rates > 0.0)
+                    & (finish_dt <= dt * (1.0 + 1e-5) + 1e-9))
+        started = (rates > 0.0) & (cl.start_time < 0.0)
+        dc = dataclasses.replace(
+            dc,
+            cloudlets=dataclasses.replace(
+                cl,
+                remaining=jnp.where(
+                    finished, 0.0,
+                    jnp.maximum(cl.remaining - rates * dt, 0.0)),
+                start_time=jnp.where(started, dc.time, cl.start_time),
+                finish_time=jnp.where(finished, dc.time + dt,
+                                      cl.finish_time),
+                state=jnp.where(finished, S.CL_DONE, cl.state)),
+            time=dc.time + dt)
+    return dc, n_events
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_pallas_simstep_replay_matches_oracle(vm_policy, task_policy):
+    """Engine semantics driven through the kernel == oracle == engine."""
+    for seed in (0, 1, 5):
+        dc = make_scenario(seed, vm_policy, task_policy)
+        final, n_events = _simstep_replay(dc)
+        res = simulate_dense(dc)
+        ctx = (seed, vm_policy, task_policy)
+
+        assert n_events == res.n_events, ctx
+        np.testing.assert_array_equal(
+            np.asarray(final.cloudlets.state), res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(final.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+
+        engine_final = run(dc, max_steps=192)
+        np.testing.assert_allclose(
+            np.asarray(final.cloudlets.finish_time),
+            np.asarray(engine_final.cloudlets.finish_time),
+            rtol=1e-6, err_msg=str(ctx))
+
+
+def test_simstep_kernel_parity_on_scenario_states():
+    """Kernel rates == scheduling.vm_level_rates on provisioned states."""
+    for seed in SEEDS[:8]:
+        for vp, tp in POLICY_GRID:
+            dc = make_scenario(seed, vp, tp)
+            dc = provision_pending(dc)
+            runnable = scheduling.cloudlet_runnable(dc)
+            active = dc.vms.state == S.VM_ACTIVE
+            eligible = jnp.where(dc.reserve_pes == 1, active,
+                                 active & scheduling.vm_has_work(dc,
+                                                                 runnable))
+            vm_cap = scheduling.host_level_shares(dc, eligible)
+            expected = scheduling.vm_level_rates(dc, vm_cap, runnable)
+
+            nv = dc.vms.req_pes.shape[0]
+            rem_d = dc.cloudlets.remaining.reshape(nv, -1)
+            run_d = runnable.reshape(nv, -1)
+            pes = dc.vms.req_pes.astype(jnp.float32)
+            r_ref, d_ref = simstep_ref(rem_d, run_d, vm_cap, pes,
+                                       dc.task_policy)
+            r_pal, d_pal = simstep_pallas(rem_d, run_d, vm_cap, pes,
+                                          dc.task_policy, interpret=True)
+            np.testing.assert_allclose(np.asarray(r_ref),
+                                       np.asarray(expected).reshape(nv, -1),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(r_pal), np.asarray(r_ref),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(d_pal), np.asarray(d_ref),
+                                       rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched sweep runner
+# ---------------------------------------------------------------------------
+def test_sweep_batch_bitwise_reproduces_single_runs():
+    """B=64 stacked scenarios: vmapped run == 64 single runs, bit-for-bit."""
+    dcs = [make_scenario(seed, vp, tp)
+           for seed in range(16) for vp, tp in POLICY_GRID]
+    assert len(dcs) == 64
+    batch = sweep.stack_scenarios(dcs)
+    out = sweep.run_batch(batch, max_steps=256)
+    for i, dc in enumerate(dcs):
+        single = run(dc, max_steps=256)
+        for name in ("finish_time", "start_time", "remaining", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.cloudlets, name)),
+                np.asarray(getattr(out.cloudlets, name))[i],
+                err_msg=f"scenario {i} field {name}")
+        np.testing.assert_array_equal(np.asarray(single.vms.host),
+                                      np.asarray(out.vms.host)[i])
+        np.testing.assert_array_equal(np.asarray(single.time),
+                                      np.asarray(out.time)[i])
+
+
+def test_sweep_grid_reproduces_fig3_in_one_call():
+    """Scenarios x 2x2 policy grid in one compiled call == Figure 3."""
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False)
+    batch = sweep.stack_scenarios([dc, dc])
+    vm_p, task_p = sweep.policy_grid()
+    grid = sweep.run_grid(batch, vm_p, task_p, max_steps=64)
+    ft = np.asarray(grid.cloudlets.finish_time)
+    assert ft.shape == (4, 2, 8)
+    np.testing.assert_allclose(ft[0, 0], [1, 1, 2, 2, 3, 3, 4, 4],
+                               rtol=1e-6)
+    np.testing.assert_allclose(ft[1, 0], [2, 2, 2, 2, 4, 4, 4, 4],
+                               rtol=1e-6)
+    np.testing.assert_allclose(ft[2, 0], [2, 2, 4, 4, 2, 2, 4, 4],
+                               rtol=1e-6)
+    np.testing.assert_allclose(ft[3, 1], [4] * 8, rtol=1e-6)
+    summ = sweep.summarize_batch(grid)
+    assert np.asarray(summ.n_done).shape == (4, 2)
+    assert np.all(np.asarray(summ.n_done) == 8)
+    np.testing.assert_allclose(np.asarray(summ.makespan), 4.0, rtol=1e-6)
+
+
+def test_sweep_ragged_padding_is_inert():
+    """Scenarios of different sizes pad to a common shape without any
+    effect on the real slots' results."""
+    small = make_scenario(0, S.SPACE_SHARED, S.SPACE_SHARED,
+                          n_hosts=2, n_vms=2, per_vm=2)
+    big = make_scenario(1, S.TIME_SHARED, S.TIME_SHARED,
+                        n_hosts=4, n_vms=5, per_vm=3)
+    batch = sweep.stack_scenarios([small, big])
+    assert batch.cloudlets.vm.shape == (2, 15)
+    out = sweep.run_batch(batch, max_steps=256)
+
+    s_small = run(small, max_steps=256)
+    np.testing.assert_array_equal(
+        np.asarray(s_small.cloudlets.finish_time),
+        np.asarray(out.cloudlets.finish_time)[0][:4])
+    np.testing.assert_array_equal(
+        np.asarray(s_small.cloudlets.state),
+        np.asarray(out.cloudlets.state)[0][:4])
+    # padded slots stay empty and timeless
+    assert np.all(np.asarray(out.cloudlets.state)[0][4:] == S.CL_EMPTY)
+
+    s_big = run(big, max_steps=256)
+    np.testing.assert_array_equal(
+        np.asarray(s_big.cloudlets.finish_time),
+        np.asarray(out.cloudlets.finish_time)[1])
+
+
+def test_sweep_oracle_cross_check():
+    """The batched runner agrees with the oracle lane-by-lane."""
+    dcs = [make_scenario(seed, vp, tp)
+           for seed in (2, 3) for vp, tp in POLICY_GRID]
+    batch = sweep.stack_scenarios(dcs)
+    out = sweep.run_batch(batch, max_steps=256)
+    for i, dc in enumerate(dcs):
+        res = simulate_dense(dc)
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state)[i], res.cl_state)
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[i][done],
+            res.finish_time[done], rtol=0, atol=1e-3)

@@ -1,0 +1,92 @@
+"""Non-hypothesis smoke variant of the DES engine's core invariants.
+
+``test_engine_properties.py`` checks these properties with hypothesis;
+this module re-asserts them over a fixed seed sweep so the invariants keep
+*some* coverage when the optional ``hypothesis`` package is absent (as in
+the minimal CI image).
+"""
+import numpy as np
+import pytest
+
+from repro.core import state as S
+from repro.core.engine import run, run_trace
+from repro.core.scheduling import cloudlet_rates
+
+SEEDS = [0, 1, 7, 42, 123]
+POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
+               for tp in (S.SPACE_SHARED, S.TIME_SHARED)]
+
+
+def _scenario(seed, n_hosts, n_vms, per_vm, vm_policy, task_policy,
+              reserve):
+    rng = np.random.default_rng(seed)
+    hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
+                         rng.choice([500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6)
+    vms = S.make_vms(rng.integers(1, 3, n_vms),
+                     rng.choice([500.0, 1000.0], n_vms),
+                     64.0, 1.0, 10.0,
+                     submit_time=rng.uniform(0, 10, n_vms).astype(np.float32))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(
+        rng.uniform(0, 50, (n_vms, per_vm)).astype(np.float32),
+        axis=1).reshape(-1)
+    cl = S.make_cloudlets(
+        owners,
+        rng.uniform(1_000, 100_000, n_vms * per_vm).astype(np.float32),
+        submit)
+    return S.make_datacenter(hosts, vms, cl, vm_policy=vm_policy,
+                             task_policy=task_policy, reserve_pes=reserve)
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_invariants_smoke(vm_policy, task_policy):
+    for seed in SEEDS:
+        dc = _scenario(seed, n_hosts=6, n_vms=5, per_vm=4,
+                       vm_policy=vm_policy, task_policy=task_policy,
+                       reserve=bool(seed % 2))
+        out = run(dc, max_steps=2048)
+        cl = out.cloudlets
+        state = np.asarray(cl.state)
+        st_, ft = np.asarray(cl.start_time), np.asarray(cl.finish_time)
+        sub = np.asarray(cl.submit_time)
+        rem = np.asarray(cl.remaining)
+        length = np.asarray(cl.length)
+
+        done = state == S.CL_DONE
+        # causality: submit <= start <= finish for completed work
+        assert np.all(st_[done] >= sub[done] - 1e-4)
+        assert np.all(ft[done] >= st_[done] - 1e-4)
+        # conservation: completed work executed its full length
+        np.testing.assert_allclose(rem[done], 0.0, atol=1e-2)
+        # nothing executes past its length
+        assert np.all(length - rem >= -1e-2)
+        # quiescence: no runnable cloudlet still has positive rate
+        rates = np.asarray(cloudlet_rates(out))
+        assert np.all(rates <= 1e-6)
+        # physical speed limit: exec time >= dedicated time on fastest host
+        max_mips = float(np.asarray(dc.hosts.mips_per_pe).max())
+        assert np.all(ft[done] - st_[done]
+                      >= length[done] / max_mips - 1e-3)
+
+
+def test_while_loop_and_scan_agree_smoke():
+    for seed in SEEDS[:3]:
+        dc = _scenario(seed, n_hosts=4, n_vms=3, per_vm=3,
+                       vm_policy=S.TIME_SHARED, task_policy=S.SPACE_SHARED,
+                       reserve=False)
+        a = run(dc, max_steps=512)
+        b, _ = run_trace(dc, num_steps=512)
+        np.testing.assert_allclose(np.asarray(a.cloudlets.finish_time),
+                                   np.asarray(b.cloudlets.finish_time),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a.cloudlets.state),
+                                      np.asarray(b.cloudlets.state))
+
+
+def test_determinism_smoke():
+    dc = _scenario(123, 6, 5, 4, S.TIME_SHARED, S.TIME_SHARED, False)
+    a = run(dc, max_steps=1024)
+    b = run(dc, max_steps=1024)
+    np.testing.assert_array_equal(np.asarray(a.cloudlets.finish_time),
+                                  np.asarray(b.cloudlets.finish_time))

@@ -2,12 +2,18 @@
 
 Whatever the workload and policy mix, the simulator must conserve work,
 respect causality, never overdrive hosts, and quiesce deterministically.
+
+Requires the optional ``hypothesis`` package; when it is absent this
+module skips and ``test_engine_invariants.py`` still covers the same core
+invariants over fixed seeds.
 """
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import state as S
 from repro.core.engine import run, run_trace

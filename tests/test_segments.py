@@ -1,0 +1,131 @@
+"""Grouped-run invariants of repro.core.segments vs a NumPy loop reference.
+
+The primitives operate on *contiguous runs*: two runs with the same id are
+distinct segments (ranks reset per VM run; cumsums stay within segments).
+Every property is pinned against a literal Python loop.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.segments import (
+    run_ids,
+    run_starts,
+    segment_cumsum,
+    segment_min,
+    segment_rank,
+)
+
+
+def _loop_run_starts(ids):
+    out, start = [], 0
+    for i, x in enumerate(ids):
+        if i > 0 and x != ids[i - 1]:
+            start = i
+        out.append(start)
+    return np.asarray(out)
+
+
+def _loop_cumsum(values, ids, exclusive):
+    out, acc = [], 0.0
+    for i, x in enumerate(ids):
+        if i > 0 and x != ids[i - 1]:
+            acc = 0.0
+        if exclusive:
+            out.append(acc)
+            acc += values[i]
+        else:
+            acc += values[i]
+            out.append(acc)
+    return np.asarray(out)
+
+
+def _random_grouped_ids(rng, n):
+    """Random run lengths; consecutive runs may reuse ids non-adjacently."""
+    ids, cur = [], int(rng.integers(0, 4))
+    while len(ids) < n:
+        ids += [cur] * int(rng.integers(1, 5))
+        cur = int((cur + rng.integers(1, 4)) % 5)   # next run differs
+    return np.asarray(ids[:n], np.int32)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_run_starts_and_rank_vs_loop(seed):
+    rng = np.random.default_rng(seed)
+    ids = _random_grouped_ids(rng, 40)
+    starts = _loop_run_starts(ids)
+    np.testing.assert_array_equal(np.asarray(run_starts(jnp.asarray(ids))),
+                                  starts)
+    np.testing.assert_array_equal(np.asarray(segment_rank(jnp.asarray(ids))),
+                                  np.arange(40) - starts)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("exclusive", [True, False])
+def test_segment_cumsum_vs_loop(seed, exclusive):
+    rng = np.random.default_rng(seed)
+    ids = _random_grouped_ids(rng, 37)
+    vals = rng.uniform(-5, 5, 37).astype(np.float32)
+    got = np.asarray(segment_cumsum(jnp.asarray(vals), jnp.asarray(ids),
+                                    exclusive=exclusive))
+    # atol: the O(n) implementation re-bases a global f32 prefix sum, so
+    # within-run values carry the global sum's rounding (~n * eps * |sum|)
+    np.testing.assert_allclose(got, _loop_cumsum(vals, ids, exclusive),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rank_resets_per_run_even_with_repeated_ids():
+    """[0,0,1,1,0] has THREE runs — the trailing 0 is a new segment."""
+    ids = jnp.asarray([0, 0, 1, 1, 0], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(segment_rank(ids)),
+                                  [0, 1, 0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(run_ids(ids)), [0, 0, 1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(run_starts(ids)),
+                                  [0, 0, 2, 2, 4])
+
+
+def test_cumsum_stays_within_segments():
+    """No value leaks across a run boundary (the scheduling invariant)."""
+    ids = jnp.asarray([3, 3, 3, 7, 7, 2], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 4.0, 10.0, 20.0, 5.0])
+    incl = np.asarray(segment_cumsum(vals, ids, exclusive=False))
+    np.testing.assert_allclose(incl, [1, 3, 7, 10, 30, 5])
+    excl = np.asarray(segment_cumsum(vals, ids, exclusive=True))
+    np.testing.assert_allclose(excl, [0, 1, 3, 0, 10, 0])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_segment_min_vs_loop(seed):
+    rng = np.random.default_rng(seed)
+    ids = _random_grouped_ids(rng, 25)
+    vals = rng.uniform(-10, 10, 25).astype(np.float32)
+    expect = np.empty(25, np.float32)
+    i = 0
+    while i < 25:
+        j = i
+        while j < 25 and ids[j] == ids[i]:
+            j += 1
+        expect[i:j] = vals[i:j].min()
+        i = j
+    got = np.asarray(segment_min(jnp.asarray(vals), jnp.asarray(ids)))
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+
+def test_single_run_and_single_element():
+    ids = jnp.asarray([5, 5, 5], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(segment_rank(ids)), [0, 1, 2])
+    one = jnp.asarray([9], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(segment_rank(one)), [0])
+    np.testing.assert_array_equal(np.asarray(run_starts(one)), [0])
+
+
+def test_jit_and_vmap_safe():
+    """The primitives trace cleanly (used inside the jitted engine)."""
+    import jax
+
+    ids = jnp.asarray([[0, 0, 1], [2, 2, 2]], jnp.int32)
+    vals = jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+    ranks = jax.vmap(segment_rank)(ids)
+    np.testing.assert_array_equal(np.asarray(ranks), [[0, 1, 0], [0, 1, 2]])
+    sums = jax.jit(lambda v, i: segment_cumsum(v, i, exclusive=False))
+    np.testing.assert_allclose(np.asarray(sums(vals[0], ids[0])), [1, 3, 3])

@@ -1,0 +1,124 @@
+"""Pallas ``simstep`` kernel parity vs the pure-jnp reference.
+
+Interpret mode on CPU drives the actual kernel body over randomized
+[V, K] tiles, including the edge geometry the scheduler actually produces:
+all-idle VM rows, ``req_pes > K`` (more virtual PEs than task slots),
+zero-capacity VMs (head-of-line blocked by the host level), and V not a
+multiple of the sublane tile (padding path).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.simstep import simstep_pallas, simstep_ref
+
+INF = 1e30
+
+
+def _random_tile(seed, v, k, *, all_idle_rows=0, zero_cap_rows=0,
+                 big_pes_rows=0):
+    rng = np.random.default_rng(seed)
+    remaining = rng.uniform(0.0, 5000.0, (v, k)).astype(np.float32)
+    remaining[rng.uniform(size=(v, k)) < 0.15] = 0.0     # drained slots
+    runnable = rng.uniform(size=(v, k)) < 0.7
+    cap = rng.uniform(100.0, 2000.0, v).astype(np.float32)
+    pes = rng.integers(1, 4, v).astype(np.float32)
+    rows = rng.permutation(v)
+    for r in rows[:all_idle_rows]:
+        runnable[r] = False
+    for r in rows[all_idle_rows:all_idle_rows + zero_cap_rows]:
+        cap[r] = 0.0
+    for r in rows[-big_pes_rows:] if big_pes_rows else []:
+        pes[r] = k + rng.integers(1, 5)                  # pes > K
+    return (jnp.asarray(remaining), jnp.asarray(runnable),
+            jnp.asarray(cap), jnp.asarray(pes))
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("v,k", [(8, 16), (13, 8), (3, 128), (32, 4)])
+@pytest.mark.parametrize("policy", [0, 1])
+def test_parity_randomized(seed, v, k, policy):
+    rem, run, cap, pes = _random_tile(seed, v, k, all_idle_rows=1,
+                                      zero_cap_rows=1, big_pes_rows=1)
+    r_ref, d_ref = simstep_ref(rem, run, cap, pes, policy)
+    r_pal, d_pal = simstep_pallas(rem, run, cap, pes, policy,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(r_pal), np.asarray(r_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(d_pal), np.asarray(d_ref),
+                               rtol=1e-6)
+
+
+def test_all_idle_everything():
+    """No runnable slot anywhere: zero rates, INF event times."""
+    v, k = 9, 8
+    rem = jnp.ones((v, k), jnp.float32) * 100.0
+    run = jnp.zeros((v, k), bool)
+    cap = jnp.full((v,), 500.0, jnp.float32)
+    pes = jnp.ones((v,), jnp.float32)
+    for policy in (0, 1):
+        r, d = simstep_pallas(rem, run, cap, pes, policy, interpret=True)
+        assert np.all(np.asarray(r) == 0.0)
+        assert np.all(np.asarray(d) >= INF * 0.99)
+
+
+def test_pes_exceed_slots():
+    """req_pes > K: space-shared grants every runnable slot a full PE."""
+    v, k = 4, 4
+    rem = jnp.full((v, k), 1000.0, jnp.float32)
+    run = jnp.ones((v, k), bool)
+    cap = jnp.full((v,), 800.0, jnp.float32)
+    pes = jnp.full((v,), 8.0, jnp.float32)               # 8 PEs, 4 slots
+    r_ref, d_ref = simstep_ref(rem, run, cap, pes, 0)
+    r_pal, d_pal = simstep_pallas(rem, run, cap, pes, 0, interpret=True)
+    np.testing.assert_allclose(np.asarray(r_pal), np.asarray(r_ref),
+                               rtol=1e-6)
+    # every slot gets one PE's worth: cap / pes
+    np.testing.assert_allclose(np.asarray(r_pal), 100.0, rtol=1e-6)
+    # time-shared with n < pes also caps at one PE per task
+    r_t, _ = simstep_pallas(rem, run, cap, pes, 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(r_t), 100.0, rtol=1e-6)
+
+
+def test_zero_capacity_vm_rates_zero():
+    """A VM granted nothing by the host level runs nothing — and its slots
+    produce no (spurious) next-event time."""
+    v, k = 5, 8
+    rng = np.random.default_rng(7)
+    rem = jnp.asarray(rng.uniform(10, 100, (v, k)).astype(np.float32))
+    run = jnp.ones((v, k), bool)
+    cap = jnp.asarray([0.0, 500.0, 0.0, 250.0, 0.0], jnp.float32)
+    pes = jnp.ones((v,), jnp.float32)
+    for policy in (0, 1):
+        r, d = simstep_pallas(rem, run, cap, pes, policy, interpret=True)
+        r = np.asarray(r)
+        d = np.asarray(d)
+        assert np.all(r[[0, 2, 4]] == 0.0)
+        assert np.all(d[[0, 2, 4]] >= INF * 0.99)
+        assert np.all(r[[1, 3]].sum(-1) > 0.0)
+        assert np.all(np.isfinite(d[[1, 3]]))
+
+
+def test_drained_slots_do_not_collapse_dtmin():
+    """remaining == 0 slots are not runnable; they must not produce dt=0."""
+    rem = jnp.asarray([[0.0, 100.0, 0.0, 50.0]], jnp.float32)
+    run = jnp.ones((1, 4), bool)
+    cap = jnp.asarray([100.0], jnp.float32)
+    pes = jnp.asarray([2.0], jnp.float32)
+    r, d = simstep_pallas(rem, run, cap, pes, 0, interpret=True)
+    # the two live slots share the 2 PEs at 50 MIPS each
+    np.testing.assert_allclose(np.asarray(r),
+                               [[0.0, 50.0, 0.0, 50.0]], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d), [1.0], rtol=1e-6)
+
+
+def test_padding_path_bit_identical():
+    """V not a multiple of tile_v exercises the pad/slice path."""
+    rem, run, cap, pes = _random_tile(3, 11, 16)
+    for policy in (0, 1):
+        r8, d8 = simstep_pallas(rem, run, cap, pes, policy, tile_v=8,
+                                interpret=True)
+        r1, d1 = simstep_pallas(rem, run, cap, pes, policy, tile_v=1,
+                                interpret=True)
+        np.testing.assert_array_equal(np.asarray(r8), np.asarray(r1))
+        np.testing.assert_array_equal(np.asarray(d8), np.asarray(d1))
