@@ -3,10 +3,20 @@ of 1.2M MI in waves of 50 every 10 min, space- vs time-shared task
 scheduling.  Reports the completion-time profile per wave + wall time.
 
 ``bench_sweep`` additionally measures the batched sweep runner: the same
-policy experiment replicated over a scenario batch, run as ONE vmapped
-XLA call vs a sequential loop of single runs."""
+policy experiment replicated over a scenario batch, run as ONE fused
+vmapped XLA call (policies x scenarios flattened into a single lane
+axis) vs a sequential loop of single runs.
+
+``bench_sharded`` measures the device-sharded path: the fused grid split
+across a forced multi-device host platform
+(``--xla_force_host_platform_device_count``) vs the same grid on one
+device.  It re-launches itself in a subprocess because the device count
+is fixed at backend initialization."""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -112,6 +122,70 @@ def bench_sweep(batch=64, n_hosts=64, n_vms=16, waves=4, max_steps=512):
     }
 
 
+def bench_sharded(batch=16, n_hosts=32, n_vms=8, waves=3, max_steps=256):
+    """Fused grid on one device vs sharded over every visible device.
+
+    Must run in a process whose host platform already exposes >1 device
+    (see ``main``); returns throughput in (policy, scenario) cells/s for
+    both placements plus the measured wall times.
+    """
+    import jax
+
+    from repro import compat
+    from repro.core import broker as B, state as S, sweep
+
+    def scenario(seed):
+        rng = np.random.default_rng(seed)
+        hosts = S.make_uniform_hosts(n_hosts)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(
+            waves=waves, length_mi=float(rng.integers(600, 1200) * 1000),
+            period=600.0))
+        return S.make_datacenter(hosts, vms, cl, reserve_pes=True)
+
+    stacked = sweep.stack_scenarios([scenario(s) for s in range(batch)])
+    vm_p, task_p = sweep.policy_grid()
+    cells = int(vm_p.shape[0]) * batch
+    one_dev = compat.make_mesh("sweep", jax.devices()[:1])
+
+    def timed(**kw):
+        grid = sweep.run_grid(stacked, vm_p, task_p, max_steps=max_steps,
+                              **kw)                       # compile + run
+        jax.block_until_ready(grid.time)
+        t0 = time.perf_counter()
+        grid = sweep.run_grid(stacked, vm_p, task_p, max_steps=max_steps,
+                              **kw)
+        jax.block_until_ready(grid.time)
+        return time.perf_counter() - t0
+
+    single_s = timed(mesh=one_dev, sharded=True)
+    gspmd_s = timed(partitioner="gspmd")      # default mesh = all devices
+    shmap_s = timed(partitioner="shard_map")
+    best_s = min(gspmd_s, shmap_s)
+    return {
+        "devices": jax.device_count(),
+        "cells": cells,
+        "single_device_s": single_s,
+        "gspmd_s": gspmd_s,
+        "shard_map_s": shmap_s,
+        "single_cells_per_s": cells / max(single_s, 1e-9),
+        "gspmd_cells_per_s": cells / max(gspmd_s, 1e-9),
+        "shard_map_cells_per_s": cells / max(shmap_s, 1e-9),
+        "speedup": single_s / max(best_s, 1e-9),
+    }
+
+
+def _sharded_worker():
+    sh = bench_sharded()
+    print(f"policy_sweep_sharded,{sh['gspmd_s']*1e6:.0f},"
+          f"devices={sh['devices']}_cells={sh['cells']}"
+          f"_single_dev={sh['single_cells_per_s']:.1f}cells_per_s"
+          f"_gspmd={sh['gspmd_cells_per_s']:.1f}cells_per_s"
+          f"_shard_map={sh['shard_map_cells_per_s']:.1f}cells_per_s"
+          f"_best_speedup={sh['speedup']:.2f}x")
+
+
 def main():
     print("# Fig 8/9: space vs time shared tasks (10k hosts, 50 VMs, "
           "500 cloudlets)")
@@ -129,7 +203,29 @@ def main():
     print(f"policy_sweep_batched,{sw['batched_s']*1e6:.0f},"
           f"cells={sw['cells']}_speedup_vs_sequential={sw['speedup']:.1f}x"
           f"_all_done={sw['all_done']}")
+    # the sharded measurement needs a multi-device backend, which must be
+    # forced before jax initializes -> fresh subprocess
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip())
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--sharded-worker"],
+            env=env, capture_output=True, text=True, timeout=900)
+    except subprocess.TimeoutExpired:
+        print("policy_sweep_sharded,error,worker_timeout_900s")
+        return
+    if proc.returncode == 0:
+        print(proc.stdout.strip())
+    else:
+        print(f"policy_sweep_sharded,error,"
+              f"worker_failed_rc={proc.returncode}")
+        sys.stderr.write(proc.stderr[-2000:])
 
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-worker" in sys.argv:
+        _sharded_worker()
+    else:
+        main()

@@ -1,13 +1,16 @@
 """Compatibility shims for the pinned container toolchain.
 
 The code targets the modern JAX surface (``jax.shard_map`` with the
-``check_vma`` kwarg); the container pins jax 0.4.x where shard_map lives
-in ``jax.experimental.shard_map`` and the kwarg is ``check_rep``.  One
-shim keeps every call site on the modern spelling.
+``check_vma`` kwarg, ``jax.make_mesh``); the container pins jax 0.4.x
+where shard_map lives in ``jax.experimental.shard_map`` with a
+``check_rep`` kwarg and ``make_mesh`` may be absent.  One shim keeps
+every call site on the modern spelling.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 try:
     _shard_map = jax.shard_map          # jax >= 0.5
@@ -16,7 +19,30 @@ except AttributeError:                  # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
     _CHECK_KW = "check_rep"
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "make_mesh", "abstract_mesh"]
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` with the modern (sizes, names) call.
+
+    jax 0.4.x spells the constructor ``AbstractMesh(shape_tuple)`` with
+    zipped (name, size) pairs; 0.5+ takes the two sequences.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def make_mesh(axis: str = "sweep", devices=None) -> Mesh:
+    """A 1-D device mesh named ``axis`` (default: all local devices).
+
+    ``jax.make_mesh`` only landed late in 0.4.x; ``jax.sharding.Mesh``
+    over an explicit device array works everywhere, so use that.
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), (axis,))
 
 
 def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None):

@@ -15,8 +15,14 @@ min-reductions:
 and the state advance is one fused multiply-subtract.  The engine is a pure
 ``step`` function driven by ``lax.while_loop`` (run to completion) or
 ``lax.scan`` (fixed step count, with a telemetry trace).  Because ``step``
-is pure and shape-stable it can be ``vmap``-ed over scenario batches and
-``shard_map``-ed over datacenter shards (see federation.py).
+is pure and shape-stable it can be ``vmap``-ed over scenario batches
+(sweep.py fuses policy grids into the same batch axis and shards it over
+devices) and ``shard_map``-ed over datacenter shards (see federation.py).
+
+Units, here and everywhere downstream of ``DatacenterState``: simulated
+time in seconds (f32), cloudlet lengths/progress in MI (million
+instructions), rates in MIPS, RAM/storage/transfer sizes in MB, money in
+dollars.  Entity axes are H hosts, V VMs, C cloudlets.
 """
 from __future__ import annotations
 
@@ -79,11 +85,18 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
          ) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
+    Takes and returns an *unbatched* ``DatacenterState`` (leaves [H]/[V]/
+    [C]/scalar); batching is layered on by the callers' vmap.  At
+    quiescence (no runnable work, no future submissions) ``step`` is an
+    exact fixed point — it returns the state bit-for-bit unchanged with
+    ``StepRecord.active == False`` — which is what makes padded batch
+    lanes and early-finishing lanes inert.
+
     Order inside an event instant mirrors CloudSim: (1) the VMProvisioner
     places VMs whose submission is due, (2) ``updateVMsProcessing`` — the
-    two-level share computation — fixes every rate, (3) the clock jumps to
-    the earliest completion/arrival, (4) progress, completions, and market
-    costs are committed.
+    two-level share computation — fixes every rate (MIPS), (3) the clock
+    jumps ``dt`` seconds to the earliest completion/arrival, (4) progress
+    (rate * dt MI), completions, and market costs ($) are committed.
     """
     dc = provision_pending(dc, provision_policy)
     rates = scheduling.cloudlet_rates(dc)
@@ -146,8 +159,10 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
     """Run the simulation to quiescence with ``lax.while_loop``.
 
     Terminates when the event queue is empty (no runnable work and no future
-    submissions), the ``horizon`` is passed, or ``max_steps`` fires (a
-    safety net against pathological scenarios).
+    submissions), the ``horizon`` (simulated seconds) is passed, or
+    ``max_steps`` events fire (a safety net against pathological
+    scenarios).  Returns the final ``DatacenterState`` (same leaf shapes
+    as the input; ``time`` is the quiescence clock in seconds).
     """
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
@@ -171,8 +186,10 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
               ) -> tuple[DatacenterState, StepRecord]:
     """Run exactly ``num_steps`` events via ``lax.scan``, keeping telemetry.
 
-    Steps past quiescence are no-ops flagged ``active=False`` — the trace
-    stays fixed-shape (required for jit) and downstream consumers filter.
+    Returns ``(final state, StepRecord trace)`` where every trace leaf is
+    stacked to [num_steps] (times in seconds).  Steps past quiescence are
+    no-ops flagged ``active=False`` — the trace stays fixed-shape
+    (required for jit) and downstream consumers filter.
     """
     def body(dc, _):
         new, rec = step(dc, provision_policy=provision_policy)

@@ -1,0 +1,190 @@
+"""Federation-scale policy studies — inter-cloud routing x the sweep grid.
+
+Buyya et al.'s InterCloud work (arXiv:0907.4878) frames the canonical
+CloudSim experiment as a *federated policy study*: users shop VM fleets
+across multiple providers through the Cloud Information Service, a broker
+routes each fleet to the cheapest feasible datacenter, and the researcher
+compares allocation policies over the resulting multi-datacenter load.
+In CloudSim that is one JVM run per (policy, datacenter) cell; here the
+whole study is one fused, device-sharded batch:
+
+    fleets --(CIS register/query + broker FCFS routing)--> D datacenters
+    D datacenters x P policy pairs --(sweep.run_grid)-----> [P, D] results
+
+Routing happens once, host-side (it is experiment *setup*: tiny tables,
+sequential greedy semantics from ``federation.assign_users``); the
+simulation of every (policy, datacenter) cell then runs as a single
+``vmap`` over P*D fused lanes, sharded across devices.  Each lane is
+bit-for-bit identical to a single ``engine.run`` of that datacenter under
+that policy — the conformance suite pins this.
+
+Units everywhere follow the dense state: times in seconds, lengths in
+MI (million instructions), rates in MIPS, RAM/storage/BW in MB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import cis
+from repro.core import federation as F
+from repro.core import state as S
+from repro.core import sweep
+from repro.core.provisioning import FIRST_FIT
+
+__all__ = ["Provider", "UserFleet", "FederationStudy", "fleet_demand",
+           "build_study", "run_study"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Provider:
+    """One federated datacenter offer: a host park + its market rates."""
+    hosts: S.HostState
+    rates: S.MarketRates
+
+
+@dataclasses.dataclass(frozen=True)
+class UserFleet:
+    """One user's request: VM classes to deploy + the cloudlet wave plan.
+
+    ``vms`` are submitted to whichever provider the broker picks; every VM
+    receives ``waves.waves`` cloudlets of ``waves.length_mi`` MI, one per
+    ``waves.period`` seconds (the paper's §5 workload generator).
+    """
+    vms: tuple[B.VmSpec, ...]
+    waves: B.WaveSpec
+
+
+class FederationStudy(NamedTuple):
+    """Everything ``run_study`` hands back.
+
+    P = number of policy pairs, D = number of providers, U = users.
+    """
+    table: cis.CisEntry          # stacked CIS registry rows, leaves [D]
+    assignment: jnp.ndarray      # i32[U] provider per user (-1 = rejected)
+    final: S.DatacenterState     # final states, leaves [P, D, ...]
+    summary: sweep.SweepSummary  # per-cell scalars, leaves [P, D]
+    fed_makespan: jnp.ndarray    # f32[P] latest completion across the federation (s)
+    fed_cost: jnp.ndarray        # f32[P] summed market bill across providers ($)
+    fed_done: jnp.ndarray        # i32[P] completed cloudlets across providers
+
+
+def fleet_demand(fleets: Sequence[UserFleet]) -> F.UserDemand:
+    """Aggregate each fleet into the per-user totals the broker shops with."""
+    pes = [float(sum(sp.count * sp.pes for sp in f.vms)) for f in fleets]
+    mips = [float(max((sp.mips for sp in f.vms), default=0.0))
+            for f in fleets]
+    ram = [float(sum(sp.count * sp.ram for sp in f.vms)) for f in fleets]
+    sto = [float(sum(sp.count * sp.size for sp in f.vms)) for f in fleets]
+    return F.UserDemand(pes=jnp.asarray(pes, jnp.float32),
+                        mips=jnp.asarray(mips, jnp.float32),
+                        ram=jnp.asarray(ram, jnp.float32),
+                        storage=jnp.asarray(sto, jnp.float32))
+
+
+def _empty_vms() -> S.VmState:
+    """A single never-provisioned VM slot (keeps entity axes non-empty)."""
+    vms = S.make_vms([0], 0.0, 0.0, 0.0, 0.0)
+    return dataclasses.replace(
+        vms, state=jnp.full((1,), S.VM_EMPTY, jnp.int32))
+
+
+def _empty_cloudlets() -> S.CloudletState:
+    """A single never-runnable cloudlet slot."""
+    cl = S.make_cloudlets([-1], 0.0)
+    return dataclasses.replace(
+        cl, state=jnp.full((1,), S.CL_EMPTY, jnp.int32))
+
+
+def _concat_blocks(blocks):
+    """Concatenate entity blocks field-wise (same dataclass type)."""
+    if len(blocks) == 1:
+        return blocks[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs), *blocks)
+
+
+def build_study(providers: Sequence[Provider],
+                fleets: Sequence[UserFleet], *,
+                vm_policy: int = S.SPACE_SHARED,
+                task_policy: int = S.SPACE_SHARED,
+                reserve_pes: bool = True
+                ) -> tuple[list[S.DatacenterState], jnp.ndarray,
+                           cis.CisEntry]:
+    """Route fleets across providers; build one datacenter scenario each.
+
+    Returns ``(dcs, assignment, table)``: D single-scenario states (the
+    routed workloads deployed, ready for ``sweep.stack_scenarios``), the
+    i32[U] user->provider assignment (-1 = no feasible provider), and the
+    stacked CIS registry table the broker used (leaves [D]).
+
+    Routing is the Figure-5 conversation: every provider registers a
+    descriptor row, ``federation.assign_users`` greedily grants each user
+    the cheapest feasible provider in FCFS order, and each granted fleet's
+    VMs + cloudlet waves are appended to its provider's dense blocks.
+    """
+    bare = [S.make_datacenter(p.hosts, _empty_vms(), _empty_cloudlets(),
+                              vm_policy=vm_policy, task_policy=task_policy,
+                              reserve_pes=reserve_pes, rates=p.rates)
+            for p in providers]
+    table = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[cis.register(d) for d in bare])
+    assignment = F.assign_users(table, fleet_demand(fleets))
+    assign_np = np.asarray(assignment)
+
+    dcs = []
+    for d, (provider, dc0) in enumerate(zip(providers, bare)):
+        vm_blocks, cl_blocks, vm_off = [], [], 0
+        for u, fleet in enumerate(fleets):
+            if int(assign_np[u]) != d:
+                continue
+            vms_u = B.build_fleet(list(fleet.vms))
+            n_vms_u = vms_u.req_pes.shape[0]
+            cl_u = B.build_waves(n_vms_u, fleet.waves)
+            cl_u = dataclasses.replace(cl_u, vm=cl_u.vm + vm_off)
+            vm_blocks.append(vms_u)
+            cl_blocks.append(cl_u)
+            vm_off += n_vms_u
+        if not vm_blocks:               # provider won no users
+            vm_blocks, cl_blocks = [_empty_vms()], [_empty_cloudlets()]
+        dcs.append(dataclasses.replace(
+            dc0, vms=_concat_blocks(vm_blocks),
+            cloudlets=_concat_blocks(cl_blocks)))
+    return dcs, assignment, table
+
+
+def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
+              vm_policies, task_policies, *, max_steps: int = 100_000,
+              provision_policy: int = FIRST_FIT, reserve_pes: bool = True,
+              mesh=None, sharded: bool | None = None) -> FederationStudy:
+    """An arXiv:0907.4878-style inter-cloud policy study, end to end.
+
+    Routes ``fleets`` over ``providers`` once (``build_study``), then runs
+    the D routed datacenters under all P ``(vm_policies[i],
+    task_policies[i])`` pairs as one fused device-sharded batch
+    (``sweep.run_grid`` — P*D lanes, padded to the mesh, single vmap) and
+    reduces to federation-level metrics.  ``mesh``/``sharded`` forward to
+    ``sweep.run_grid``; the default shards whenever >1 device is visible.
+    """
+    dcs, assignment, table = build_study(
+        providers, fleets, reserve_pes=reserve_pes)
+    batch = sweep.stack_scenarios(dcs)
+    final = sweep.run_grid(batch, vm_policies, task_policies,
+                           max_steps=max_steps,
+                           provision_policy=provision_policy,
+                           mesh=mesh, sharded=sharded)
+    summary = sweep.summarize_batch(final)      # leaves [P, D]
+    return FederationStudy(
+        table=table,
+        assignment=assignment,
+        final=final,
+        summary=summary,
+        fed_makespan=jnp.max(summary.makespan, axis=-1),
+        fed_cost=jnp.sum(summary.total_cost, axis=-1),
+        fed_done=jnp.sum(summary.n_done, axis=-1),
+    )

@@ -34,11 +34,15 @@ __all__ = ["UserDemand", "assign_users", "federated_run", "vmap_federation"]
 
 
 class UserDemand(NamedTuple):
-    """Aggregate per-user fleet requirements the broker shops around."""
+    """Aggregate per-user fleet requirements the broker shops around.
+
+    U = number of users.  ``experiments.fleet_demand`` builds this from
+    per-user ``UserFleet`` specs.
+    """
     pes: jnp.ndarray        # f32[U] total PEs wanted
     mips: jnp.ndarray       # f32[U] per-PE MIPS floor
-    ram: jnp.ndarray        # f32[U] total RAM
-    storage: jnp.ndarray    # f32[U]
+    ram: jnp.ndarray        # f32[U] total RAM (MB)
+    storage: jnp.ndarray    # f32[U] total storage (MB)
 
 
 def assign_users(table: cis.CisEntry, demand: UserDemand) -> jnp.ndarray:
@@ -79,9 +83,12 @@ def federated_run(mesh: Mesh, dc_stack: S.DatacenterState, *,
                   provision_policy: int = FIRST_FIT):
     """Simulate D datacenters, one per device along ``axis``.
 
-    ``dc_stack`` must have a leading axis equal to the mesh axis size on
-    every leaf.  Returns (final stacked state, stacked BrokerReport,
-    gathered CIS table of the *initial* states).
+    ``dc_stack`` must have a leading axis equal to the mesh axis size D
+    on every leaf (one datacenter per device — for many scenarios per
+    device use ``sweep.run_sharded``, which blocks the lane axis).
+    Returns ``(final stacked state [D, ...], stacked BrokerReport [D],
+    gathered CIS table [D])`` — the table describes the *initial* states
+    (free capacity before any placement; times in seconds, money in $).
     """
     spec = P(axis)
 
@@ -102,7 +109,10 @@ def federated_run(mesh: Mesh, dc_stack: S.DatacenterState, *,
 
 def vmap_federation(dc_stack: S.DatacenterState, *, max_steps: int = 100_000,
                     provision_policy: int = FIRST_FIT):
-    """Single-device reference for ``federated_run`` (tests compare both)."""
+    """Single-device reference for ``federated_run`` (tests compare both).
+
+    Same signature and [D]-leading result layout, minus the mesh.
+    """
     out = jax.vmap(lambda d: run(d, max_steps=max_steps,
                                  provision_policy=provision_policy))(dc_stack)
     rep = jax.vmap(broker.collect)(out)

@@ -5,24 +5,42 @@ CloudSim) treats *sweeps* over allocation policies and workload scenarios
 as the toolkit's main use; in CloudSim each run is a separate JVM
 simulation.  Here a whole sweep is one XLA program: every field of
 ``DatacenterState`` is a dense array, so B independent scenarios stack
-into a leading batch axis and ``engine.step``/``run`` vmap over it —
-the 2x2 policy grid, seeds, and fleet sizes all become batch dimensions.
+into a leading batch axis and ``engine.step``/``run`` vmap over it.
+
+The policy grid is *fused* into the same batch axis rather than nested:
+``run_grid`` broadcasts each of the P policy pairs over the B stacked
+scenarios and runs one flat ``vmap`` over P*B lanes (lane ``p*B + b`` is
+scenario ``b`` under policy pair ``p``), reshaping results back to
+``[P, B, ...]``.  Policy codes are traced scalars inside the state, so
+the whole grid is still a single compilation.
+
+The fused lane axis is also the *sharding* axis: ``run_sharded`` splits
+it across the devices of a 1-D mesh — with ``compat.shard_map``, or
+with GSPMD lane-axis ``in_shardings`` on the CPU backend (see
+``run_sharded``) — lanes are fully independent (no collectives), so
+sweep throughput scales linearly in devices.  Lane counts that do not
+divide the device count are padded with inert lanes (see below) and
+unpadded on return.
 
 Ragged scenarios (different host/VM/cloudlet counts) are padded to a
 common shape first: padded hosts are invalid, padded VMs are ``VM_EMPTY``
 (never provisioned), padded cloudlets are ``CL_EMPTY`` (never runnable),
 so padding is exactly inert — a padded run reproduces its unpadded run's
-results on the real slots.
+results on the real slots.  ``pad_batch`` applies the same trick one
+level up: a padding *lane* is a whole scenario of invalid entities, which
+quiesces on its first step and costs nothing afterwards.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import engine
 from repro.core.provisioning import FIRST_FIT
 from repro.core.state import (
@@ -34,7 +52,8 @@ from repro.core.state import (
 )
 
 __all__ = ["pad_scenario", "stack_scenarios", "run_batch", "run_grid",
-           "policy_grid", "SweepSummary", "summarize_batch"]
+           "run_grid_nested", "fuse_grid", "inert_lane", "pad_batch",
+           "run_sharded", "policy_grid", "SweepSummary", "summarize_batch"]
 
 
 # ---------------------------------------------------------------------------
@@ -131,15 +150,14 @@ def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy"))
-def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
-             task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
-             provision_policy: int = FIRST_FIT) -> DatacenterState:
-    """Scenarios x policy grid in one compiled call.
+def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
+                    task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
+                    provision_policy: int = FIRST_FIT) -> DatacenterState:
+    """Reference grid runner: outer vmap over policies, inner over scenarios.
 
-    ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
-    Figure 3 matrix is P=4).  Returns a [P, B, ...] batched final state:
-    outer vmap over the policy pair, inner vmap over scenarios.  Policy
-    codes are traced scalars in the state, so no recompilation per cell.
+    The PR-1 implementation, kept as the differential baseline for the
+    fused path — ``tests/test_conformance.py`` pins ``run_grid`` ==
+    ``run_grid_nested`` bit-for-bit.  Same [P, B, ...] result layout.
     """
     def one_policy(vp, tp):
         withp = dataclasses.replace(
@@ -153,6 +171,273 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
                                 jnp.asarray(task_policies, jnp.int32))
 
 
+def fuse_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
+              task_policies: jnp.ndarray) -> DatacenterState:
+    """Flatten a [B] scenario batch x i32[P] policy pairs into [P*B] lanes.
+
+    Lane ``p*B + b`` is scenario ``b`` with its ``vm_policy``/``task_policy``
+    scalars overwritten by policy pair ``p``; every other leaf is broadcast
+    and reshaped.  Called eagerly this materializes the P copies;
+    ``run_grid`` therefore traces it inside its jitted pipeline, where
+    XLA keeps the broadcast symbolic.  The inverse is a plain ``reshape``
+    of each leaf to ``(P, B) + rest``.
+    """
+    vm_policies = jnp.asarray(vm_policies, jnp.int32)
+    task_policies = jnp.asarray(task_policies, jnp.int32)
+    if vm_policies.shape != task_policies.shape:
+        raise ValueError("vm_policies and task_policies must pair up: "
+                         f"{vm_policies.shape} vs {task_policies.shape}")
+    n_pol = vm_policies.shape[0]
+    n_scen = batch.time.shape[0]
+
+    def tile(x):
+        return jnp.broadcast_to(
+            x[None], (n_pol,) + x.shape).reshape((n_pol * n_scen,)
+                                                 + x.shape[1:])
+
+    fused = jax.tree_util.tree_map(tile, batch)
+    return dataclasses.replace(
+        fused,
+        vm_policy=jnp.repeat(vm_policies, n_scen),
+        task_policy=jnp.repeat(task_policies, n_scen))
+
+
+def inert_lane(batch: DatacenterState) -> DatacenterState:
+    """One unbatched scenario that quiesces on its first step.
+
+    All hosts invalid, all VMs ``VM_EMPTY``, all cloudlets ``CL_EMPTY`` —
+    the event queue is empty from t=0, so ``engine.run`` takes zero active
+    steps and the lane is a fixed point.  Used to pad a lane axis up to a
+    multiple of the device count; the padded results are discarded.
+    """
+    lane = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x[0]), batch)
+    return dataclasses.replace(
+        lane,
+        vms=dataclasses.replace(
+            lane.vms,
+            host=jnp.full_like(lane.vms.host, -1),
+            state=jnp.full_like(lane.vms.state, VM_EMPTY),
+            create_time=jnp.full_like(lane.vms.create_time, INF)),
+        cloudlets=dataclasses.replace(
+            lane.cloudlets,
+            vm=jnp.full_like(lane.cloudlets.vm, -1),
+            start_time=jnp.full_like(lane.cloudlets.start_time, -1.0),
+            finish_time=jnp.full_like(lane.cloudlets.finish_time, INF),
+            state=jnp.full_like(lane.cloudlets.state, CL_EMPTY)))
+
+
+def pad_batch(batch: DatacenterState, n_lanes: int) -> DatacenterState:
+    """Grow the leading lane axis to ``n_lanes`` with inert lanes."""
+    have = batch.time.shape[0]
+    if n_lanes < have:
+        raise ValueError(f"cannot shrink lane axis: {have} -> {n_lanes}")
+    if n_lanes == have:
+        return batch
+    pad = inert_lane(batch)
+    grow = lambda x, p: jnp.concatenate(
+        [x, jnp.broadcast_to(p[None], (n_lanes - have,) + p.shape)])
+    return jax.tree_util.tree_map(grow, batch, pad)
+
+
+def _lane_axis(mesh) -> str:
+    """The (only) axis name of a 1-D sweep mesh; reject higher ranks."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"sweep meshes are 1-D; got axes {mesh.axis_names}")
+    return mesh.axis_names[0]
+
+
+def _resolve_partitioner(partitioner: str) -> str:
+    """Validate/expand a partitioner choice (the CPU backend defaults
+    away from shard_map — see ``_sharded_runner``)."""
+    if partitioner == "auto":
+        return "gspmd" if jax.default_backend() == "cpu" else "shard_map"
+    if partitioner not in ("gspmd", "shard_map"):
+        raise ValueError(f"unknown partitioner: {partitioner!r}")
+    return partitioner
+
+
+def _default_inner() -> str:
+    """Per-device iteration scheme for the shard_map partitioner."""
+    return "map" if jax.default_backend() == "cpu" else "vmap"
+
+
+@lru_cache(maxsize=None)
+def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
+                    inner: str):
+    """jit(shard_map(map-or-vmap(run))) for one (mesh, statics) combination.
+
+    Cached so repeated sweeps with the same mesh reuse the compiled
+    executable (rebuilding the shard_map closure per call would defeat
+    jit's cache).
+
+    ``inner`` picks how a device iterates its lane block: ``"vmap"``
+    batches the block into wide ops, ``"map"`` runs lanes back-to-back
+    with ``lax.map``.  The pinned jaxlib's *CPU* SPMD partitioner
+    hard-crashes (``TileAssignment::Reshape`` check failure) on a vmapped
+    engine step inside ``shard_map``, so CPU defaults to ``"map"``; both
+    spellings are bit-for-bit equal per lane.
+    """
+    spec = P(axis)
+
+    @jax.jit
+    @partial(compat.shard_map, mesh=mesh, in_specs=(spec,),
+             out_specs=spec, check_vma=False)
+    def go(block: DatacenterState) -> DatacenterState:
+        f = partial(engine.run, max_steps=max_steps,
+                    provision_policy=provision_policy)
+        if inner == "vmap":
+            return jax.vmap(f)(block)
+        return jax.lax.map(f, block)
+
+    return go
+
+
+@lru_cache(maxsize=None)
+def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int):
+    """jit(vmap(run)) with GSPMD in/out shardings over the lane axis.
+
+    Same program as ``run_batch`` — XLA's automatic partitioner splits
+    the lane-sharded arrays instead of an explicit ``shard_map``.  Keeps
+    the inner vmap (wide vectorized lanes) on every backend, including
+    the CPU backend whose manual-sharding partitioner cannot compile it
+    (see ``_sharded_runner``).
+    """
+    shd = NamedSharding(mesh, P(axis))
+    f = partial(engine.run, max_steps=max_steps,
+                provision_policy=provision_policy)
+    return jax.jit(jax.vmap(f), in_shardings=(shd,), out_shardings=shd)
+
+
+def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
+                max_steps: int = 1_000_000,
+                provision_policy: int = FIRST_FIT,
+                partitioner: str = "auto",
+                inner: str | None = None) -> DatacenterState:
+    """``run_batch`` with the lane axis split across the devices of a mesh.
+
+    ``mesh`` is a 1-D ``jax.sharding.Mesh`` (default: all local devices,
+    via ``compat.make_mesh``).  Lanes are independent simulations — each
+    device runs ``engine.run`` over its own contiguous block and no
+    collective ever runs, so results are bit-for-bit identical to the
+    single-device path.  Lane counts not divisible by the device count
+    are padded with ``inert_lane`` scenarios and unpadded on return.
+
+    ``partitioner`` selects how lanes land on devices:
+
+    * ``"shard_map"`` — explicit ``compat.shard_map`` over ``axis``; each
+      device iterates its block per ``inner`` ("vmap" | "map", default
+      "map" on CPU where the pinned jaxlib cannot compile the vmapped
+      engine under manual sharding, "vmap" elsewhere).
+    * ``"gspmd"`` — ``jit`` with lane-axis ``in_shardings``; XLA's
+      automatic partitioner splits the ordinary ``run_batch`` program,
+      keeping wide vmap vectorization on every backend.
+    * ``"auto"`` (default) — ``"gspmd"`` on CPU, ``"shard_map"`` on
+      accelerator backends.
+
+    All spellings are bit-for-bit equal (``tests/test_sweep_sharded.py``).
+    """
+    if mesh is None:
+        mesh = compat.make_mesh(axis)
+    else:
+        axis = _lane_axis(mesh)
+    partitioner = _resolve_partitioner(partitioner)
+    n_dev = mesh.shape[axis]
+    have = batch.time.shape[0]
+    lanes = -(-have // n_dev) * n_dev
+    padded = pad_batch(batch, lanes)
+    if partitioner == "gspmd":
+        out = _gspmd_runner(mesh, axis, max_steps,
+                            provision_policy)(padded)
+    else:
+        out = _sharded_runner(mesh, axis, max_steps, provision_policy,
+                              inner if inner is not None
+                              else _default_inner())(padded)
+    if lanes == have:
+        return out
+    return jax.tree_util.tree_map(lambda x: x[:have], out)
+
+
+@lru_cache(maxsize=None)
+def _grid_runner(mesh, max_steps: int, provision_policy: int,
+                 partitioner: str, inner: str):
+    """One jitted fuse -> (shard) -> run -> reshape pipeline per config.
+
+    The whole grid — policy broadcast, inert mesh padding, the flat lane
+    vmap, and the [P, B] reshape — traces into a single XLA program, so
+    the P-fold broadcast of the scenario batch is never materialized on
+    the host side.  ``mesh=None`` is the unsharded single-device variant.
+    """
+    run_lane = lambda dc: engine.run(dc, max_steps=max_steps,
+                                     provision_policy=provision_policy)
+
+    def fn(batch, vm_policies, task_policies):
+        n_pol = vm_policies.shape[0]
+        n_scen = batch.time.shape[0]
+        fused = fuse_grid(batch, vm_policies, task_policies)
+        if mesh is None:
+            out = jax.vmap(run_lane)(fused)
+        else:
+            axis = _lane_axis(mesh)
+            n_dev = mesh.shape[axis]
+            lanes = -(-(n_pol * n_scen) // n_dev) * n_dev
+            padded = pad_batch(fused, lanes)
+            if partitioner == "gspmd":
+                shd = NamedSharding(mesh, P(axis))
+                padded = jax.lax.with_sharding_constraint(padded, shd)
+                out = jax.lax.with_sharding_constraint(
+                    jax.vmap(run_lane)(padded), shd)
+            else:
+                body = jax.vmap(run_lane) if inner == "vmap" \
+                    else partial(jax.lax.map, run_lane)
+                out = compat.shard_map(
+                    body, mesh=mesh, in_specs=(P(axis),),
+                    out_specs=P(axis), check_vma=False)(padded)
+            out = jax.tree_util.tree_map(
+                lambda x: x[:n_pol * n_scen], out)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n_pol, n_scen) + x.shape[1:]), out)
+
+    return jax.jit(fn)
+
+
+def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
+             task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
+             provision_policy: int = FIRST_FIT, mesh=None,
+             sharded: bool | None = None,
+             partitioner: str = "auto") -> DatacenterState:
+    """Scenarios x policy grid as ONE fused, device-sharded batch.
+
+    ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
+    Figure 3 matrix is P=4).  The P policy pairs are broadcast over the B
+    stacked scenarios into a single [P*B] lane axis (``fuse_grid``), run
+    in one flat ``vmap`` — sharded over the 1-D ``mesh`` when ``sharded``
+    is true (default: whenever more than one device is visible, or a
+    ``mesh`` is given; any axis name works) — and reshaped back to a
+    [P, B, ...] final state.  The entire pipeline is one jitted XLA call
+    (``_grid_runner``); ``partitioner`` is as in ``run_sharded``.
+
+    Every lane is bit-for-bit equal to the corresponding single
+    ``engine.run`` (and to ``run_grid_nested``): fusing and sharding
+    change the schedule, never the per-lane math.
+    """
+    vm_policies = jnp.asarray(vm_policies, jnp.int32)
+    task_policies = jnp.asarray(task_policies, jnp.int32)
+    if vm_policies.shape != task_policies.shape:
+        raise ValueError("vm_policies and task_policies must pair up: "
+                         f"{vm_policies.shape} vs {task_policies.shape}")
+    if sharded is None:
+        sharded = mesh is not None or jax.device_count() > 1
+    if sharded and mesh is None:
+        mesh = compat.make_mesh("sweep")
+    if not sharded:
+        mesh = None
+    return _grid_runner(mesh, max_steps, provision_policy,
+                        _resolve_partitioner(partitioner),
+                        _default_inner())(batch, vm_policies,
+                                          task_policies)
+
+
 def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
     """The paper's full 2x2 (vm_policy, task_policy) matrix, paired."""
     vm_p = jnp.array([0, 0, 1, 1], jnp.int32)
@@ -164,11 +449,15 @@ def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
 # Reductions
 # ---------------------------------------------------------------------------
 class SweepSummary(NamedTuple):
-    """Per-scenario scalars over the trailing entity axes."""
+    """Per-scenario scalars over the trailing entity axes.
+
+    Leaf shape = the batch shape of the reduced state: [B] after
+    ``run_batch``, [P, B] after ``run_grid``.
+    """
     n_done: jnp.ndarray          # i32[...]  completed cloudlets
-    makespan: jnp.ndarray        # f32[...]  latest completion (0 if none)
-    mean_response: jnp.ndarray   # f32[...]  mean finish - submit over done
-    total_cost: jnp.ndarray      # f32[...]  market bill
+    makespan: jnp.ndarray        # f32[...]  latest completion, s (0 if none)
+    mean_response: jnp.ndarray   # f32[...]  mean finish - submit, s, over done
+    total_cost: jnp.ndarray      # f32[...]  market bill, $
 
 
 def summarize_batch(final: DatacenterState) -> SweepSummary:

@@ -19,13 +19,17 @@ Covered semantics (all four Figure 3 policy combinations):
   * the discrete-event loop: next event = earliest completion / cloudlet
     arrival / VM arrival; piecewise-constant rates between events.
 
-The completion-snap rule matches the engine bit-of-band
+The completion-snap band matches the engine's
 (``finish_dt <= dt * (1 + 1e-5) + 1e-9``) so simultaneous completions
 collapse into the same event on both sides.
 
 Only FIRST_FIT provisioning is implemented — the conformance harness
 pins the engine's default policy; other policies are exercised by their
 own unit tests.
+
+Units match the dense state: times in seconds (f64 here — the engine
+runs f32, hence the 1e-3 s conformance tolerance), cloudlet lengths and
+remaining work in MI, rates in MIPS, RAM/BW/storage in MB.
 """
 from __future__ import annotations
 
@@ -92,13 +96,18 @@ class Cloudlet:
 
 @dataclasses.dataclass
 class OracleResult:
-    """Per-slot outcome arrays aligned with the dense state layout."""
-    start_time: np.ndarray          # f64[C]  (-1 if never started)
-    finish_time: np.ndarray         # f64[C]  (INF if not done)
-    cl_state: np.ndarray            # i32[C]
-    vm_state: np.ndarray            # i32[V]
+    """Per-slot outcome arrays aligned with the dense state layout.
+
+    C/V are the *slot* counts of the source dense state (padding slots
+    included, reported as EMPTY/never-started), so every array compares
+    index-for-index against the engine's final state.
+    """
+    start_time: np.ndarray          # f64[C] seconds (-1 if never started)
+    finish_time: np.ndarray         # f64[C] seconds (INF if not done)
+    cl_state: np.ndarray            # i32[C] CL_* codes
+    vm_state: np.ndarray            # i32[V] VM_* codes
     vm_host: np.ndarray             # i32[V]  (-1 if unplaced)
-    time: float                     # clock at quiescence
+    time: float                     # clock at quiescence (seconds)
     n_events: int                   # events processed
 
     @property
@@ -324,5 +333,10 @@ class ReferenceSimulator:
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:
-    """One-call oracle replay of a dense ``DatacenterState`` scenario."""
+    """One-call oracle replay of a dense ``DatacenterState`` scenario.
+
+    ``dc`` must be unbatched (leaves [H]/[V]/[C]); replay a batched sweep
+    lane by first indexing it out, e.g. ``jax.tree.map(lambda x: x[i],
+    batch)``.  Returns an ``OracleResult`` aligned with ``dc``'s slots.
+    """
     return ReferenceSimulator.from_dense(dc).run(max_events=max_events)

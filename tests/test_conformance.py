@@ -270,6 +270,37 @@ def test_sweep_grid_reproduces_fig3_in_one_call():
     np.testing.assert_allclose(np.asarray(summ.makespan), 4.0, rtol=1e-6)
 
 
+def test_sweep_grid_fused_equals_nested_bitwise():
+    """The fused single-vmap run_grid == the PR-1 nested-vmap grid, and
+    both == per-scenario single runs, bit-for-bit (the fused/sharded
+    rewrite may change the schedule but never the per-lane math)."""
+    dcs = [make_scenario(seed, vp, tp)
+           for seed in (0, 4, 7) for vp, tp in POLICY_GRID[:2]]
+    batch = sweep.stack_scenarios(dcs)
+    vm_p, task_p = sweep.policy_grid()
+    fused = sweep.run_grid(batch, vm_p, task_p, max_steps=256,
+                           sharded=False)
+    nested = sweep.run_grid_nested(batch, vm_p, task_p, max_steps=256)
+    for name in ("finish_time", "start_time", "remaining", "state"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.cloudlets, name)),
+            np.asarray(getattr(nested.cloudlets, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(fused.vms.host),
+                                  np.asarray(nested.vms.host))
+    np.testing.assert_array_equal(np.asarray(fused.time),
+                                  np.asarray(nested.time))
+    # spot-check two cells against true single runs under that policy
+    vm_np, task_np = np.asarray(vm_p), np.asarray(task_p)
+    for p, b in ((1, 0), (3, 5)):
+        cell = dataclasses.replace(dcs[b], vm_policy=jnp.int32(vm_np[p]),
+                                   task_policy=jnp.int32(task_np[p]))
+        single = run(cell, max_steps=256)
+        nc = np.asarray(single.cloudlets.finish_time).shape[0]
+        np.testing.assert_array_equal(
+            np.asarray(single.cloudlets.finish_time),
+            np.asarray(fused.cloudlets.finish_time)[p, b][:nc])
+
+
 def test_sweep_ragged_padding_is_inert():
     """Scenarios of different sizes pad to a common shape without any
     effect on the real slots' results."""

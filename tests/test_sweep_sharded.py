@@ -1,0 +1,194 @@
+"""Fused + device-sharded sweep path: bit-for-bit vs single-device runs.
+
+The contract under test: ``sweep.run_grid`` flattens policies x scenarios
+into one lane axis, optionally shards it over a 1-D device mesh, and
+every lane remains bit-for-bit identical to a plain ``engine.run`` of
+that (scenario, policy) cell.  Multi-device coverage runs in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+(the container exposes a single real device) unless the hosting process
+already sees several devices — CI runs this file both ways.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from test_conformance import POLICY_GRID, make_scenario
+
+from repro import compat
+from repro.core import broker as B
+from repro.core import experiments as E
+from repro.core import state as S
+from repro.core import sweep
+from repro.core.engine import run
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_pad_batch_lanes_are_inert():
+    """Inert padding lanes quiesce at t=0 and leave real lanes untouched."""
+    dcs = [make_scenario(s, *POLICY_GRID[s % 4]) for s in range(3)]
+    batch = sweep.stack_scenarios(dcs)
+    padded = sweep.pad_batch(batch, 7)
+    assert padded.time.shape == (7,)
+    out = sweep.run_batch(padded, max_steps=256)
+    for i, dc in enumerate(dcs):
+        single = run(dc, max_steps=256)
+        for name in ("finish_time", "start_time", "remaining", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.cloudlets, name)),
+                np.asarray(getattr(out.cloudlets, name))[i],
+                err_msg=f"lane {i} field {name}")
+    # the four padding lanes never see an event
+    assert np.all(np.asarray(out.cloudlets.state)[3:] == S.CL_EMPTY)
+    assert np.all(np.asarray(out.time)[3:] == 0.0)
+    assert np.all(np.asarray(out.acct.cpu_cost)[3:] == 0.0)
+
+
+def test_run_sharded_on_one_device_mesh_is_bitwise():
+    """The shard_map path itself (trivial 1-device mesh) changes nothing."""
+    dcs = [make_scenario(s, *POLICY_GRID[s % 4]) for s in range(3)]
+    batch = sweep.stack_scenarios(dcs)
+    mesh = compat.make_mesh("sweep", jax.devices()[:1])
+    ref = sweep.run_batch(batch, max_steps=256)
+    for partitioner in ("gspmd", "shard_map"):
+        out = sweep.run_sharded(batch, mesh=mesh, max_steps=256,
+                                partitioner=partitioner)
+        for name in ("finish_time", "start_time", "remaining", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out.cloudlets, name)),
+                np.asarray(getattr(ref.cloudlets, name)),
+                err_msg=f"{partitioner} {name}")
+        np.testing.assert_array_equal(np.asarray(out.time),
+                                      np.asarray(ref.time))
+
+
+_TWO_DEVICE_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() >= 2, jax.devices()
+    from test_conformance import make_scenario, POLICY_GRID
+    from repro.core import sweep
+    from repro.core.engine import run
+
+    dcs = [make_scenario(s, *POLICY_GRID[s % 4]) for s in range(3)]
+    batch = sweep.stack_scenarios(dcs)
+    vm_p, task_p = sweep.policy_grid()
+    sharded = sweep.run_grid(batch, vm_p, task_p, max_steps=192)
+    single = sweep.run_grid(batch, vm_p, task_p, max_steps=192,
+                            sharded=False)
+    shmap = sweep.run_grid(batch, vm_p, task_p, max_steps=192,
+                           partitioner="shard_map")
+    for name in ("finish_time", "start_time", "remaining", "state"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sharded.cloudlets, name)),
+            np.asarray(getattr(single.cloudlets, name)), err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(getattr(shmap.cloudlets, name)),
+            np.asarray(getattr(single.cloudlets, name)),
+            err_msg="shard_map " + name)
+    np.testing.assert_array_equal(np.asarray(sharded.time),
+                                  np.asarray(single.time))
+    # odd lane count exercises inert mesh padding (3 lanes over 2 devices)
+    odd = sweep.run_sharded(sweep.fuse_grid(batch, vm_p[:1], task_p[:1]),
+                            max_steps=192)
+    np.testing.assert_array_equal(
+        np.asarray(odd.cloudlets.finish_time),
+        np.asarray(single.cloudlets.finish_time)[0])
+    # ground truth: scenario i's own policies sit at grid row i % 4, so
+    # lane [i % 4, i] must equal the plain single run of dcs[i]
+    for i, dc in enumerate(dcs):
+        ref = run(dc, max_steps=192)
+        np.testing.assert_array_equal(
+            np.asarray(ref.cloudlets.finish_time),
+            np.asarray(sharded.cloudlets.finish_time)[i % 4, i])
+    print("SHARDED_BITWISE_OK")
+""")
+
+
+def test_sharded_two_devices_matches_single_device_bitwise():
+    """run_grid over a (forced) 2-device host == single-device, bit-for-bit.
+
+    When the hosting process already sees >1 device (CI's forced-host job)
+    the check runs inline; otherwise it re-launches in a subprocess with
+    ``--xla_force_host_platform_device_count=2``.
+    """
+    if jax.device_count() >= 2:
+        exec(compile(_TWO_DEVICE_CHECK, "<two-device-check>", "exec"), {})
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip(),
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)).strip(
+                os.pathsep),
+    )
+    proc = subprocess.run([sys.executable, "-c", _TWO_DEVICE_CHECK],
+                          capture_output=True, text=True, timeout=560,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED_BITWISE_OK" in proc.stdout
+
+
+def test_federation_study_cells_match_single_runs():
+    """Every (policy, provider) cell of run_study == its own engine.run."""
+    providers = [
+        E.Provider(S.make_uniform_hosts(8, pes=2),
+                   S.make_market(0.05, 1e-3, 1e-4, 2e-3)),
+        E.Provider(S.make_uniform_hosts(16, pes=2),
+                   S.make_market(0.01, 1e-3, 1e-4, 2e-3)),
+    ]
+    fleets = [
+        E.UserFleet((B.VmSpec(count=8, pes=1, ram=256.0),),
+                    B.WaveSpec(waves=3, length_mi=90_000.0, period=60.0)),
+        E.UserFleet((B.VmSpec(count=12, pes=1, ram=256.0),),
+                    B.WaveSpec(waves=2, length_mi=120_000.0, period=90.0)),
+        E.UserFleet((B.VmSpec(count=4, pes=2, ram=256.0),),
+                    B.WaveSpec(waves=4, length_mi=60_000.0, period=30.0)),
+    ]
+    vm_p, task_p = sweep.policy_grid()
+    study = E.run_study(providers, fleets, vm_p, task_p, max_steps=1024,
+                        reserve_pes=False)
+
+    assign = np.asarray(study.assignment)
+    assert assign.shape == (3,)
+    assert np.all((assign >= -1) & (assign < 2))
+    assert np.asarray(study.summary.n_done).shape == (4, 2)
+
+    import dataclasses
+    import jax.numpy as jnp
+    dcs, assignment, _ = E.build_study(providers, fleets,
+                                       reserve_pes=False)
+    np.testing.assert_array_equal(np.asarray(assignment), assign)
+    vm_np, task_np = np.asarray(vm_p), np.asarray(task_p)
+    for p in range(4):
+        for d, dc in enumerate(dcs):
+            cell = dataclasses.replace(
+                dc, vm_policy=jnp.int32(vm_np[p]),
+                task_policy=jnp.int32(task_np[p]))
+            ref = run(cell, max_steps=1024)
+            nc = np.asarray(ref.cloudlets.finish_time).shape[0]
+            np.testing.assert_array_equal(
+                np.asarray(ref.cloudlets.finish_time),
+                np.asarray(study.final.cloudlets.finish_time)[p, d][:nc],
+                err_msg=f"cell policy={p} dc={d}")
+    # a federation is work-conserving: every policy completes the same work
+    assert np.all(np.asarray(study.fed_done) == int(study.fed_done[0]))
+
+
+def test_fleet_demand_aggregates():
+    """fleet_demand sums PEs/RAM/storage and maxes the MIPS floor."""
+    fleet = E.UserFleet(
+        (B.VmSpec(count=2, pes=2, mips=500.0, ram=256.0, size=1000.0),
+         B.VmSpec(count=1, pes=1, mips=1000.0, ram=512.0, size=2000.0)),
+        B.WaveSpec(waves=1))
+    d = E.fleet_demand([fleet])
+    assert float(d.pes[0]) == 5.0
+    assert float(d.mips[0]) == 1000.0
+    assert float(d.ram[0]) == 1024.0
+    assert float(d.storage[0]) == 4000.0
