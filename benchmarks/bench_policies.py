@@ -122,6 +122,40 @@ def bench_sweep(batch=64, n_hosts=64, n_vms=16, waves=4, max_steps=512):
     }
 
 
+def bench_energy(n_hosts=10_000, n_vms=50, waves=10):
+    """Energy-accounting overhead: the Fig 8 run with a SPECpower model
+    attached vs the zero-watt default.  The accrual is a segment-sum +
+    curve gather per event — it should be lost in the step's noise."""
+    import jax
+
+    from repro.core import broker as B, energy, state as S
+    from repro.core.engine import run
+
+    idle, peak, curve = energy.normalize_watts(energy.SPEC_G5_WATTS)
+    out = {}
+    for name, kw in (("zero_watt", {}),
+                     ("specpower", dict(idle_w=idle, peak_w=peak,
+                                        power_curve=curve))):
+        hosts = S.make_uniform_hosts(n_hosts, **kw)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(waves=waves,
+                                             length_mi=1_200_000.0,
+                                             period=600.0))
+        dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                               task_policy=S.TIME_SHARED, reserve_pes=True)
+        jax.block_until_ready(run(dc, max_steps=8192).time)   # warm
+        t0 = time.perf_counter()
+        final = run(dc, max_steps=8192)
+        jax.block_until_ready(final.time)
+        out[name] = {
+            "wall_s": time.perf_counter() - t0,
+            "energy_mj": float(np.asarray(
+                energy.energy_total_j(final))) / 1e6,
+        }
+    return out
+
+
 def bench_sharded(batch=16, n_hosts=32, n_vms=8, waves=3, max_steps=256):
     """Fused grid on one device vs sharded over every visible device.
 
@@ -203,6 +237,11 @@ def main():
     print(f"policy_sweep_batched,{sw['batched_s']*1e6:.0f},"
           f"cells={sw['cells']}_speedup_vs_sequential={sw['speedup']:.1f}x"
           f"_all_done={sw['all_done']}")
+    be = bench_energy()
+    print(f"energy_accounting,{be['specpower']['wall_s']*1e6:.0f},"
+          f"zero_watt={be['zero_watt']['wall_s']*1e6:.0f}us"
+          f"_overhead={be['specpower']['wall_s'] / max(be['zero_watt']['wall_s'], 1e-9):.2f}x"
+          f"_fleet_energy={be['specpower']['energy_mj']:.1f}MJ")
     # the sharded measurement needs a multi-device backend, which must be
     # forced before jax initializes -> fresh subprocess
     env = dict(

@@ -2,6 +2,7 @@
 
 Layer map (paper §3/§4 -> modules):
   state.py         entity model (Datacenter/Host/VM/Cloudlet/Market)
+  energy.py        host power models + exact event-timeline energy (J)
   segments.py      grouped-segment primitives (ranks/cumsums/mins per run)
   scheduling.py    two-level space/time-shared shares (Fig. 3 2x2)
   sweep.py         batched scenario/policy sweeps (vmap over stacked states)
@@ -11,13 +12,17 @@ Layer map (paper §3/§4 -> modules):
   cis.py           Cloud Information Service registry + match-making
   market.py        §3.3 cost model: quotes, bills, pricing policies
   workloads.py     arrival processes + LM-fleet profiles (dry-run linked)
-  telemetry.py     trace reducers (completion curves, utilization, gantt)
+  telemetry.py     trace reducers (completion curves, utilization/watts
+                   timelines, gantt, energy summaries)
   federation.py    shard_map multi-datacenter simulation over a mesh
+  experiments.py   federated policy studies (CIS routing x sweep grid)
 """
 from repro.core import (  # noqa: F401
     broker,
     cis,
+    energy,
     engine,
+    experiments,
     federation,
     market,
     provisioning,

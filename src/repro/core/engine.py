@@ -33,7 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import scheduling
+from repro.core import energy, scheduling
 from repro.core.provisioning import FIRST_FIT, provision_pending
 from repro.core.state import (
     CL_CREATED,
@@ -54,6 +54,7 @@ class StepRecord(NamedTuple):
     n_running: jnp.ndarray     # i32[] cloudlets with rate > 0 during step
     n_done: jnp.ndarray        # i32[] cumulative completed cloudlets
     utilization: jnp.ndarray   # f32[] consumed MIPS / total host MIPS
+    watts: jnp.ndarray         # f32[] fleet power drawn *during* the step
     active: jnp.ndarray        # bool[] this step advanced the simulation
 
 
@@ -96,7 +97,9 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
     places VMs whose submission is due, (2) ``updateVMsProcessing`` — the
     two-level share computation — fixes every rate (MIPS), (3) the clock
     jumps ``dt`` seconds to the earliest completion/arrival, (4) progress
-    (rate * dt MI), completions, and market costs ($) are committed.
+    (rate * dt MI), completions, market costs ($), and per-host energy
+    (watts * dt J — rates are constant over the interval, so exact) are
+    committed.
     """
     dc = provision_pending(dc, provision_policy)
     rates = scheduling.cloudlet_rates(dc)
@@ -131,8 +134,17 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
                                  0.0))
     bw_cost = dc.acct.bw_cost + dc.rates.cost_per_bw * moved_mb
 
+    # ---- energy accounting (core/energy.py) ------------------------------
+    # Rates are constant on [time, time+dt), so power is too: the exact
+    # integral of the piecewise-constant power timeline is watts * dt per
+    # event (the trapezoidal rule with equal endpoints).  At quiescence
+    # dt == 0, so energy_j is a bit-exact fixed point like everything else.
+    host_watts = energy.step_power(dc, rates)              # f32[H]
+    energy_j = dc.hosts.energy_j + host_watts * dt
+
     new = dataclasses.replace(
         dc,
+        hosts=dataclasses.replace(dc.hosts, energy_j=energy_j),
         cloudlets=dataclasses.replace(
             cl, remaining=remaining, start_time=start_time,
             finish_time=finish_time, state=state),
@@ -147,6 +159,7 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
         n_running=jnp.sum((rates > 0.0).astype(jnp.int32)),
         n_done=jnp.sum((state == CL_DONE).astype(jnp.int32)),
         utilization=jnp.sum(rates) / jnp.maximum(host_mips, 1e-30),
+        watts=jnp.sum(host_watts),
         active=active,
     )
     return new, rec

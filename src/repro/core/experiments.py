@@ -72,6 +72,7 @@ class FederationStudy(NamedTuple):
     fed_makespan: jnp.ndarray    # f32[P] latest completion across the federation (s)
     fed_cost: jnp.ndarray        # f32[P] summed market bill across providers ($)
     fed_done: jnp.ndarray        # i32[P] completed cloudlets across providers
+    fed_energy_j: jnp.ndarray    # f32[P] summed host energy across providers (J)
 
 
 def fleet_demand(fleets: Sequence[UserFleet]) -> F.UserDemand:
@@ -187,4 +188,5 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
         fed_makespan=jnp.max(summary.makespan, axis=-1),
         fed_cost=jnp.sum(summary.total_cost, axis=-1),
         fed_done=jnp.sum(summary.n_done, axis=-1),
+        fed_energy_j=jnp.sum(summary.energy_j, axis=-1),
     )

@@ -12,6 +12,11 @@ Policies provided (all pure, jit-able, extensible by passing a scoring fn):
   * BEST_FIT    — feasible host with least leftover RAM (tighter packing).
   * WORST_FIT   — feasible host with most free RAM (load spreading).
   * ROUND_ROBIN — first-fit starting after the previously chosen host.
+  * MOST_FULL   — energy-aware consolidation: the feasible host with the
+    highest RAM *fraction* in use.  Packs VMs onto already-loaded hosts
+    so the rest of the fleet idles at its curve floor — the power-aware
+    provisioning flagship of the CloudSim line (arXiv:0907.4878); pair
+    with a power model from ``core/energy.py`` to measure the saving.
 
 Placement of a *batch* of pending VMs is inherently sequential under FCFS
 semantics (earlier VMs consume capacity seen by later ones), so the faithful
@@ -41,9 +46,10 @@ FIRST_FIT = 0
 BEST_FIT = 1
 WORST_FIT = 2
 ROUND_ROBIN = 3
+MOST_FULL = 4
 
 __all__ = ["FIRST_FIT", "BEST_FIT", "WORST_FIT", "ROUND_ROBIN",
-           "provision_pending", "feasible_hosts"]
+           "MOST_FULL", "provision_pending", "feasible_hosts"]
 
 
 def feasible_hosts(dc: DatacenterState, free_ram, free_bw, free_storage,
@@ -68,8 +74,8 @@ def feasible_hosts(dc: DatacenterState, free_ram, free_bw, free_storage,
             & pes_ok)
 
 
-def _choose(feas: jnp.ndarray, free_ram: jnp.ndarray, policy,
-            rr_cursor) -> jnp.ndarray:
+def _choose(feas: jnp.ndarray, free_ram: jnp.ndarray, total_ram: jnp.ndarray,
+            policy, rr_cursor) -> jnp.ndarray:
     """i32[] — chosen host index (or -1) under the provisioning policy."""
     nh = feas.shape[0]
     idx = jnp.arange(nh, dtype=jnp.int32)
@@ -83,11 +89,16 @@ def _choose(feas: jnp.ndarray, free_ram: jnp.ndarray, policy,
     # round robin: first feasible index >= cursor, else wrap to first
     after = feas & (idx >= rr_cursor)
     rr = jnp.where(jnp.any(after), jnp.argmax(after), first).astype(jnp.int32)
+    # most-full: highest RAM fraction in use; ties break to the lowest
+    # index (argmax), so an all-idle fleet degrades to first-fit
+    frac_used = 1.0 - free_ram / jnp.maximum(total_ram, 1e-30)
+    full = jnp.argmax(jnp.where(feas, frac_used, -big)).astype(jnp.int32)
 
     pick = jnp.select(
         [policy == FIRST_FIT, policy == BEST_FIT,
-         policy == WORST_FIT, policy == ROUND_ROBIN],
-        [first, best, worst, rr], first)
+         policy == WORST_FIT, policy == ROUND_ROBIN,
+         policy == MOST_FULL],
+        [first, best, worst, rr, full], first)
     return jnp.where(any_ok, pick, none)
 
 
@@ -128,7 +139,7 @@ def provision_pending(dc: DatacenterState, policy: jnp.ndarray | int = FIRST_FIT
             dc, c.free_ram, c.free_bw, c.free_storage, c.free_pes,
             ram=vms.ram[v], bw=vms.bw[v], size=vms.size[v],
             req_pes=vms.req_pes[v], req_mips=vms.req_mips[v])
-        h = _choose(feas, c.free_ram, policy, c.rr_cursor)
+        h = _choose(feas, c.free_ram, hosts.ram, policy, c.rr_cursor)
         ok = is_due & (h >= 0)
         hc = jnp.clip(h, 0, None)
         take = lambda arr, amt: arr.at[hc].add(jnp.where(ok, -amt, 0.0))

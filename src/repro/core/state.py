@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import make_power_model
 from repro.core.segments import segment_rank
 
 # ---------------------------------------------------------------------------
@@ -64,6 +65,14 @@ class HostState:
     free_bw: jnp.ndarray        # f32[H]
     free_storage: jnp.ndarray   # f32[H]
     free_pes: jnp.ndarray       # f32[H]  (reserved only under space-shared placement)
+    # power model (core/energy.py): watts at 0%/100% utilization and the
+    # normalized utilization->power curve (K_CURVE control points at
+    # utilizations 0, 1/(K-1), ..., 1).  Zero watts by default, so energy
+    # accounting is inert until a model is attached (with_power_model).
+    idle_w: jnp.ndarray         # f32[H]  watts at utilization 0
+    peak_w: jnp.ndarray         # f32[H]  watts at utilization 1
+    power_curve: jnp.ndarray    # f32[H, K_CURVE] normalized curve in [0,1]
+    energy_j: jnp.ndarray       # f32[H]  joules accrued by engine.step
     valid: jnp.ndarray          # bool[H]
 
     @property
@@ -150,28 +159,39 @@ class DatacenterState:
 # ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
-def make_hosts(num_pes, mips_per_pe, ram, bw, storage) -> HostState:
-    """Build a host block from per-host sequences (python/numpy)."""
+def make_hosts(num_pes, mips_per_pe, ram, bw, storage, *, idle_w=0.0,
+               peak_w=0.0, power_curve=None) -> HostState:
+    """Build a host block from per-host sequences (python/numpy).
+
+    ``idle_w``/``peak_w``/``power_curve`` attach a utilization→power model
+    (see ``core/energy.py``); the zero-watt default keeps energy
+    accounting inert for scenarios that don't study it.
+    """
     num_pes = jnp.asarray(num_pes, jnp.int32)
     h = num_pes.shape[0]
     f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (h,))
     ram, bw, storage = f(ram), f(bw), f(storage)
+    idle, peak, curve = make_power_model(h, idle_w, peak_w, power_curve)
     return HostState(
         num_pes=num_pes,
         mips_per_pe=f(mips_per_pe),
         ram=ram, bw=bw, storage=storage,
         free_ram=ram, free_bw=bw, free_storage=storage,
         free_pes=num_pes.astype(jnp.float32),
+        idle_w=idle, peak_w=peak, power_curve=curve,
+        energy_j=jnp.zeros((h,), jnp.float32),
         valid=jnp.ones((h,), bool),
     )
 
 
 def make_uniform_hosts(n, *, pes=1, mips=1000.0, ram=1024.0, bw=1000.0,
-                       storage=2_000_000.0) -> HostState:
+                       storage=2_000_000.0, idle_w=0.0, peak_w=0.0,
+                       power_curve=None) -> HostState:
     """The paper's 5 test configuration: 1 core @1000 MIPS, 1GB RAM, 2TB."""
     return make_hosts(np.full(n, pes), np.full(n, float(mips)),
                       np.full(n, float(ram)), np.full(n, float(bw)),
-                      np.full(n, float(storage)))
+                      np.full(n, float(storage)), idle_w=idle_w,
+                      peak_w=peak_w, power_curve=power_curve)
 
 
 def make_vms(req_pes, req_mips, ram, bw, size, submit_time=0.0) -> VmState:

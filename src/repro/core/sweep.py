@@ -42,6 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import engine
+from repro.core.energy import energy_total_j
 from repro.core.provisioning import FIRST_FIT
 from repro.core.state import (
     CL_DONE,
@@ -89,6 +90,10 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         free_bw=_pad_axis0(h.free_bw, nh, 0.0),
         free_storage=_pad_axis0(h.free_storage, nh, 0.0),
         free_pes=_pad_axis0(h.free_pes, nh, 0.0),
+        idle_w=_pad_axis0(h.idle_w, nh, 0.0),
+        peak_w=_pad_axis0(h.peak_w, nh, 0.0),
+        power_curve=_pad_axis0(h.power_curve, nh, 0.0),
+        energy_j=_pad_axis0(h.energy_j, nh, 0.0),
         valid=_pad_axis0(h.valid, nh, False),
     )
     vms = dataclasses.replace(
@@ -458,6 +463,7 @@ class SweepSummary(NamedTuple):
     makespan: jnp.ndarray        # f32[...]  latest completion, s (0 if none)
     mean_response: jnp.ndarray   # f32[...]  mean finish - submit, s, over done
     total_cost: jnp.ndarray      # f32[...]  market bill, $
+    energy_j: jnp.ndarray        # f32[...]  total joules over valid hosts
 
 
 def summarize_batch(final: DatacenterState) -> SweepSummary:
@@ -473,4 +479,5 @@ def summarize_batch(final: DatacenterState) -> SweepSummary:
         makespan=makespan,
         mean_response=jnp.sum(resp, axis=-1) / denom,
         total_cost=final.acct.total,
+        energy_j=energy_total_j(final),
     )

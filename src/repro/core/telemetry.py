@@ -14,8 +14,8 @@ import numpy as np
 from repro.core import state as S
 from repro.core.engine import StepRecord
 
-__all__ = ["completion_curve", "utilization_timeline", "gantt",
-           "summarize_trace"]
+__all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
+           "trace_energy_j", "gantt", "summarize_trace"]
 
 
 def completion_curve(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
@@ -30,6 +30,30 @@ def utilization_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
     """(times, fleet MIPS utilization in [0,1]) per event step."""
     act = np.asarray(trace.active)
     return np.asarray(trace.time)[act], np.asarray(trace.utilization)[act]
+
+
+def watts_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, fleet watts) per event step.
+
+    ``watts[i]`` is the power drawn during the interval *ending* at
+    ``times[i]`` (rates — hence power — are constant between events).
+    """
+    act = np.asarray(trace.active)
+    return np.asarray(trace.time)[act], np.asarray(trace.watts)[act]
+
+
+def trace_energy_j(trace: StepRecord) -> float:
+    """Total fleet joules by trapezoidal integration of the watts timeline.
+
+    Power is piecewise-constant between events, so the trapezoid over the
+    event grid is exact: ``sum(watts_i * dt_i)``.  Matches the engine's
+    per-host ``energy_j`` accumulator (summed) up to f32/f64 rounding.
+    """
+    t, w = watts_timeline(trace)
+    if len(t) == 0:
+        return 0.0
+    dt = np.diff(np.concatenate([[0.0], t]))
+    return float(np.sum(np.asarray(w, np.float64) * np.maximum(dt, 0.0)))
 
 
 def gantt(dc: S.DatacenterState) -> Dict[int, list]:
@@ -49,19 +73,27 @@ def gantt(dc: S.DatacenterState) -> Dict[int, list]:
 def summarize_trace(trace: StepRecord) -> Dict[str, float]:
     act = np.asarray(trace.active)
     util = np.asarray(trace.utilization)[act]
+    watts = np.asarray(trace.watts)[act]
     t = np.asarray(trace.time)[act]
     if len(t) == 0:
         return {"events": 0, "makespan": 0.0, "mean_util": 0.0,
-                "peak_util": 0.0}
-    # time-weighted mean utilization over event intervals
+                "peak_util": 0.0, "energy_total_j": 0.0,
+                "mean_watts": 0.0, "peak_watts": 0.0}
+    # time-weighted means over event intervals (interval i ends at t[i])
     if len(t) > 1:
         dt = np.diff(np.concatenate([[0.0], t]))
-        mean_util = float(np.average(util, weights=np.maximum(dt, 1e-12)))
+        weights = np.maximum(dt, 1e-12)
+        mean_util = float(np.average(util, weights=weights))
+        mean_watts = float(np.average(watts, weights=weights))
     else:
         mean_util = float(util[0])
+        mean_watts = float(watts[0])
     return {
         "events": int(act.sum()),
         "makespan": float(t[-1]),
         "mean_util": mean_util,
         "peak_util": float(util.max()),
+        "energy_total_j": trace_energy_j(trace),
+        "mean_watts": mean_watts,
+        "peak_watts": float(watts.max()),
     }

@@ -17,7 +17,11 @@ Covered semantics (all four Figure 3 policy combinations):
     task units by submission rank) and TIME_SHARED (equal fluid share,
     at most one virtual PE per task unit),
   * the discrete-event loop: next event = earliest completion / cloudlet
-    arrival / VM arrival; piecewise-constant rates between events.
+    arrival / VM arrival; piecewise-constant rates between events,
+  * per-host energy accounting: each host's utilization→power curve
+    (idle/peak watts + normalized piecewise-linear curve, mirroring
+    ``core/energy.py`` with independent plain-Python math) integrated
+    over the event timeline in f64 joules.
 
 The completion-snap band matches the engine's
 (``finish_dt <= dt * (1 + 1e-5) + 1e-9``) so simultaneous completions
@@ -61,8 +65,23 @@ class Host:
     free_bw: float = 0.0
     free_storage: float = 0.0
     free_pes: float = 0.0
+    # power model: watts at idle/peak + normalized utilization->power
+    # curve sampled at utilizations 0, 0.1, ..., 1.0 (len 11)
+    idle_w: float = 0.0
+    peak_w: float = 0.0
+    power_curve: tuple = tuple(i / 10.0 for i in range(11))
+    energy_j: float = 0.0           # accrued joules (f64)
     valid: bool = True
     vms: List["Vm"] = dataclasses.field(default_factory=list)
+
+    def power_at(self, util: float) -> float:
+        """Watts at ``util`` in [0,1]: piecewise-linear curve interp."""
+        u = min(max(util, 0.0), 1.0) * (len(self.power_curve) - 1)
+        lo = min(int(u), len(self.power_curve) - 2)
+        frac = u - lo
+        c = (self.power_curve[lo] * (1.0 - frac)
+             + self.power_curve[lo + 1] * frac)
+        return self.idle_w + (self.peak_w - self.idle_w) * c
 
 
 @dataclasses.dataclass
@@ -107,12 +126,17 @@ class OracleResult:
     cl_state: np.ndarray            # i32[C] CL_* codes
     vm_state: np.ndarray            # i32[V] VM_* codes
     vm_host: np.ndarray             # i32[V]  (-1 if unplaced)
+    energy_j: np.ndarray            # f64[H] joules accrued per host slot
     time: float                     # clock at quiescence (seconds)
     n_events: int                   # events processed
 
     @property
     def n_done(self) -> int:
         return int((self.cl_state == CL_DONE).sum())
+
+    @property
+    def energy_total_j(self) -> float:
+        return float(self.energy_j.sum())
 
 
 class ReferenceSimulator:
@@ -122,7 +146,8 @@ class ReferenceSimulator:
                  cloudlets: List[Cloudlet], *, vm_policy: int,
                  task_policy: int, reserve_pes: bool,
                  n_vm_slots: Optional[int] = None,
-                 n_cl_slots: Optional[int] = None):
+                 n_cl_slots: Optional[int] = None,
+                 n_host_slots: Optional[int] = None):
         self.hosts = hosts
         self.vms = vms
         self.cloudlets = cloudlets
@@ -133,6 +158,8 @@ class ReferenceSimulator:
             max((v.index for v in vms), default=-1) + 1)
         self.n_cl_slots = n_cl_slots if n_cl_slots is not None else (
             max((c.index for c in cloudlets), default=-1) + 1)
+        self.n_host_slots = n_host_slots if n_host_slots is not None else (
+            max((h.index for h in hosts), default=-1) + 1)
         self.time = 0.0
         self.n_events = 0
         vm_by_index = {v.index: v for v in vms}
@@ -156,7 +183,12 @@ class ReferenceSimulator:
         hosts = [
             Host(i, int(g(h.num_pes)[i]), float(g(h.mips_per_pe)[i]),
                  float(g(h.ram)[i]), float(g(h.bw)[i]),
-                 float(g(h.storage)[i]), valid=bool(g(h.valid)[i]))
+                 float(g(h.storage)[i]),
+                 idle_w=float(g(h.idle_w)[i]),
+                 peak_w=float(g(h.peak_w)[i]),
+                 power_curve=tuple(
+                     float(x) for x in g(h.power_curve)[i]),
+                 valid=bool(g(h.valid)[i]))
             for i in range(g(h.num_pes).shape[0]) if bool(g(h.valid)[i])
         ]
         v = dc.vms
@@ -179,7 +211,8 @@ class ReferenceSimulator:
                    task_policy=int(g(dc.task_policy)),
                    reserve_pes=bool(int(g(dc.reserve_pes))),
                    n_vm_slots=g(v.req_pes).shape[0],
-                   n_cl_slots=g(c.vm).shape[0])
+                   n_cl_slots=g(c.vm).shape[0],
+                   n_host_slots=g(h.num_pes).shape[0])
 
     # -- provisioning (the VMProvisioner walk) ------------------------------
     def _feasible(self, host: Host, vm: Vm) -> bool:
@@ -288,6 +321,18 @@ class ReferenceSimulator:
                 dt = min(dt, vm.submit_time - self.time)
         return dt
 
+    def _accrue_energy(self, dt: float):
+        """Integrate host power over [time, time+dt) — rates are constant
+        on the interval, so the trapezoidal rule is exact: P(util) * dt."""
+        for host in self.hosts:
+            if not host.valid:
+                continue
+            cap = host.num_pes * host.mips_per_pe
+            consumed = sum(cl.rate for vm in host.vms
+                           for cl in vm.cloudlets)
+            util = consumed / cap if cap > 0.0 else 0.0
+            host.energy_j += host.power_at(util) * dt
+
     def _advance(self, dt: float):
         snap = dt * (1.0 + _SNAP_REL) + _SNAP_ABS
         for cl in self.cloudlets:
@@ -310,6 +355,7 @@ class ReferenceSimulator:
             dt = self._next_dt()
             if dt >= INF:
                 break
+            self._accrue_energy(dt)
             self._advance(dt)
             self.n_events += 1
         return self._result()
@@ -327,9 +373,12 @@ class ReferenceSimulator:
         for vm in self.vms:
             vs[vm.index] = vm.state
             vh[vm.index] = vm.host.index if vm.host is not None else -1
+        en = np.zeros(self.n_host_slots, np.float64)
+        for h in self.hosts:
+            en[h.index] = h.energy_j
         return OracleResult(start_time=st, finish_time=ft, cl_state=cs,
-                           vm_state=vs, vm_host=vh, time=self.time,
-                           n_events=self.n_events)
+                           vm_state=vs, vm_host=vh, energy_j=en,
+                           time=self.time, n_events=self.n_events)
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:

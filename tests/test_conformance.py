@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import scheduling, state as S, sweep
+from repro.core import energy, scheduling, state as S, sweep
 from repro.core.engine import run, run_trace
 from repro.core.provisioning import provision_pending
 from repro.kernels.simstep import simstep_pallas, simstep_ref
@@ -35,14 +35,26 @@ def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
                   per_vm=PER_VM):
     """Randomized heterogeneous scenario under the grouped-slots invariant.
 
-    Magnitudes are kept modest (makespans <~200 s) so f32 clock drift stays
-    well inside the 1e-3 s conformance tolerance.  Some seeds produce VMs
-    no host can admit — provisioning-failure paths are covered too.
+    Magnitudes are kept modest (makespans <~200 s, peak watts <= 1) so f32
+    clock/accumulator drift stays well inside the 1e-3 s / 1e-3 J
+    conformance tolerances.  Some seeds produce VMs no host can admit —
+    provisioning-failure paths are covered too.  Every host carries a
+    power model: random idle/peak watts and a per-host mix of linear and
+    SPECpower-style piecewise curves, so energy conformance exercises
+    both curve variants.
     """
     rng = np.random.default_rng(seed)
+    idle = rng.uniform(0.05, 0.2, n_hosts)
+    g4 = np.asarray(energy.normalize_watts(energy.SPEC_G4_WATTS)[2])
+    lin = np.asarray(energy.linear_curve())
+    curves = np.where(rng.integers(0, 2, n_hosts)[:, None] == 1,
+                      g4[None], lin[None])
     hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
                          rng.choice([250.0, 500.0, 1000.0], n_hosts),
-                         4096.0, 1000.0, 1e6)
+                         4096.0, 1000.0, 1e6,
+                         idle_w=idle,
+                         peak_w=idle + rng.uniform(0.2, 0.8, n_hosts),
+                         power_curve=curves)
     vms = S.make_vms(
         rng.integers(1, 3, n_vms),
         rng.choice([250.0, 500.0, 1000.0], n_vms),
@@ -90,6 +102,11 @@ def test_engine_matches_oracle(vm_policy, task_policy):
                                       res.vm_state, err_msg=str(ctx))
         np.testing.assert_array_equal(np.asarray(out.vms.host),
                                       res.vm_host, err_msg=str(ctx))
+        # per-host energy: the engine's f32 watts*dt accumulator vs the
+        # oracle's independent f64 curve integration, within 1e-3 J
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
 
 
 def test_oracle_matches_fig3_exactly():
@@ -242,6 +259,8 @@ def test_sweep_batch_bitwise_reproduces_single_runs():
                 err_msg=f"scenario {i} field {name}")
         np.testing.assert_array_equal(np.asarray(single.vms.host),
                                       np.asarray(out.vms.host)[i])
+        np.testing.assert_array_equal(np.asarray(single.hosts.energy_j),
+                                      np.asarray(out.hosts.energy_j)[i])
         np.testing.assert_array_equal(np.asarray(single.time),
                                       np.asarray(out.time)[i])
 
@@ -287,9 +306,12 @@ def test_sweep_grid_fused_equals_nested_bitwise():
             np.asarray(getattr(nested.cloudlets, name)), err_msg=name)
     np.testing.assert_array_equal(np.asarray(fused.vms.host),
                                   np.asarray(nested.vms.host))
+    np.testing.assert_array_equal(np.asarray(fused.hosts.energy_j),
+                                  np.asarray(nested.hosts.energy_j))
     np.testing.assert_array_equal(np.asarray(fused.time),
                                   np.asarray(nested.time))
-    # spot-check two cells against true single runs under that policy
+    # spot-check two cells against true single runs under that policy —
+    # including the energy accumulator, bit for bit
     vm_np, task_np = np.asarray(vm_p), np.asarray(task_p)
     for p, b in ((1, 0), (3, 5)):
         cell = dataclasses.replace(dcs[b], vm_policy=jnp.int32(vm_np[p]),
@@ -299,6 +321,10 @@ def test_sweep_grid_fused_equals_nested_bitwise():
         np.testing.assert_array_equal(
             np.asarray(single.cloudlets.finish_time),
             np.asarray(fused.cloudlets.finish_time)[p, b][:nc])
+        nh = np.asarray(single.hosts.energy_j).shape[0]
+        np.testing.assert_array_equal(
+            np.asarray(single.hosts.energy_j),
+            np.asarray(fused.hosts.energy_j)[p, b][:nh])
 
 
 def test_sweep_ragged_padding_is_inert():
@@ -342,3 +368,6 @@ def test_sweep_oracle_cross_check():
         np.testing.assert_allclose(
             np.asarray(out.cloudlets.finish_time, np.float64)[i][done],
             res.finish_time[done], rtol=0, atol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64)[i], res.energy_j,
+            rtol=0, atol=1e-3)

@@ -2,13 +2,16 @@
 the BW/Memory/storage admission chain."""
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import state as S
+from repro.core import energy, state as S
+from repro.core.engine import run
 from repro.core.provisioning import (
     BEST_FIT,
     FIRST_FIT,
+    MOST_FULL,
     ROUND_ROBIN,
     WORST_FIT,
     provision_pending,
@@ -81,6 +84,67 @@ def test_round_robin_rotates():
     vms = S.make_vms([1, 1, 1], 1000.0, 128.0, 1.0, 10.0)
     out = provision_pending(_dc(hosts, vms), ROUND_ROBIN)
     np.testing.assert_array_equal(np.asarray(out.vms.host), [0, 1, 2])
+
+
+def test_most_full_consolidates():
+    """MOST_FULL picks the host with the highest RAM *fraction* in use."""
+    # host1 is half full (512/1024); host0 is less full in fraction terms
+    # (512/4096) despite equal absolute free RAM ordering under BEST_FIT
+    hosts = S.make_hosts([4, 4], [1000.0] * 2, [4096.0, 1024.0],
+                         1000.0, 1e6)
+    seeded = S.make_vms([1, 1], 1000.0, 512.0, 1.0, 10.0)
+    dc = provision_pending(_dc(hosts, seeded), FIRST_FIT)
+    # seed VMs landed first-fit: both on host0 -> fractions 1024/4096 vs 0
+    np.testing.assert_array_equal(np.asarray(dc.vms.host), [0, 0])
+    extra = S.make_vms([1], 1000.0, 256.0, 1.0, 10.0)
+    dc2 = dataclasses.replace(dc, vms=jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b]), dc.vms, extra))
+    out = provision_pending(dc2, MOST_FULL)
+    # host0 is 25% full, host1 0% -> consolidate onto host0
+    assert int(np.asarray(out.vms.host)[2]) == 0
+
+
+def test_most_full_on_empty_fleet_is_first_fit():
+    hosts = S.make_uniform_hosts(3, pes=2)
+    vms = S.make_vms([1], 1000.0, 128.0, 1.0, 10.0)
+    out = provision_pending(_dc(hosts, vms), MOST_FULL)
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [0])
+
+
+def test_most_full_saves_energy_vs_spread():
+    """Consolidation strands idle hosts at the curve floor; spreading keeps
+    every host partially busy.  With a *concave* utilization→power curve
+    (real SPECpower ladders rise steeply at low load) the packed placement
+    must burn fewer joules for the same work and the same makespan.
+
+    Note a strictly linear curve would tie: total watts is then
+    ``N*idle + slope * total_utilization``, which is placement-invariant.
+    """
+    concave = np.linspace(0.0, 1.0, energy.K_CURVE) ** 0.25
+    hosts = S.make_uniform_hosts(4, pes=2, mips=1000.0, ram=4096.0,
+                                 idle_w=100.0, peak_w=200.0,
+                                 power_curve=concave)
+    vms = S.make_vms([1, 1, 1, 1], 1000.0, 512.0, 1.0, 10.0)
+    cl = S.make_cloudlets([0, 1, 2, 3], 60_000.0)      # 60 s each, 1 PE
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED, reserve_pes=True)
+    packed = run(dc, max_steps=128, provision_policy=MOST_FULL)
+    spread = run(dc, max_steps=128, provision_policy=ROUND_ROBIN)
+    e_packed = float(np.asarray(energy.energy_total_j(packed)))
+    e_spread = float(np.asarray(energy.energy_total_j(spread)))
+    # same completed work, same 60 s makespan either way...
+    assert np.all(np.asarray(packed.cloudlets.state) == S.CL_DONE)
+    assert np.all(np.asarray(spread.cloudlets.state) == S.CL_DONE)
+    np.testing.assert_allclose(np.asarray(packed.time), 60.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(spread.time), 60.0, rtol=1e-6)
+    # ...but packing fills 2 hosts and leaves 2 at the idle floor
+    assert np.unique(np.asarray(packed.vms.host)).size == 2
+    assert np.unique(np.asarray(spread.vms.host)).size == 4
+    # packed: 2 x 200 W + 2 x 100 W; spread: 4 x (100 + 100*c(0.5)) W
+    # with c(0.5) ~ 0.84 -- consolidation wins by ~8 kJ over 60 s
+    assert e_packed < e_spread
+    np.testing.assert_allclose(e_packed, (2 * 200.0 + 2 * 100.0) * 60.0,
+                               rtol=1e-5)
 
 
 def test_mips_floor_respected():

@@ -63,6 +63,9 @@ def test_run_sharded_on_one_device_mesh_is_bitwise():
                 np.asarray(getattr(out.cloudlets, name)),
                 np.asarray(getattr(ref.cloudlets, name)),
                 err_msg=f"{partitioner} {name}")
+        np.testing.assert_array_equal(np.asarray(out.hosts.energy_j),
+                                      np.asarray(ref.hosts.energy_j),
+                                      err_msg=f"{partitioner} energy_j")
         np.testing.assert_array_equal(np.asarray(out.time),
                                       np.asarray(ref.time))
 
@@ -90,6 +93,13 @@ _TWO_DEVICE_CHECK = textwrap.dedent("""
             np.asarray(getattr(shmap.cloudlets, name)),
             np.asarray(getattr(single.cloudlets, name)),
             err_msg="shard_map " + name)
+    # energy cells: bit-for-bit equal to single-device under BOTH partitioners
+    np.testing.assert_array_equal(np.asarray(sharded.hosts.energy_j),
+                                  np.asarray(single.hosts.energy_j),
+                                  err_msg="gspmd energy_j")
+    np.testing.assert_array_equal(np.asarray(shmap.hosts.energy_j),
+                                  np.asarray(single.hosts.energy_j),
+                                  err_msg="shard_map energy_j")
     np.testing.assert_array_equal(np.asarray(sharded.time),
                                   np.asarray(single.time))
     # odd lane count exercises inert mesh padding (3 lanes over 2 devices)
@@ -105,6 +115,9 @@ _TWO_DEVICE_CHECK = textwrap.dedent("""
         np.testing.assert_array_equal(
             np.asarray(ref.cloudlets.finish_time),
             np.asarray(sharded.cloudlets.finish_time)[i % 4, i])
+        np.testing.assert_array_equal(
+            np.asarray(ref.hosts.energy_j),
+            np.asarray(sharded.hosts.energy_j)[i % 4, i])
     print("SHARDED_BITWISE_OK")
 """)
 
@@ -179,6 +192,10 @@ def test_federation_study_cells_match_single_runs():
                 err_msg=f"cell policy={p} dc={d}")
     # a federation is work-conserving: every policy completes the same work
     assert np.all(np.asarray(study.fed_done) == int(study.fed_done[0]))
+    # fed_energy_j reduces the per-cell summary (zero here: no power model)
+    np.testing.assert_allclose(
+        np.asarray(study.fed_energy_j),
+        np.asarray(study.summary.energy_j).sum(-1), rtol=1e-6)
 
 
 def test_fleet_demand_aggregates():

@@ -1,0 +1,121 @@
+"""Telemetry reducers: trace curves, Gantt extraction, and the energy
+summaries — plus trace-vs-state energy consistency (the trapezoidal
+integral of the watts timeline must match the engine's per-host joule
+accumulator)."""
+import numpy as np
+
+from repro.core import state as S
+from repro.core import energy, telemetry as T
+from repro.core.engine import run_trace
+
+
+def fig3_scenario(*, idle_w=10.0, peak_w=50.0, curve=None,
+                  vm_policy=S.SPACE_SHARED, task_policy=S.SPACE_SHARED):
+    """The paper's Figure 3 micro-scenario with a power model attached."""
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=idle_w, peak_w=peak_w, power_curve=curve)
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+    return S.make_datacenter(hosts, vms, cl, vm_policy=vm_policy,
+                             task_policy=task_policy, reserve_pes=False)
+
+
+def test_completion_curve_is_monotone_and_complete():
+    final, trace = run_trace(fig3_scenario(), num_steps=32)
+    t, done = T.completion_curve(trace)
+    assert len(t) == 4                      # Fig 3(a): events at 1,2,3,4 s
+    np.testing.assert_allclose(t, [1.0, 2.0, 3.0, 4.0], rtol=1e-6)
+    np.testing.assert_array_equal(done, [2, 4, 6, 8])
+    assert np.all(np.diff(done) >= 0)
+
+
+def test_utilization_timeline_full_then_empty():
+    _, trace = run_trace(fig3_scenario(), num_steps=32)
+    t, util = T.utilization_timeline(trace)
+    # both cores busy for the whole schedule under space/space
+    np.testing.assert_allclose(util, 1.0, rtol=1e-6)
+
+
+def test_watts_timeline_linear_curve():
+    _, trace = run_trace(fig3_scenario(idle_w=10.0, peak_w=50.0),
+                         num_steps=32)
+    t, w = T.watts_timeline(trace)
+    # utilization 1.0 throughout -> peak watts during every interval
+    np.testing.assert_allclose(w, 50.0, rtol=1e-6)
+
+
+def test_trace_energy_matches_state_accumulator():
+    for vp, tp in ((S.SPACE_SHARED, S.SPACE_SHARED),
+                   (S.TIME_SHARED, S.TIME_SHARED)):
+        final, trace = run_trace(
+            fig3_scenario(vm_policy=vp, task_policy=tp), num_steps=32)
+        state_j = float(np.asarray(energy.energy_total_j(final)))
+        trace_j = T.trace_energy_j(trace)
+        np.testing.assert_allclose(trace_j, state_j, rtol=1e-5)
+        # 2 cores fully busy for 4 s at 50 W -> 200 J on every policy
+        np.testing.assert_allclose(state_j, 200.0, rtol=1e-5)
+
+
+def test_trace_energy_specpower_curve():
+    idle, peak, curve = energy.normalize_watts(energy.SPEC_G4_WATTS)
+    final, trace = run_trace(
+        fig3_scenario(idle_w=idle, peak_w=peak, curve=curve),
+        num_steps=32)
+    # full utilization -> the ladder's peak (117 W) for 4 s
+    np.testing.assert_allclose(
+        float(np.asarray(energy.energy_total_j(final))), 117.0 * 4.0,
+        rtol=1e-5)
+    np.testing.assert_allclose(
+        T.trace_energy_j(trace), 117.0 * 4.0, rtol=1e-5)
+
+
+def test_summarize_trace_fields():
+    _, trace = run_trace(fig3_scenario(), num_steps=32)
+    s = T.summarize_trace(trace)
+    assert s["events"] == 4
+    np.testing.assert_allclose(s["makespan"], 4.0, rtol=1e-6)
+    np.testing.assert_allclose(s["mean_util"], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(s["peak_util"], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(s["energy_total_j"], 200.0, rtol=1e-5)
+    np.testing.assert_allclose(s["mean_watts"], 50.0, rtol=1e-6)
+    np.testing.assert_allclose(s["peak_watts"], 50.0, rtol=1e-6)
+
+
+def test_summarize_trace_empty():
+    """A scenario that never runs anything yields the zero summary."""
+    hosts = S.make_hosts([1], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([4], 100.0, 64.0, 1.0, 10.0)   # 4 PEs: unplaceable
+    cl = S.make_cloudlets([0], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl)
+    _, trace = run_trace(dc, num_steps=8)
+    s = T.summarize_trace(trace)
+    assert s == {"events": 0, "makespan": 0.0, "mean_util": 0.0,
+                 "peak_util": 0.0, "energy_total_j": 0.0,
+                 "mean_watts": 0.0, "peak_watts": 0.0}
+    assert T.trace_energy_j(trace) == 0.0
+
+
+def test_gantt_groups_by_vm():
+    final, _ = run_trace(fig3_scenario(), num_steps=32)
+    g = T.gantt(final)
+    assert sorted(g) == [0, 1]
+    assert len(g[0]) == 4 and len(g[1]) == 4
+    for vm_rows in g.values():
+        for slot, st, ft in vm_rows:
+            assert ft > st >= 0.0
+
+
+def test_idle_hosts_draw_idle_power():
+    """A host with no work still burns idle watts until quiescence."""
+    hosts = S.make_hosts([2, 2], [100.0, 100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=10.0, peak_w=50.0)
+    vms = S.make_vms([2, 2], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 0, 0, 1, 1, 1, 1], 100.0)
+    dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED, reserve_pes=False)
+    final, _ = run_trace(dc, num_steps=32)
+    en = np.asarray(final.hosts.energy_j)
+    # both VMs first-fit onto host 0 (the Fig 3(a) schedule: 4 s makespan
+    # at full utilization); host 1 idles the whole 4 s at 10 W
+    np.testing.assert_allclose(en[0], 50.0 * 4.0, rtol=1e-5)
+    np.testing.assert_allclose(en[1], 10.0 * 4.0, rtol=1e-5)

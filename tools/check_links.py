@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link target that is not an external URL or a pure
+anchor: the referenced file (or directory) must exist relative to the
+linking file (or the repo root as a fallback).  Used by the CI docs job;
+run locally with:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def targets(md: Path):
+    for m in LINK.finditer(md.read_text()):
+        t = m.group(1)
+        if not t.startswith(SKIP):
+            yield t.split("#", 1)[0]
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    broken = []
+    for md in files:
+        for t in targets(md):
+            if not ((md.parent / t).exists() or (ROOT / t).exists()):
+                broken.append(f"{md.relative_to(ROOT)}: {t}")
+    if broken:
+        print("broken intra-repo links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"link check OK: {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
