@@ -11,15 +11,29 @@ axis) vs a sequential loop of single runs.
 across a forced multi-device host platform
 (``--xla_force_host_platform_device_count``) vs the same grid on one
 device.  It re-launches itself in a subprocess because the device count
-is fixed at backend initialization."""
+is fixed at backend initialization.
+
+``bench_migration`` measures the dynamic-event subsystem's overhead: the
+same workload compiled as the static program (``dynamic=False``), as the
+dynamic program with nothing to do, and with a live THRESHOLD migration
+policy actually firing.
+
+Besides the CSV-ish stdout lines, ``main`` writes every measurement to
+``BENCH_policies.json`` at the repo root so the perf trajectory is
+recorded run-over-run (cells/s for single vs gspmd vs shard_map, energy
+accounting overhead, migration overhead)."""
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import time
 
 import numpy as np
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_policies.json")
 
 
 def bench(n_hosts=10_000, n_vms=50, waves=10):
@@ -156,6 +170,59 @@ def bench_energy(n_hosts=10_000, n_vms=50, waves=10):
     return out
 
 
+def bench_migration(n_hosts=256, n_vms=96, waves=4, max_steps=4096):
+    """Dynamic-event subsystem overhead, three compilations of one workload:
+
+      * ``static``      — ``dynamic=False``: the pre-dynamic program,
+      * ``dynamic_idle`` — ``dynamic=True`` with no events and migration
+        OFF: pays the event/migration trace (the extra rates pass) but
+        performs nothing,
+      * ``threshold``   — a MIG_THRESHOLD policy plus host-failure events
+        actually migrating/evicting VMs mid-run.
+    """
+    import jax
+
+    from repro.core import broker as B, state as S
+    from repro.core.engine import run
+
+    def scenario(**kw):
+        hosts = S.make_uniform_hosts(n_hosts, pes=2, ram=2048.0)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(waves=waves,
+                                             length_mi=600_000.0,
+                                             period=300.0))
+        return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                                 task_policy=S.TIME_SHARED,
+                                 reserve_pes=False, **kw)
+
+    fail_events = S.make_events(
+        [200.0, 500.0, 900.0], [S.EV_HOST_FAIL] * 3, [0, 1, 2])
+    cases = {
+        "static": (scenario(), dict(dynamic=False)),
+        "dynamic_idle": (scenario(), dict(dynamic=True)),
+        "threshold": (scenario(events=fail_events,
+                               mig_policy=S.MIG_THRESHOLD,
+                               mig_threshold=0.6), dict(dynamic=True)),
+    }
+    out = {}
+    for name, (dc, kw) in cases.items():
+        jax.block_until_ready(run(dc, max_steps=max_steps, **kw).time)
+        t0 = time.perf_counter()
+        final = run(dc, max_steps=max_steps, **kw)
+        jax.block_until_ready(final.time)
+        out[name] = {
+            "wall_s": time.perf_counter() - t0,
+            "migrations": int(np.asarray(final.mig_count)),
+            "downtime_s": float(np.asarray(final.mig_downtime)),
+            "done": int((np.asarray(final.cloudlets.state) == 2).sum()),
+        }
+    base = max(out["static"]["wall_s"], 1e-9)
+    out["dynamic_idle_overhead"] = out["dynamic_idle"]["wall_s"] / base
+    out["threshold_overhead"] = out["threshold"]["wall_s"] / base
+    return out
+
+
 def bench_sharded(batch=16, n_hosts=32, n_vms=8, waves=3, max_steps=256):
     """Fused grid on one device vs sharded over every visible device.
 
@@ -218,13 +285,16 @@ def _sharded_worker():
           f"_gspmd={sh['gspmd_cells_per_s']:.1f}cells_per_s"
           f"_shard_map={sh['shard_map_cells_per_s']:.1f}cells_per_s"
           f"_best_speedup={sh['speedup']:.2f}x")
+    print("BENCH_SHARDED_JSON:" + json.dumps(sh))
 
 
 def main():
+    results = {}
     print("# Fig 8/9: space vs time shared tasks (10k hosts, 50 VMs, "
           "500 cloudlets)")
     print("name,us_per_call,derived")
     res = bench()
+    results["fig8_fig9"] = res
     sp = res["space"]
     print(f"fig8_space_shared,{sp['wall_s']*1e6:.0f},"
           f"exec_const={sp['exec_min']:.0f}..{sp['exec_max']:.0f}s"
@@ -234,14 +304,24 @@ def main():
     print(f"fig9_time_shared,{tm['wall_s']*1e6:.0f},"
           f"resp_by_wave_s={waves}")
     sw = bench_sweep()
+    results["sweep"] = sw
     print(f"policy_sweep_batched,{sw['batched_s']*1e6:.0f},"
           f"cells={sw['cells']}_speedup_vs_sequential={sw['speedup']:.1f}x"
           f"_all_done={sw['all_done']}")
     be = bench_energy()
+    results["energy"] = be
     print(f"energy_accounting,{be['specpower']['wall_s']*1e6:.0f},"
           f"zero_watt={be['zero_watt']['wall_s']*1e6:.0f}us"
           f"_overhead={be['specpower']['wall_s'] / max(be['zero_watt']['wall_s'], 1e-9):.2f}x"
           f"_fleet_energy={be['specpower']['energy_mj']:.1f}MJ")
+    bm = bench_migration()
+    results["migration"] = bm
+    print(f"migration_events,{bm['threshold']['wall_s']*1e6:.0f},"
+          f"static={bm['static']['wall_s']*1e6:.0f}us"
+          f"_idle_overhead={bm['dynamic_idle_overhead']:.2f}x"
+          f"_threshold_overhead={bm['threshold_overhead']:.2f}x"
+          f"_migrations={bm['threshold']['migrations']}"
+          f"_downtime={bm['threshold']['downtime_s']:.1f}s")
     # the sharded measurement needs a multi-device backend, which must be
     # forced before jax initializes -> fresh subprocess
     env = dict(
@@ -254,13 +334,29 @@ def main():
             env=env, capture_output=True, text=True, timeout=900)
     except subprocess.TimeoutExpired:
         print("policy_sweep_sharded,error,worker_timeout_900s")
-        return
-    if proc.returncode == 0:
-        print(proc.stdout.strip())
-    else:
+        proc = None
+    if proc is not None and proc.returncode == 0:
+        for line in proc.stdout.splitlines():
+            if line.startswith("BENCH_SHARDED_JSON:"):
+                results["sharded"] = json.loads(
+                    line.split(":", 1)[1])
+            else:
+                print(line)
+    elif proc is not None:
         print(f"policy_sweep_sharded,error,"
               f"worker_failed_rc={proc.returncode}")
         sys.stderr.write(proc.stderr[-2000:])
+    _write_json(results)
+
+
+def _write_json(results):
+    """Record the run in BENCH_policies.json (the perf trajectory file)."""
+    results["meta"] = {"python": sys.version.split()[0]}
+    path = os.path.abspath(_JSON_PATH)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""Migration study: consolidation + resilience under host failures.
+
+The CloudSim paper's claim (iii) is a virtualization engine that manages
+"multiple, independent, and co-hosted virtualized services"; the
+follow-up InterCloud work (arXiv:0907.4878) makes dynamic workloads and
+VM migration the canonical scalability scenario.  This study exercises
+both on the dense engine:
+
+  1. *Policy matrix under failures*: the 2x2 space/time-shared grid over
+     a contended fleet that loses two hosts mid-run (timed EV_HOST_FAIL
+     rows, one later EV_HOST_RECOVER) — one fused `sweep.run_grid` call;
+     evicted VMs re-provision onto surviving capacity.
+  2. *Migration policies*: the same workload with migration OFF vs
+     THRESHOLD offload vs DRAIN consolidation under a SPECpower-style
+     power curve — counting migrations, downtime, completed work, and
+     fleet joules.
+
+    PYTHONPATH=src python examples/migration_study.py
+
+Shards over every visible device automatically (see docs/sweeps.md).
+"""
+import numpy as np
+
+from repro.core import broker as B
+from repro.core import energy
+from repro.core import state as S
+from repro.core import sweep
+
+IDLE_W, PEAK_W, G5 = energy.normalize_watts(energy.SPEC_G5_WATTS)
+
+
+def scenario(*, events=None, mig_policy=S.MIG_OFF, mig_threshold=0.8):
+    hosts = S.make_uniform_hosts(12, pes=2, mips=1000.0, ram=4096.0,
+                                 idle_w=IDLE_W, peak_w=PEAK_W,
+                                 power_curve=G5)
+    vms = B.build_fleet([B.VmSpec(count=20, pes=1, mips=1000.0,
+                                  ram=256.0, size=100.0)])
+    cl = B.build_waves(20, B.WaveSpec(waves=3, length_mi=240_000.0,
+                                      period=150.0))
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=False,
+                             events=events, mig_policy=mig_policy,
+                             mig_threshold=mig_threshold,
+                             mig_energy_per_mb=0.01)
+
+
+# ---------------------------------------------------------------------------
+# 1. The Fig. 3 policy matrix while two hosts fail mid-run
+# ---------------------------------------------------------------------------
+outage = S.make_events(
+    [150.0, 300.0, 600.0],
+    [S.EV_HOST_FAIL, S.EV_HOST_FAIL, S.EV_HOST_RECOVER],
+    [0, 1, 0])
+
+batch = sweep.stack_scenarios([scenario(), scenario(events=outage)])
+vm_p, task_p = sweep.policy_grid()
+grid = sweep.run_grid(batch, vm_p, task_p, max_steps=8192)
+summ = sweep.summarize_batch(grid)
+
+names = ["space/space", "space/time", "time/space", "time/time"]
+mk = np.asarray(summ.makespan)
+done = np.asarray(summ.n_done)
+en = np.asarray(summ.energy_j)
+print("policy matrix: healthy fleet vs 2-host outage "
+      "(makespan s / done / kJ)")
+for p, name in enumerate(names):
+    print(f"  {name:12s} healthy {mk[p, 0]:7.0f}s {done[p, 0]:3d} "
+          f"{en[p, 0] / 1e3:6.1f}kJ | outage {mk[p, 1]:7.0f}s "
+          f"{done[p, 1]:3d} {en[p, 1] / 1e3:6.1f}kJ")
+assert np.all(done[:, 0] == 60), "healthy fleet must finish everything"
+
+# ---------------------------------------------------------------------------
+# 2. THRESHOLD offload: first-fit packs 16 VMs onto one 2-core host; the
+#    migration policy spreads the hotspot across the fleet
+# ---------------------------------------------------------------------------
+cases = {
+    "mig OFF": scenario(events=outage),
+    "THRESHOLD .7": scenario(events=outage,
+                             mig_policy=S.MIG_THRESHOLD, mig_threshold=0.7),
+}
+mbatch = sweep.stack_scenarios(list(cases.values()))
+out = sweep.run_batch(mbatch, max_steps=8192)
+msumm = sweep.summarize_batch(out)
+print("\nTHRESHOLD offload under the outage (first-fit hotspot start)")
+for i, name in enumerate(cases):
+    print(f"  {name:14s} {int(np.asarray(msumm.n_migrations)[i]):3d} migs  "
+          f"{float(np.asarray(msumm.mig_downtime)[i]):6.1f}s down  "
+          f"makespan {float(np.asarray(msumm.makespan)[i]):7.0f}s  "
+          f"{float(np.asarray(msumm.energy_j)[i]) / 1e3:6.1f}kJ")
+assert int(np.asarray(msumm.n_migrations)[1]) > 0
+
+# ---------------------------------------------------------------------------
+# 3. DRAIN consolidation: a WORST_FIT *spread* start leaves every 4-core
+#    host half-idle; draining packs VMs upward, and under the concave
+#    SPECpower curve the packed schedule burns fewer joules at the same
+#    makespan (cf. docs/energy.md's spread-vs-consolidation study)
+# ---------------------------------------------------------------------------
+from repro.core.provisioning import WORST_FIT  # noqa: E402
+
+
+def drain_scenario(**kw):
+    hosts = S.make_uniform_hosts(8, pes=4, mips=1000.0, ram=4096.0,
+                                 idle_w=IDLE_W, peak_w=PEAK_W,
+                                 power_curve=G5)
+    # 13 VMs over 8 hosts: the uneven spread (2,2,2,2,2,1,1,1) is what
+    # real fleets look like — DRAIN peels the lightest hosts empty
+    vms = B.build_fleet([B.VmSpec(count=13, pes=1, mips=1000.0,
+                                  ram=256.0, size=100.0)])
+    cl = B.build_waves(13, B.WaveSpec(waves=3, length_mi=240_000.0,
+                                      period=260.0))
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=False,
+                             mig_energy_per_mb=0.01, **kw)
+
+
+dcases = {
+    "spread, no mig": drain_scenario(),
+    "spread + DRAIN": drain_scenario(mig_policy=S.MIG_DRAIN,
+                                     mig_threshold=0.3),
+}
+dbatch = sweep.stack_scenarios(list(dcases.values()))
+dout = sweep.run_batch(dbatch, max_steps=8192,
+                       provision_policy=WORST_FIT)
+dsumm = sweep.summarize_batch(dout)
+print("\nDRAIN consolidation from a WORST_FIT spread start")
+for i, name in enumerate(dcases):
+    print(f"  {name:14s} {int(np.asarray(dsumm.n_migrations)[i]):3d} migs  "
+          f"{float(np.asarray(dsumm.mig_downtime)[i]):6.1f}s down  "
+          f"makespan {float(np.asarray(dsumm.makespan)[i]):7.0f}s  "
+          f"{float(np.asarray(dsumm.energy_j)[i]) / 1e3:6.1f}kJ")
+
+drain = int(np.asarray(dsumm.n_migrations)[1])
+print(f"\nDRAIN consolidated with {drain} migrations "
+      "(delay/energy math in docs/migration.md).")

@@ -64,6 +64,7 @@ def build_fleet(specs: Sequence[VmSpec]) -> S.VmState:
         host=jnp.full((len(pes),), -1, jnp.int32),
         state=jnp.full((len(pes),), S.VM_PENDING, jnp.int32),
         create_time=jnp.full((len(pes),), S.INF),
+        mig_remaining=jnp.zeros((len(pes),), jnp.float32),
     )
 
 

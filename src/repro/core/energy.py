@@ -151,6 +151,12 @@ def step_power(dc, rates: jnp.ndarray) -> jnp.ndarray:
 
 
 def energy_total_j(dc) -> jnp.ndarray:
-    """f32[...] total joules accrued across valid hosts (any batch dims)."""
-    return jnp.sum(jnp.where(dc.hosts.valid, dc.hosts.energy_j, 0.0),
+    """f32[...] total joules accrued across real hosts (any batch dims).
+
+    Filters on ``num_pes > 0`` (real vs padding slot), not ``valid`` —
+    ``valid`` is dynamic since host-failure events exist, and a host
+    that failed mid-run must keep its pre-failure joules in the fleet
+    total (padding slots accrue exactly 0, so they drop out either way).
+    """
+    return jnp.sum(jnp.where(dc.hosts.num_pes > 0, dc.hosts.energy_j, 0.0),
                    axis=-1)

@@ -5,12 +5,15 @@ CloudSim advances time with a shared event queue serviced by Java threads
 completion time and the smallest one becomes the next internal event.
 
 Between two events every execution rate is constant (piecewise-constant-rate
-processor sharing), so the *entire* event queue collapses into three dense
+processor sharing), so the *entire* event queue collapses into dense
 min-reductions:
 
     next event = min( t + remaining/rate  over running cloudlets,
                       submit times        of future cloudlets,
-                      submit times        of pending VMs )
+                      submit times        of pending VMs,
+                      times               of pending dynamic events,
+                      migration-copy      completions,
+                      0                   if a migration triggers now )
 
 and the state advance is one fused multiply-subtract.  The engine is a pure
 ``step`` function driven by ``lax.while_loop`` (run to completion) or
@@ -19,10 +22,18 @@ is pure and shape-stable it can be ``vmap``-ed over scenario batches
 (sweep.py fuses policy grids into the same batch axis and shards it over
 devices) and ``shard_map``-ed over datacenter shards (see federation.py).
 
+Dynamic datacenters (paper §3.1 lifecycle; arXiv:0907.4878 migration):
+``DatacenterState.events`` is a fixed-shape f32[E, 4] table of timed VM
+create/destroy and host fail/recover rows applied at the top of ``step``,
+and ``core/migration.py`` contributes a per-event live-migration pass.
+Both are gated by the *static* ``dynamic`` flag: static scenarios
+(``dynamic=False``, auto-detected by the public entry points) compile to
+exactly the pre-dynamic program, so the subsystem costs nothing when off.
+
 Units, here and everywhere downstream of ``DatacenterState``: simulated
 time in seconds (f32), cloudlet lengths/progress in MI (million
 instructions), rates in MIPS, RAM/storage/transfer sizes in MB, money in
-dollars.  Entity axes are H hosts, V VMs, C cloudlets.
+dollars.  Entity axes are H hosts, V VMs, C cloudlets, E events.
 """
 from __future__ import annotations
 
@@ -32,18 +43,29 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import energy, scheduling
+from repro.core import energy, migration, scheduling
 from repro.core.provisioning import FIRST_FIT, provision_pending
 from repro.core.state import (
     CL_CREATED,
     CL_DONE,
+    CL_FAILED,
+    EV_HOST_FAIL,
+    EV_HOST_RECOVER,
+    EV_NONE,
+    EV_VM_CREATE,
+    EV_VM_DESTROY,
     DatacenterState,
     INF,
+    VM_ACTIVE,
+    VM_DESTROYED,
+    VM_EMPTY,
     VM_PENDING,
 )
 
-__all__ = ["step", "run", "run_trace", "StepRecord"]
+__all__ = ["step", "run", "run_trace", "StepRecord", "apply_due_events",
+           "wants_dynamic"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
 
@@ -56,15 +78,131 @@ class StepRecord(NamedTuple):
     utilization: jnp.ndarray   # f32[] consumed MIPS / total host MIPS
     watts: jnp.ndarray         # f32[] fleet power drawn *during* the step
     active: jnp.ndarray        # bool[] this step advanced the simulation
+    n_migrating: jnp.ndarray   # i32[] VMs mid-migration *after* the step
+    migrations: jnp.ndarray    # i32[] cumulative migrations performed
+    hosts_down: jnp.ndarray    # i32[] real hosts currently failed
+
+
+def _hit(n: int, idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """bool[n] — slots targeted by at least one masked event row."""
+    return jnp.zeros((n,), jnp.int32).at[idx].add(
+        mask.astype(jnp.int32)) > 0
+
+
+def apply_due_events(dc: DatacenterState) -> DatacenterState:
+    """Apply every pending event row due at ``dc.time``; mark rows fired.
+
+    Kind order within one instant (mirrored by the oracle): VM destroys
+    (resources returned to surviving hosts), VM creates (EMPTY ->
+    PENDING; the VM provisions at ``max(event time, submit_time)``),
+    host failures (valid=False, pools reset to capacity, resident VMs
+    evicted back to PENDING for immediate re-provisioning — their
+    original submit times are already due — with their cloudlet progress
+    kept), host recoveries (invalid real hosts return with full free
+    pools).  With every row already fired this is a bit-exact identity,
+    preserving the quiescence fixed point.
+
+    ``vms.submit_time`` is deliberately *never* rewritten: besides
+    keeping CloudSim's FCFS-by-original-request order on re-provisioning,
+    it keeps the provisioner's lexsort keys loop-invariant — the pinned
+    jaxlib's CPU SPMD partitioner miscompiles a loop-variant sort inside
+    ``shard_map`` into a cross-device all-reduce whose rendezvous
+    deadlocks when lanes quiesce at different step counts (see the
+    ROADMAP landmine note).
+    """
+    if dc.events.shape[0] == 0:
+        return dc
+    hosts, vms, cl = dc.hosts, dc.vms, dc.cloudlets
+    nh = hosts.num_pes.shape[0]
+    nv = vms.req_pes.shape[0]
+
+    ev_t = dc.events[:, 0]
+    ev_k = dc.events[:, 1].astype(jnp.int32)
+    ev_tgt = dc.events[:, 2].astype(jnp.int32)
+    due = (~dc.event_fired) & (ev_k != EV_NONE) & (ev_t <= dc.time)
+    # rows with out-of-range targets fire but act on nothing (the oracle's
+    # dict-lookup no-op), so clipped scatters never hit a wrong slot
+    due_v = due & (ev_tgt >= 0) & (ev_tgt < nv)
+    due_h = due & (ev_tgt >= 0) & (ev_tgt < nh)
+    tv = jnp.clip(ev_tgt, 0, nv - 1)
+    th = jnp.clip(ev_tgt, 0, nh - 1)
+
+    # ---- 1. VM destroys ---------------------------------------------------
+    destroy = (_hit(nv, tv, due_v & (ev_k == EV_VM_DESTROY))
+               & ((vms.state == VM_PENDING) | (vms.state == VM_ACTIVE)))
+    returning = destroy & (vms.state == VM_ACTIVE) & (vms.host >= 0)
+    hclip = jnp.clip(vms.host, 0, nh - 1)
+    w = returning.astype(jnp.float32)
+    give = lambda pool, x: pool.at[hclip].add(w * x)
+    reserve = jnp.where(dc.reserve_pes == 1,
+                        vms.req_pes.astype(jnp.float32), 0.0)
+    free_ram = give(hosts.free_ram, vms.ram)
+    free_bw = give(hosts.free_bw, vms.bw)
+    free_storage = give(hosts.free_storage, vms.size)
+    free_pes = give(hosts.free_pes, reserve)
+    vm_state = jnp.where(destroy, VM_DESTROYED, vms.state)
+    vm_host = jnp.where(destroy, -1, vms.host)
+    mig_rem = jnp.where(destroy, 0.0, vms.mig_remaining)
+
+    # ---- 2. VM creates ----------------------------------------------------
+    create = (_hit(nv, tv, due_v & (ev_k == EV_VM_CREATE))
+              & (vm_state == VM_EMPTY))
+    vm_state = jnp.where(create, VM_PENDING, vm_state)
+
+    # ---- 3. host failures -------------------------------------------------
+    real = hosts.num_pes > 0
+    fail = (_hit(nh, th, due_h & (ev_k == EV_HOST_FAIL))
+            & hosts.valid & real)
+    evict = ((vm_state == VM_ACTIVE) & (vm_host >= 0)
+             & fail[jnp.clip(vm_host, 0, nh - 1)])
+    vm_state = jnp.where(evict, VM_PENDING, vm_state)
+    vm_create_t = jnp.where(evict, INF, vms.create_time)
+    vm_host = jnp.where(evict, -1, vm_host)
+    mig_rem = jnp.where(evict, 0.0, mig_rem)
+    valid = hosts.valid & ~fail
+    free_ram = jnp.where(fail, hosts.ram, free_ram)
+    free_bw = jnp.where(fail, hosts.bw, free_bw)
+    free_storage = jnp.where(fail, hosts.storage, free_storage)
+    free_pes = jnp.where(fail, hosts.num_pes.astype(jnp.float32), free_pes)
+
+    # ---- 4. host recoveries ----------------------------------------------
+    recover = (_hit(nh, th, due_h & (ev_k == EV_HOST_RECOVER))
+               & ~valid & real)
+    valid = valid | recover
+    free_ram = jnp.where(recover, hosts.ram, free_ram)
+    free_bw = jnp.where(recover, hosts.bw, free_bw)
+    free_storage = jnp.where(recover, hosts.storage, free_storage)
+    free_pes = jnp.where(recover, hosts.num_pes.astype(jnp.float32),
+                         free_pes)
+
+    # cloudlets of destroyed VMs can never run
+    owner = jnp.clip(cl.vm, 0, nv - 1)
+    cancel = (cl.state == CL_CREATED) & (cl.vm >= 0) & destroy[owner]
+    cl_state = jnp.where(cancel, CL_FAILED, cl.state)
+
+    return dataclasses.replace(
+        dc,
+        hosts=dataclasses.replace(
+            hosts, free_ram=free_ram, free_bw=free_bw,
+            free_storage=free_storage, free_pes=free_pes, valid=valid),
+        vms=dataclasses.replace(
+            vms, state=vm_state, host=vm_host,
+            create_time=vm_create_t, mig_remaining=mig_rem),
+        cloudlets=dataclasses.replace(cl, state=cl_state),
+        event_fired=dc.event_fired | due,
+    )
 
 
 def _next_event_deltas(dc: DatacenterState, rates: jnp.ndarray):
-    """(dt, finish_dt[C]) — time to the event-queue head, as raw deltas.
+    """(dt_finish, finish_dt[C], arrive) — the event-queue head, split.
 
-    Deltas (not absolute times) so that a completion 1e-6 s away still
-    advances the state even when ``time + dt == time`` in f32 — the state
-    update below uses ``dt`` directly, making progress irrespective of the
-    clock's floating-point resolution.
+    Completions are *deltas* (``remaining / rate``) so a completion 1e-6 s
+    away still advances the state even when ``time + dt == time`` in f32.
+    Arrivals (cloudlet / VM submit times) are the *absolute* table values:
+    when an arrival wins the queue the clock is set to that exact f32
+    value rather than ``time + (arrive - time)`` — whose rounding can land
+    one ulp short and spawn a phantom micro-step the f64 oracle never
+    takes.
     """
     cl, vms = dc.cloudlets, dc.vms
     finish_dt = jnp.where(rates > 0.0, cl.remaining / jnp.maximum(rates,
@@ -72,42 +210,82 @@ def _next_event_deltas(dc: DatacenterState, rates: jnp.ndarray):
     dt_finish = jnp.min(finish_dt, initial=INF)
 
     future_cl = (cl.state == CL_CREATED) & (cl.submit_time > dc.time)
-    dt_cl = jnp.min(jnp.where(future_cl, cl.submit_time - dc.time, INF),
-                    initial=INF)
+    arr_cl = jnp.min(jnp.where(future_cl, cl.submit_time, INF), initial=INF)
 
     future_vm = (vms.state == VM_PENDING) & (vms.submit_time > dc.time)
-    dt_vm = jnp.min(jnp.where(future_vm, vms.submit_time - dc.time, INF),
-                    initial=INF)
+    arr_vm = jnp.min(jnp.where(future_vm, vms.submit_time, INF), initial=INF)
 
-    return jnp.minimum(dt_finish, jnp.minimum(dt_cl, dt_vm)), finish_dt
+    return dt_finish, finish_dt, jnp.minimum(arr_cl, arr_vm)
 
 
-def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
-         ) -> tuple[DatacenterState, StepRecord]:
+def _dynamic_deltas(dc: DatacenterState, trig_next: jnp.ndarray):
+    """(dt, arrive) — earliest dynamic wakeup.
+
+    ``dt``: migration-copy completions (deltas, like cloudlet remaining)
+    and a zero-dt chain event when another migration already triggers on
+    the post-migration state (same-instant cascades).  ``arrive``: the
+    earliest pending event-table time (absolute, exact)."""
+    if dc.events.shape[0]:
+        ev_t, ev_k = dc.events[:, 0], dc.events[:, 1]
+        pend = (~dc.event_fired) & (ev_k != float(EV_NONE))
+        arr_ev = jnp.min(jnp.where(pend & (ev_t > dc.time), ev_t, INF),
+                         initial=INF)
+    else:
+        arr_ev = INF
+    mig = dc.vms.mig_remaining
+    dt_mig = jnp.min(jnp.where(mig > 0.0, mig, INF), initial=INF)
+    dt_trig = jnp.where(trig_next, jnp.float32(0.0), INF)
+    return jnp.minimum(dt_mig, dt_trig), arr_ev
+
+
+def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
+         dynamic: bool = True) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
     Takes and returns an *unbatched* ``DatacenterState`` (leaves [H]/[V]/
     [C]/scalar); batching is layered on by the callers' vmap.  At
-    quiescence (no runnable work, no future submissions) ``step`` is an
-    exact fixed point — it returns the state bit-for-bit unchanged with
-    ``StepRecord.active == False`` — which is what makes padded batch
-    lanes and early-finishing lanes inert.
+    quiescence (no runnable work, no future submissions, no pending
+    events) ``step`` is an exact fixed point — it returns the state
+    bit-for-bit unchanged with ``StepRecord.active == False`` — which is
+    what makes padded batch lanes and early-finishing lanes inert.
 
-    Order inside an event instant mirrors CloudSim: (1) the VMProvisioner
-    places VMs whose submission is due, (2) ``updateVMsProcessing`` — the
-    two-level share computation — fixes every rate (MIPS), (3) the clock
-    jumps ``dt`` seconds to the earliest completion/arrival, (4) progress
-    (rate * dt MI), completions, market costs ($), and per-host energy
-    (watts * dt J — rates are constant over the interval, so exact) are
-    committed.
+    Order inside an event instant mirrors CloudSim: (0) pending dynamic
+    events due now apply (``apply_due_events``), (1) the VMProvisioner
+    places VMs whose submission is due — including VMs just evicted by a
+    host failure, (2) ``updateVMsProcessing`` — the two-level share
+    computation — fixes every rate (MIPS), (2b) the migration policy may
+    move one VM and rates are recomputed (core/migration.py), (3) the
+    clock jumps ``dt`` seconds to the earliest completion/arrival/event,
+    (4) progress (rate * dt MI), completions, migration-copy countdowns,
+    market costs ($), and per-host energy (watts * dt J — rates are
+    constant over the interval, so exact) are committed.
+
+    ``dynamic`` is a *static* flag: False compiles the pre-dynamic
+    program (no event table, no migration pass) for scenarios that carry
+    neither — the public runners auto-detect via ``wants_dynamic``.
     """
+    if dynamic:
+        dc = apply_due_events(dc)
     dc = provision_pending(dc, provision_policy)
     rates = scheduling.cloudlet_rates(dc)
+    if dynamic:
+        dc, _ = migration.apply_migration(dc, rates)
+        rates = scheduling.cloudlet_rates(dc)
+        trig_next = migration.select_migration(dc, rates).trigger
 
-    dt, finish_dt = _next_event_deltas(dc, rates)
+    dt_other, finish_dt, arrive = _next_event_deltas(dc, rates)
+    if dynamic:
+        dt_dyn, arr_ev = _dynamic_deltas(dc, trig_next)
+        dt_other = jnp.minimum(dt_other, dt_dyn)
+        arrive = jnp.minimum(arrive, arr_ev)
+    dt_arr = jnp.where(arrive < INF, arrive - dc.time, INF)
+    dt = jnp.minimum(dt_other, dt_arr)
     active = dt < INF
     dt = jnp.where(active, dt, 0.0)
-    t_next = dc.time + dt
+    # arrivals win ties so the clock lands on the exact submitted time
+    t_next = jnp.where(active,
+                       jnp.where(dt_arr <= dt_other, arrive, dc.time + dt),
+                       dc.time)
 
     cl = dc.cloudlets
     executed = rates * dt
@@ -142,14 +320,27 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
     host_watts = energy.step_power(dc, rates)              # f32[H]
     energy_j = dc.hosts.energy_j + host_watts * dt
 
+    vms = dc.vms
+    if dynamic:
+        # migration copy countdown — a delta like cloudlet ``remaining``,
+        # with the same completion snap band so the resume event lands on
+        # the same step on both the engine and the f64 oracle.
+        mig = vms.mig_remaining
+        mig_done = (mig > 0.0) & (mig <= dt * (1.0 + 1e-5) + 1e-9)
+        mig_rem = jnp.where(mig_done, 0.0,
+                            jnp.where(mig > 0.0,
+                                      jnp.maximum(mig - dt, 0.0), mig))
+        vms = dataclasses.replace(vms, mig_remaining=mig_rem)
+
     new = dataclasses.replace(
         dc,
         hosts=dataclasses.replace(dc.hosts, energy_j=energy_j),
+        vms=vms,
         cloudlets=dataclasses.replace(
             cl, remaining=remaining, start_time=start_time,
             finish_time=finish_time, state=state),
         acct=dataclasses.replace(dc.acct, cpu_cost=cpu_cost, bw_cost=bw_cost),
-        time=jnp.where(active, t_next, dc.time),
+        time=t_next,
     )
 
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
@@ -161,22 +352,34 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT
         utilization=jnp.sum(rates) / jnp.maximum(host_mips, 1e-30),
         watts=jnp.sum(host_watts),
         active=active,
+        n_migrating=jnp.sum((new.vms.mig_remaining > 0.0
+                             ).astype(jnp.int32)),
+        migrations=new.mig_count,
+        hosts_down=jnp.sum((~new.hosts.valid
+                            & (new.hosts.num_pes > 0)).astype(jnp.int32)),
     )
     return new, rec
 
 
-@partial(jax.jit, static_argnames=("max_steps", "provision_policy"))
-def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
-        horizon: float = float("inf"), provision_policy: int = FIRST_FIT
-        ) -> DatacenterState:
-    """Run the simulation to quiescence with ``lax.while_loop``.
+def wants_dynamic(dc: DatacenterState) -> bool:
+    """True when the scenario carries dynamic behaviour (events table,
+    a migration policy, or an in-flight migration).  Host-side dispatch
+    helper — on traced inputs it conservatively answers True.  Accepts
+    unbatched ([E, 4]) and batched ([B, E, 4]) states: the event axis
+    is always second-to-last."""
+    if dc.events.shape[-2] > 0:
+        return True
+    try:
+        return (bool(np.any(np.asarray(dc.mig_policy) != 0))
+                or bool(np.any(np.asarray(dc.vms.mig_remaining) > 0.0)))
+    except Exception:           # tracer — cannot inspect; take the safe path
+        return True
 
-    Terminates when the event queue is empty (no runnable work and no future
-    submissions), the ``horizon`` (simulated seconds) is passed, or
-    ``max_steps`` events fire (a safety net against pathological
-    scenarios).  Returns the final ``DatacenterState`` (same leaf shapes
-    as the input; ``time`` is the quiescence clock in seconds).
-    """
+
+@partial(jax.jit, static_argnames=("max_steps", "provision_policy",
+                                   "dynamic"))
+def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
+         provision_policy: int, dynamic: bool) -> DatacenterState:
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
     def cond(carry):
@@ -185,7 +388,8 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
 
     def body(carry):
         dc, n, _ = carry
-        new, rec = step(dc, provision_policy=provision_policy)
+        new, rec = step(dc, provision_policy=provision_policy,
+                        dynamic=dynamic)
         return new, n + 1, rec.active
 
     out, _, _ = jax.lax.while_loop(cond, body, (dc, jnp.int32(0),
@@ -193,9 +397,41 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
     return out
 
 
-@partial(jax.jit, static_argnames=("num_steps", "provision_policy"))
+def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
+        horizon: float = float("inf"), provision_policy: int = FIRST_FIT,
+        dynamic: bool | None = None) -> DatacenterState:
+    """Run the simulation to quiescence with ``lax.while_loop``.
+
+    Terminates when the event queue is empty (no runnable work, no future
+    submissions, no pending dynamic events), the ``horizon`` (simulated
+    seconds) is passed, or ``max_steps`` events fire (a safety net
+    against pathological scenarios).  Returns the final
+    ``DatacenterState`` (same leaf shapes as the input; ``time`` is the
+    quiescence clock in seconds).  ``dynamic=None`` auto-detects via
+    ``wants_dynamic``; pass an explicit bool when calling under a trace.
+    """
+    if dynamic is None:
+        dynamic = wants_dynamic(dc)
+    return _run(dc, max_steps=max_steps, horizon=horizon,
+                provision_policy=provision_policy, dynamic=dynamic)
+
+
+@partial(jax.jit, static_argnames=("num_steps", "provision_policy",
+                                   "dynamic"))
+def _run_trace(dc: DatacenterState, *, num_steps: int,
+               provision_policy: int, dynamic: bool
+               ) -> tuple[DatacenterState, StepRecord]:
+    def body(dc, _):
+        new, rec = step(dc, provision_policy=provision_policy,
+                        dynamic=dynamic)
+        return new, rec
+
+    return jax.lax.scan(body, dc, None, length=num_steps)
+
+
 def run_trace(dc: DatacenterState, *, num_steps: int,
-              provision_policy: int = FIRST_FIT
+              provision_policy: int = FIRST_FIT,
+              dynamic: bool | None = None
               ) -> tuple[DatacenterState, StepRecord]:
     """Run exactly ``num_steps`` events via ``lax.scan``, keeping telemetry.
 
@@ -204,8 +440,7 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
     no-ops flagged ``active=False`` — the trace stays fixed-shape
     (required for jit) and downstream consumers filter.
     """
-    def body(dc, _):
-        new, rec = step(dc, provision_policy=provision_policy)
-        return new, rec
-
-    return jax.lax.scan(body, dc, None, length=num_steps)
+    if dynamic is None:
+        dynamic = wants_dynamic(dc)
+    return _run_trace(dc, num_steps=num_steps,
+                      provision_policy=provision_policy, dynamic=dynamic)

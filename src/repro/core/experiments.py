@@ -43,9 +43,16 @@ __all__ = ["Provider", "UserFleet", "FederationStudy", "fleet_demand",
 
 @dataclasses.dataclass(frozen=True)
 class Provider:
-    """One federated datacenter offer: a host park + its market rates."""
+    """One federated datacenter offer: a host park + its market rates.
+
+    ``events`` optionally attaches a dynamic-event table
+    (``state.make_events``) to this provider's datacenter — e.g. host
+    fail/recover windows — so federation studies can model regional
+    outages; None keeps the provider static.
+    """
     hosts: S.HostState
     rates: S.MarketRates
+    events: object = None          # f32[E, 4] | None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +80,7 @@ class FederationStudy(NamedTuple):
     fed_cost: jnp.ndarray        # f32[P] summed market bill across providers ($)
     fed_done: jnp.ndarray        # i32[P] completed cloudlets across providers
     fed_energy_j: jnp.ndarray    # f32[P] summed host energy across providers (J)
+    fed_migrations: jnp.ndarray  # i32[P] live migrations across providers
 
 
 def fleet_demand(fleets: Sequence[UserFleet]) -> F.UserDemand:
@@ -114,7 +122,10 @@ def build_study(providers: Sequence[Provider],
                 fleets: Sequence[UserFleet], *,
                 vm_policy: int = S.SPACE_SHARED,
                 task_policy: int = S.SPACE_SHARED,
-                reserve_pes: bool = True
+                reserve_pes: bool = True,
+                mig_policy: int = S.MIG_OFF,
+                mig_threshold: float = 0.8,
+                mig_energy_per_mb: float = 0.0
                 ) -> tuple[list[S.DatacenterState], jnp.ndarray,
                            cis.CisEntry]:
     """Route fleets across providers; build one datacenter scenario each.
@@ -131,7 +142,10 @@ def build_study(providers: Sequence[Provider],
     """
     bare = [S.make_datacenter(p.hosts, _empty_vms(), _empty_cloudlets(),
                               vm_policy=vm_policy, task_policy=task_policy,
-                              reserve_pes=reserve_pes, rates=p.rates)
+                              reserve_pes=reserve_pes, rates=p.rates,
+                              events=p.events, mig_policy=mig_policy,
+                              mig_threshold=mig_threshold,
+                              mig_energy_per_mb=mig_energy_per_mb)
             for p in providers]
     table = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[cis.register(d) for d in bare])
@@ -162,6 +176,8 @@ def build_study(providers: Sequence[Provider],
 def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
               vm_policies, task_policies, *, max_steps: int = 100_000,
               provision_policy: int = FIRST_FIT, reserve_pes: bool = True,
+              mig_policy: int = S.MIG_OFF, mig_threshold: float = 0.8,
+              mig_energy_per_mb: float = 0.0,
               mesh=None, sharded: bool | None = None) -> FederationStudy:
     """An arXiv:0907.4878-style inter-cloud policy study, end to end.
 
@@ -173,7 +189,8 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
     ``sweep.run_grid``; the default shards whenever >1 device is visible.
     """
     dcs, assignment, table = build_study(
-        providers, fleets, reserve_pes=reserve_pes)
+        providers, fleets, reserve_pes=reserve_pes, mig_policy=mig_policy,
+        mig_threshold=mig_threshold, mig_energy_per_mb=mig_energy_per_mb)
     batch = sweep.stack_scenarios(dcs)
     final = sweep.run_grid(batch, vm_policies, task_policies,
                            max_steps=max_steps,
@@ -189,4 +206,5 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
         fed_cost=jnp.sum(summary.total_cost, axis=-1),
         fed_done=jnp.sum(summary.n_done, axis=-1),
         fed_energy_j=jnp.sum(summary.energy_j, axis=-1),
+        fed_migrations=jnp.sum(summary.n_migrations, axis=-1),
     )

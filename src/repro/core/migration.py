@@ -1,0 +1,199 @@
+"""Live VM migration — trigger policies, delay model, and joule accounting.
+
+The paper's claim (iii) — "creation and management of multiple,
+independent, and co-hosted virtualized services" — and the follow-up
+InterCloud work (arXiv:0907.4878) both name VM migration as the dynamic
+behaviour a cloud simulator must model.  This module adds it to the
+tensorized engine as a *per-event* policy pass (one migration per
+simulation event; same-instant cascades are chained with zero-dt wakeup
+events, see ``engine.step``):
+
+Trigger policies (``DatacenterState.mig_policy``, traced scalars so
+policy sweeps vmap):
+
+  * ``MIG_THRESHOLD`` — offload: if any valid host's CPU utilization
+    exceeds ``mig_threshold``, the *most* loaded such host migrates one
+    VM to the emptiest feasible host whose *projected* utilization —
+    resident VM demand plus the victim's MIPS demand, over capacity —
+    stays within the threshold (WORST_FIT target selection from
+    ``provisioning.py``).  Projecting placement-based demand rather than
+    instantaneous rates is what keeps the policy stable: a mid-copy or
+    between-waves-idle VM draws no CPU *right now*, so a rate-based
+    guard would let an idle-looking target accept victims, tip over
+    when they resume, and bounce them straight back.
+  * ``MIG_DRAIN`` — consolidation: among hosts below the CPU
+    ``mig_threshold`` that still hold VMs, the *least RAM-utilized* one
+    drains: it migrates one VM onto the fullest feasible host that is
+    strictly more RAM-utilized than the source (MOST_FULL target
+    selection) and whose projected CPU utilization stays <= 1 — pack to
+    capacity, never oversubscribe.  Packing always moves load *upward*,
+    which is what makes the policy terminate.
+
+Victim selection is CloudSim's minimum-migration-time heuristic: the
+migratable VM with the least RAM (ties to the lowest slot).
+
+Delay model: migrating a VM copies its dirty memory — modelled as its
+full RAM image — over the slower of the two hosts' links with half the
+bandwidth reserved (the CloudSim convention)::
+
+    delay_s = ram_mb / (0.5 * min(bw_src, bw_dst))
+
+During the delay the VM's resources are already moved to the destination
+(admission uses the destination's free pools) but its cloudlets execute
+at rate 0 — the downtime window.  ``VmState.mig_remaining`` carries the
+remaining copy seconds as a *delta* decremented per event, mirroring
+cloudlet ``remaining`` so wakeups are immune to f32 clock resolution.
+
+Energy: the copy burns ``mig_energy_per_mb * ram_mb`` joules, charged
+half to the source and half to the destination host accumulators on top
+of the utilization-curve power from ``core/energy.py``.
+
+The NumPy oracle (``repro.oracle``) re-implements every rule here with
+plain Python loops for differential testing (``docs/migration.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import energy
+from repro.core.provisioning import MOST_FULL, WORST_FIT, _choose, \
+    feasible_hosts
+from repro.core.state import (
+    MIG_DRAIN,
+    MIG_OFF,
+    MIG_THRESHOLD,
+    VM_ACTIVE,
+    DatacenterState,
+)
+
+__all__ = ["MIG_OFF", "MIG_THRESHOLD", "MIG_DRAIN", "migration_delay",
+           "select_migration", "apply_migration", "Migration"]
+
+_BIG = jnp.float32(1e30)
+
+
+def migration_delay(ram, bw_src, bw_dst):
+    """f32[] seconds to copy ``ram`` MB over the slower link at half rate."""
+    link = 0.5 * jnp.minimum(bw_src, bw_dst)
+    return ram / jnp.maximum(link, 1e-30)
+
+
+class Migration(NamedTuple):
+    """One candidate migration decision (all traced scalars)."""
+    trigger: jnp.ndarray   # bool[] a migration fires this event
+    vm: jnp.ndarray        # i32[]  victim VM slot
+    src: jnp.ndarray       # i32[]  source host
+    dst: jnp.ndarray       # i32[]  destination host (-1 if none)
+    delay: jnp.ndarray     # f32[]  copy seconds (downtime window)
+
+
+def select_migration(dc: DatacenterState, rates: jnp.ndarray) -> Migration:
+    """Evaluate the trigger policy on the current state + cloudlet rates.
+
+    Pure decision — no state change.  ``rates f32[C]`` are the
+    ``scheduling.cloudlet_rates`` of this event; CPU utilization derives
+    from them exactly as the energy model's (``energy.host_utilization``).
+    """
+    hosts, vms = dc.hosts, dc.vms
+    nh = hosts.num_pes.shape[0]
+    util = energy.host_utilization(dc, rates)             # f32[H]
+
+    placed = (vms.state == VM_ACTIVE) & (vms.host >= 0)
+    occupancy = jnp.zeros((nh,), jnp.int32).at[
+        jnp.clip(vms.host, 0, nh - 1)].add(placed.astype(jnp.int32))
+
+    # ---- source host ------------------------------------------------------
+    loaded = hosts.valid & (occupancy > 0)
+    over = loaded & (util > dc.mig_threshold)
+    src_thr = jnp.argmax(jnp.where(over, util, -_BIG)).astype(jnp.int32)
+    under = loaded & (util < dc.mig_threshold)
+    frac = 1.0 - hosts.free_ram / jnp.maximum(hosts.ram, 1e-30)
+    src_drn = jnp.argmin(jnp.where(under, frac, _BIG)).astype(jnp.int32)
+
+    is_thr = dc.mig_policy == MIG_THRESHOLD
+    src = jnp.where(is_thr, src_thr, src_drn)
+    trigger = ((dc.mig_policy != MIG_OFF)
+               & jnp.where(is_thr, jnp.any(over), jnp.any(under)))
+
+    # ---- victim: minimum-migration-time (least RAM, lowest slot) ----------
+    migratable = placed & (vms.host == src) & (vms.mig_remaining <= 0.0)
+    v = jnp.argmin(jnp.where(migratable, vms.ram, _BIG)).astype(jnp.int32)
+    trigger &= jnp.any(migratable)
+
+    # ---- destination: provisioning-style choice, source excluded ----------
+    feas = feasible_hosts(
+        dc, hosts.free_ram, hosts.free_bw, hosts.free_storage,
+        hosts.free_pes, ram=vms.ram[v], bw=vms.bw[v], size=vms.size[v],
+        req_pes=vms.req_pes[v], req_mips=vms.req_mips[v])
+    feas &= jnp.arange(nh, dtype=jnp.int32) != src
+    frac_used = 1.0 - hosts.free_ram / jnp.maximum(hosts.ram, 1e-30)
+    # projected utilization once the victim resumes there, from *resident
+    # VM demand* (placement-based, mid-copy VMs included) rather than the
+    # instantaneous rates — a VM idling between waves still claims its
+    # cores, so targets never silently oversubscribe (stability guard)
+    eff = (vms.req_pes.astype(jnp.float32)
+           * jnp.minimum(vms.req_mips,
+                         hosts.mips_per_pe[jnp.clip(vms.host, 0, nh - 1)]))
+    resident = jnp.zeros((nh,), jnp.float32).at[
+        jnp.clip(vms.host, 0, nh - 1)].add(jnp.where(placed, eff, 0.0))
+    demand = (vms.req_pes[v].astype(jnp.float32)
+              * jnp.minimum(vms.req_mips[v], hosts.mips_per_pe))
+    proj = (resident + demand) / jnp.maximum(hosts.capacity_mips, 1e-30)
+    feas &= jnp.where(is_thr,
+                      proj <= dc.mig_threshold,    # never overload a target
+                      (frac_used > frac_used[src])  # packing moves upward...
+                      & (proj <= 1.0))              # ...up to CPU capacity
+    dst = _choose(feas, hosts.free_ram, hosts.ram,
+                  jnp.where(is_thr, WORST_FIT, MOST_FULL), jnp.int32(0))
+    trigger &= dst >= 0
+
+    dstc = jnp.clip(dst, 0, nh - 1)
+    delay = migration_delay(vms.ram[v], hosts.bw[src], hosts.bw[dstc])
+    return Migration(trigger=trigger, vm=v, src=src, dst=dst, delay=delay)
+
+
+def apply_migration(dc: DatacenterState, rates: jnp.ndarray
+                    ) -> tuple[DatacenterState, Migration]:
+    """Apply at most one migration for this event (pure, vmap-safe).
+
+    Moves the victim's RAM/BW/storage (and PEs under ``reserve_pes``)
+    from source to destination pools, repoints ``vms.host``, starts the
+    downtime clock (``mig_remaining = delay``), and books the copy
+    energy + stats.  Everything is ``where``-gated on ``trigger`` so the
+    no-migration case is a bit-exact identity.
+    """
+    mig = select_migration(dc, rates)
+    hosts, vms = dc.hosts, dc.vms
+    nh = hosts.num_pes.shape[0]
+    v, src = mig.vm, mig.src
+    dst = jnp.clip(mig.dst, 0, nh - 1)
+
+    amt = lambda x: jnp.where(mig.trigger, x, 0.0)
+    move = lambda pool, x: pool.at[src].add(amt(x)).at[dst].add(-amt(x))
+    reserve = jnp.where(dc.reserve_pes == 1,
+                        vms.req_pes[v].astype(jnp.float32), 0.0)
+    joules = amt(0.5 * vms.ram[v] * dc.mig_energy_per_mb)
+    new_hosts = dataclasses.replace(
+        hosts,
+        free_ram=move(hosts.free_ram, vms.ram[v]),
+        free_bw=move(hosts.free_bw, vms.bw[v]),
+        free_storage=move(hosts.free_storage, vms.size[v]),
+        free_pes=move(hosts.free_pes, reserve),
+        energy_j=hosts.energy_j.at[src].add(joules).at[dst].add(joules),
+    )
+    new_vms = dataclasses.replace(
+        vms,
+        host=vms.host.at[v].set(jnp.where(mig.trigger, mig.dst,
+                                          vms.host[v])),
+        mig_remaining=vms.mig_remaining.at[v].set(
+            jnp.where(mig.trigger, mig.delay, vms.mig_remaining[v])),
+    )
+    new = dataclasses.replace(
+        dc, hosts=new_hosts, vms=new_vms,
+        mig_count=dc.mig_count + mig.trigger.astype(jnp.int32),
+        mig_downtime=dc.mig_downtime + amt(mig.delay),
+    )
+    return new, mig

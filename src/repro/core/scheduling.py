@@ -57,14 +57,22 @@ segment_cumsum_grouped = segment_cumsum
 # Runnability predicates
 # ---------------------------------------------------------------------------
 def cloudlet_runnable(dc: DatacenterState) -> jnp.ndarray:
-    """bool[C] — submitted, unfinished, and its VM is placed and running."""
+    """bool[C] — submitted, unfinished, and its VM is placed and running.
+
+    A VM mid-migration (``mig_remaining > 0``, see core/migration.py)
+    contributes no execution — its task units pause for the downtime
+    window; the default all-zero field keeps static scenarios unchanged.
+    """
     cl = dc.cloudlets
-    vm_ok = dc.vms.state[jnp.clip(cl.vm, 0, None)] == VM_ACTIVE
+    owner = jnp.clip(cl.vm, 0, None)
+    vm_ok = dc.vms.state[owner] == VM_ACTIVE
+    not_migrating = dc.vms.mig_remaining[owner] <= 0.0
     return ((cl.state == CL_CREATED)
             & (cl.submit_time <= dc.time)
             & (cl.remaining > 0.0)
             & (cl.vm >= 0)
-            & vm_ok)
+            & vm_ok
+            & not_migrating)
 
 
 def vm_has_work(dc: DatacenterState, runnable: jnp.ndarray) -> jnp.ndarray:

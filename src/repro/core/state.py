@@ -42,6 +42,20 @@ CL_CREATED = 1    # exists; becomes runnable when submit_time is reached
 CL_DONE = 2
 CL_FAILED = 3     # its VM could not be provisioned
 
+# Dynamic-event kinds (event table rows, see ``make_events``).  A row is
+# f32[4] = (time, kind, target, param); kind EV_NONE marks an inert row
+# (padding), so an all-zero event table is exactly inert.
+EV_NONE = 0          # padding row — never fires
+EV_VM_CREATE = 1     # target VM slot: VM_EMPTY -> VM_PENDING at `time`
+EV_VM_DESTROY = 2    # target VM slot: destroy; cancel unfinished cloudlets
+EV_HOST_FAIL = 3     # target host: fail; evict VMs for re-provisioning
+EV_HOST_RECOVER = 4  # target host: recover with full free capacity
+
+# Migration trigger policies (core/migration.py)
+MIG_OFF = 0        # no live migration
+MIG_THRESHOLD = 1  # offload the most CPU-overloaded host (util > threshold)
+MIG_DRAIN = 2      # consolidation: drain the least-utilized non-empty host
+
 
 def pytree_dataclass(cls):
     """Register a dataclass whose every field is pytree data."""
@@ -94,6 +108,11 @@ class VmState:
     host: jnp.ndarray           # i32[V]  -1 while unplaced
     state: jnp.ndarray          # i32[V]  VM_* codes
     create_time: jnp.ndarray    # f32[V]  when placed (INF before)
+    # live migration: seconds of copy work left before the VM resumes on
+    # its (already-updated) destination host; 0 when not migrating.  A
+    # *delta*, decremented by dt each event like cloudlet ``remaining`` —
+    # immune to f32 clock resolution (see core/migration.py).
+    mig_remaining: jnp.ndarray  # f32[V]
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +173,20 @@ class DatacenterState:
     # (paper 5: "only one VM was allowed to be hosted in a host"); 0 => VMs
     # co-hosted and queued for cores (paper Figure 3 semantics).
     reserve_pes: jnp.ndarray    # i32[]
+    # dynamic-event table (paper 3.1 lifecycle + host failures): fixed-
+    # shape f32[E, 4] rows (time s, EV_* kind, target slot, param) plus a
+    # fired mask so each row applies exactly once.  E may be 0 (static
+    # scenario); all-zero rows are inert padding.
+    events: jnp.ndarray         # f32[E, 4]
+    event_fired: jnp.ndarray    # bool[E]
+    # live-migration policy knobs + accumulated stats (core/migration.py).
+    # Traced scalars like the scheduling policy codes, so migration
+    # policies sweep/vmap in the same compiled call.
+    mig_policy: jnp.ndarray        # i32[]  MIG_* codes
+    mig_threshold: jnp.ndarray     # f32[]  CPU-utilization trigger in [0,1]
+    mig_energy_per_mb: jnp.ndarray  # f32[] joules per dirty MB migrated
+    mig_count: jnp.ndarray         # i32[]  migrations performed
+    mig_downtime: jnp.ndarray      # f32[]  summed migration delays (VM-s)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +238,7 @@ def make_vms(req_pes, req_mips, ram, bw, size, submit_time=0.0) -> VmState:
         host=jnp.full((v,), -1, jnp.int32),
         state=jnp.full((v,), VM_PENDING, jnp.int32),
         create_time=jnp.full((v,), INF),
+        mig_remaining=jnp.zeros((v,), jnp.float32),
     )
 
 
@@ -245,6 +279,25 @@ def validate_cloudlet_order(vm_ids) -> bool:
     return True
 
 
+def make_events(times, kinds, targets, params=0.0) -> jnp.ndarray:
+    """f32[E, 4] event table from per-event sequences.
+
+    ``times`` in seconds, ``kinds`` EV_* codes, ``targets`` the VM slot
+    (EV_VM_*) or host slot (EV_HOST_*) the event acts on, ``params``
+    reserved (0).  Rows need not be time-sorted — the engine applies
+    every due row each event step.
+    """
+    times = jnp.asarray(times, jnp.float32)
+    e = times.shape[0]
+    f = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (e,))
+    return jnp.stack([times, f(kinds), f(targets), f(params)], axis=1)
+
+
+def no_events() -> jnp.ndarray:
+    """The empty event table (E = 0) — the static-scenario default."""
+    return jnp.zeros((0, 4), jnp.float32)
+
+
 def make_market(cost_per_cpu_sec=0.0, cost_per_mem=0.0, cost_per_storage=0.0,
                 cost_per_bw=0.0) -> MarketRates:
     g = lambda x: jnp.asarray(x, jnp.float32)
@@ -254,9 +307,13 @@ def make_market(cost_per_cpu_sec=0.0, cost_per_mem=0.0, cost_per_storage=0.0,
 
 def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
                     *, vm_policy=SPACE_SHARED, task_policy=SPACE_SHARED,
-                    reserve_pes=True, rates: MarketRates | None = None
-                    ) -> DatacenterState:
+                    reserve_pes=True, rates: MarketRates | None = None,
+                    events: jnp.ndarray | None = None,
+                    mig_policy=MIG_OFF, mig_threshold=0.8,
+                    mig_energy_per_mb=0.0) -> DatacenterState:
     zero = jnp.float32(0.0)
+    events = no_events() if events is None else jnp.asarray(events,
+                                                            jnp.float32)
     return DatacenterState(
         hosts=hosts, vms=vms, cloudlets=cloudlets,
         rates=rates if rates is not None else make_market(),
@@ -265,4 +322,11 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
         vm_policy=jnp.int32(vm_policy),
         task_policy=jnp.int32(task_policy),
         reserve_pes=jnp.int32(1 if reserve_pes else 0),
+        events=events,
+        event_fired=jnp.zeros((events.shape[0],), bool),
+        mig_policy=jnp.int32(mig_policy),
+        mig_threshold=jnp.float32(mig_threshold),
+        mig_energy_per_mb=jnp.float32(mig_energy_per_mb),
+        mig_count=jnp.int32(0),
+        mig_downtime=jnp.float32(0.0),
     )

@@ -71,13 +71,19 @@ def _pad_axis0(arr: jnp.ndarray, n: int, fill) -> jnp.ndarray:
 
 
 def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
-                 n_vms: int | None = None, n_cloudlets: int | None = None
-                 ) -> DatacenterState:
-    """Grow a scenario to fixed entity capacities with inert padding."""
+                 n_vms: int | None = None, n_cloudlets: int | None = None,
+                 n_events: int | None = None) -> DatacenterState:
+    """Grow a scenario to fixed entity capacities with inert padding.
+
+    Padded event rows are all-zero (kind ``EV_NONE``) and unfired — the
+    engine never applies them, so the event axis pads as inertly as the
+    entity axes.
+    """
     h, v, c = dc.hosts, dc.vms, dc.cloudlets
     nh = n_hosts if n_hosts is not None else h.num_pes.shape[0]
     nv = n_vms if n_vms is not None else v.req_pes.shape[0]
     nc = n_cloudlets if n_cloudlets is not None else c.vm.shape[0]
+    ne = n_events if n_events is not None else dc.events.shape[0]
 
     hosts = dataclasses.replace(
         h,
@@ -107,6 +113,7 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         host=_pad_axis0(v.host, nv, -1),
         state=_pad_axis0(v.state, nv, VM_EMPTY),
         create_time=_pad_axis0(v.create_time, nv, INF),
+        mig_remaining=_pad_axis0(v.mig_remaining, nv, 0.0),
     )
     cloudlets = dataclasses.replace(
         c,
@@ -121,18 +128,24 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         rank_in_vm=_pad_axis0(c.rank_in_vm, nc, 0),
         state=_pad_axis0(c.state, nc, CL_EMPTY),
     )
-    return dataclasses.replace(dc, hosts=hosts, vms=vms, cloudlets=cloudlets)
+    return dataclasses.replace(
+        dc, hosts=hosts, vms=vms, cloudlets=cloudlets,
+        events=_pad_axis0(dc.events, ne, 0.0),
+        event_fired=_pad_axis0(dc.event_fired, ne, False))
 
 
 def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
     """Stack scenarios into one batched state (leading axis B), auto-padding
-    every entity block to the sweep-wide maximum capacity."""
+    every entity block (hosts/VMs/cloudlets/events) to the sweep-wide
+    maximum capacity."""
     if not dcs:
         raise ValueError("empty scenario list")
     nh = max(d.hosts.num_pes.shape[0] for d in dcs)
     nv = max(d.vms.req_pes.shape[0] for d in dcs)
     nc = max(d.cloudlets.vm.shape[0] for d in dcs)
-    padded = [pad_scenario(d, n_hosts=nh, n_vms=nv, n_cloudlets=nc)
+    ne = max(d.events.shape[0] for d in dcs)
+    padded = [pad_scenario(d, n_hosts=nh, n_vms=nv, n_cloudlets=nc,
+                           n_events=ne)
               for d in dcs]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
 
@@ -140,40 +153,68 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
 # ---------------------------------------------------------------------------
 # Batched runners
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("max_steps", "provision_policy"))
+@partial(jax.jit, static_argnames=("max_steps", "provision_policy",
+                                   "dynamic"))
+def _run_batch(batch: DatacenterState, *, max_steps: int,
+               provision_policy: int, dynamic: bool) -> DatacenterState:
+    f = partial(engine.run, max_steps=max_steps,
+                provision_policy=provision_policy, dynamic=dynamic)
+    return jax.vmap(f)(batch)
+
+
 def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
-              provision_policy: int = FIRST_FIT) -> DatacenterState:
+              provision_policy: int = FIRST_FIT,
+              dynamic: bool | None = None) -> DatacenterState:
     """vmap ``engine.run`` over a stacked scenario batch (one compiled call).
 
     Each lane runs to its own quiescence; lanes that finish early take
     inert no-op steps (``step`` is a fixed point at quiescence) until the
     whole batch quiesces, so per-lane results are identical to single runs.
+    ``dynamic=None`` auto-detects whether any lane carries events or a
+    migration policy (``engine.wants_dynamic``); the whole batch then
+    runs the dynamic program — inert for lanes without events.
     """
-    f = partial(engine.run, max_steps=max_steps,
-                provision_policy=provision_policy)
-    return jax.vmap(f)(batch)
+    if dynamic is None:
+        dynamic = engine.wants_dynamic(batch)
+    return _run_batch(batch, max_steps=max_steps,
+                      provision_policy=provision_policy, dynamic=dynamic)
 
 
-@partial(jax.jit, static_argnames=("max_steps", "provision_policy"))
+@partial(jax.jit, static_argnames=("max_steps", "provision_policy",
+                                   "dynamic"))
+def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
+                     task_policies: jnp.ndarray, *, max_steps: int,
+                     provision_policy: int, dynamic: bool
+                     ) -> DatacenterState:
+    def one_policy(vp, tp):
+        withp = dataclasses.replace(
+            batch,
+            vm_policy=jnp.broadcast_to(vp, batch.vm_policy.shape),
+            task_policy=jnp.broadcast_to(tp, batch.task_policy.shape))
+        return _run_batch(withp, max_steps=max_steps,
+                          provision_policy=provision_policy,
+                          dynamic=dynamic)
+
+    return jax.vmap(one_policy)(jnp.asarray(vm_policies, jnp.int32),
+                                jnp.asarray(task_policies, jnp.int32))
+
+
 def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                     task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
-                    provision_policy: int = FIRST_FIT) -> DatacenterState:
+                    provision_policy: int = FIRST_FIT,
+                    dynamic: bool | None = None) -> DatacenterState:
     """Reference grid runner: outer vmap over policies, inner over scenarios.
 
     The PR-1 implementation, kept as the differential baseline for the
     fused path — ``tests/test_conformance.py`` pins ``run_grid`` ==
     ``run_grid_nested`` bit-for-bit.  Same [P, B, ...] result layout.
     """
-    def one_policy(vp, tp):
-        withp = dataclasses.replace(
-            batch,
-            vm_policy=jnp.broadcast_to(vp, batch.vm_policy.shape),
-            task_policy=jnp.broadcast_to(tp, batch.task_policy.shape))
-        return run_batch(withp, max_steps=max_steps,
-                         provision_policy=provision_policy)
-
-    return jax.vmap(one_policy)(jnp.asarray(vm_policies, jnp.int32),
-                                jnp.asarray(task_policies, jnp.int32))
+    if dynamic is None:
+        dynamic = engine.wants_dynamic(batch)
+    return _run_grid_nested(batch, vm_policies, task_policies,
+                            max_steps=max_steps,
+                            provision_policy=provision_policy,
+                            dynamic=dynamic)
 
 
 def fuse_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
@@ -269,7 +310,7 @@ def _default_inner() -> str:
 
 @lru_cache(maxsize=None)
 def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                    inner: str):
+                    inner: str, dynamic: bool):
     """jit(shard_map(map-or-vmap(run))) for one (mesh, statics) combination.
 
     Cached so repeated sweeps with the same mesh reuse the compiled
@@ -290,7 +331,7 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
              out_specs=spec, check_vma=False)
     def go(block: DatacenterState) -> DatacenterState:
         f = partial(engine.run, max_steps=max_steps,
-                    provision_policy=provision_policy)
+                    provision_policy=provision_policy, dynamic=dynamic)
         if inner == "vmap":
             return jax.vmap(f)(block)
         return jax.lax.map(f, block)
@@ -299,7 +340,8 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
 
 
 @lru_cache(maxsize=None)
-def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int):
+def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
+                  dynamic: bool):
     """jit(vmap(run)) with GSPMD in/out shardings over the lane axis.
 
     Same program as ``run_batch`` — XLA's automatic partitioner splits
@@ -310,7 +352,7 @@ def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int):
     """
     shd = NamedSharding(mesh, P(axis))
     f = partial(engine.run, max_steps=max_steps,
-                provision_policy=provision_policy)
+                provision_policy=provision_policy, dynamic=dynamic)
     return jax.jit(jax.vmap(f), in_shardings=(shd,), out_shardings=shd)
 
 
@@ -318,7 +360,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
                 max_steps: int = 1_000_000,
                 provision_policy: int = FIRST_FIT,
                 partitioner: str = "auto",
-                inner: str | None = None) -> DatacenterState:
+                inner: str | None = None,
+                dynamic: bool | None = None) -> DatacenterState:
     """``run_batch`` with the lane axis split across the devices of a mesh.
 
     ``mesh`` is a 1-D ``jax.sharding.Mesh`` (default: all local devices,
@@ -346,6 +389,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         mesh = compat.make_mesh(axis)
     else:
         axis = _lane_axis(mesh)
+    if dynamic is None:
+        dynamic = engine.wants_dynamic(batch)
     partitioner = _resolve_partitioner(partitioner)
     n_dev = mesh.shape[axis]
     have = batch.time.shape[0]
@@ -353,11 +398,11 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
     padded = pad_batch(batch, lanes)
     if partitioner == "gspmd":
         out = _gspmd_runner(mesh, axis, max_steps,
-                            provision_policy)(padded)
+                            provision_policy, dynamic)(padded)
     else:
         out = _sharded_runner(mesh, axis, max_steps, provision_policy,
                               inner if inner is not None
-                              else _default_inner())(padded)
+                              else _default_inner(), dynamic)(padded)
     if lanes == have:
         return out
     return jax.tree_util.tree_map(lambda x: x[:have], out)
@@ -365,7 +410,7 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
 
 @lru_cache(maxsize=None)
 def _grid_runner(mesh, max_steps: int, provision_policy: int,
-                 partitioner: str, inner: str):
+                 partitioner: str, inner: str, dynamic: bool):
     """One jitted fuse -> (shard) -> run -> reshape pipeline per config.
 
     The whole grid — policy broadcast, inert mesh padding, the flat lane
@@ -374,7 +419,8 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
     the host side.  ``mesh=None`` is the unsharded single-device variant.
     """
     run_lane = lambda dc: engine.run(dc, max_steps=max_steps,
-                                     provision_policy=provision_policy)
+                                     provision_policy=provision_policy,
+                                     dynamic=dynamic)
 
     def fn(batch, vm_policies, task_policies):
         n_pol = vm_policies.shape[0]
@@ -410,7 +456,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
              task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
              provision_policy: int = FIRST_FIT, mesh=None,
              sharded: bool | None = None,
-             partitioner: str = "auto") -> DatacenterState:
+             partitioner: str = "auto",
+             dynamic: bool | None = None) -> DatacenterState:
     """Scenarios x policy grid as ONE fused, device-sharded batch.
 
     ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
@@ -437,10 +484,12 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         mesh = compat.make_mesh("sweep")
     if not sharded:
         mesh = None
+    if dynamic is None:
+        dynamic = engine.wants_dynamic(batch)
     return _grid_runner(mesh, max_steps, provision_policy,
                         _resolve_partitioner(partitioner),
-                        _default_inner())(batch, vm_policies,
-                                          task_policies)
+                        _default_inner(), dynamic)(batch, vm_policies,
+                                                   task_policies)
 
 
 def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -464,6 +513,8 @@ class SweepSummary(NamedTuple):
     mean_response: jnp.ndarray   # f32[...]  mean finish - submit, s, over done
     total_cost: jnp.ndarray      # f32[...]  market bill, $
     energy_j: jnp.ndarray        # f32[...]  total joules over valid hosts
+    n_migrations: jnp.ndarray    # i32[...]  live migrations performed
+    mig_downtime: jnp.ndarray    # f32[...]  summed migration delays, VM-s
 
 
 def summarize_batch(final: DatacenterState) -> SweepSummary:
@@ -480,4 +531,6 @@ def summarize_batch(final: DatacenterState) -> SweepSummary:
         mean_response=jnp.sum(resp, axis=-1) / denom,
         total_cost=final.acct.total,
         energy_j=energy_total_j(final),
+        n_migrations=final.mig_count,
+        mig_downtime=final.mig_downtime,
     )

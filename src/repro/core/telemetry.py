@@ -15,7 +15,8 @@ from repro.core import state as S
 from repro.core.engine import StepRecord
 
 __all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
-           "trace_energy_j", "gantt", "summarize_trace"]
+           "trace_energy_j", "migration_timeline", "failure_timeline",
+           "gantt", "summarize_trace"]
 
 
 def completion_curve(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
@@ -56,6 +57,26 @@ def trace_energy_j(trace: StepRecord) -> float:
     return float(np.sum(np.asarray(w, np.float64) * np.maximum(dt, 0.0)))
 
 
+def migration_timeline(trace: StepRecord
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(times, cumulative migrations, VMs mid-migration) per event step.
+
+    The dynamic-datacenter sibling of ``completion_curve``: plot it to
+    see when the migration policy fires and how long downtime windows
+    overlap (``n_migrating`` counts VMs still copying *after* the step).
+    """
+    act = np.asarray(trace.active)
+    return (np.asarray(trace.time)[act],
+            np.asarray(trace.migrations)[act],
+            np.asarray(trace.n_migrating)[act])
+
+
+def failure_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, failed real hosts) per event step — the outage profile."""
+    act = np.asarray(trace.active)
+    return np.asarray(trace.time)[act], np.asarray(trace.hosts_down)[act]
+
+
 def gantt(dc: S.DatacenterState) -> Dict[int, list]:
     """Per-VM list of (cloudlet slot, start, finish) for completed tasks."""
     cl = dc.cloudlets
@@ -78,7 +99,8 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
     if len(t) == 0:
         return {"events": 0, "makespan": 0.0, "mean_util": 0.0,
                 "peak_util": 0.0, "energy_total_j": 0.0,
-                "mean_watts": 0.0, "peak_watts": 0.0}
+                "mean_watts": 0.0, "peak_watts": 0.0,
+                "migrations": 0, "peak_hosts_down": 0}
     # time-weighted means over event intervals (interval i ends at t[i])
     if len(t) > 1:
         dt = np.diff(np.concatenate([[0.0], t]))
@@ -96,4 +118,6 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
         "energy_total_j": trace_energy_j(trace),
         "mean_watts": mean_watts,
         "peak_watts": float(watts.max()),
+        "migrations": int(np.asarray(trace.migrations)[act][-1]),
+        "peak_hosts_down": int(np.asarray(trace.hosts_down)[act].max()),
     }

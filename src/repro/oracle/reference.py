@@ -17,15 +17,26 @@ Covered semantics (all four Figure 3 policy combinations):
     task units by submission rank) and TIME_SHARED (equal fluid share,
     at most one virtual PE per task unit),
   * the discrete-event loop: next event = earliest completion / cloudlet
-    arrival / VM arrival; piecewise-constant rates between events,
+    arrival / VM arrival / dynamic-event time / migration-copy
+    completion; piecewise-constant rates between events,
   * per-host energy accounting: each host's utilization→power curve
     (idle/peak watts + normalized piecewise-linear curve, mirroring
     ``core/energy.py`` with independent plain-Python math) integrated
-    over the event timeline in f64 joules.
+    over the event timeline in f64 joules,
+  * dynamic datacenters (``core/engine.py`` + ``core/migration.py``):
+    the timed event table — VM create (EMPTY -> PENDING), VM destroy
+    (resources returned, unfinished cloudlets cancelled), host fail
+    (pools reset, resident VMs evicted back to PENDING with progress
+    kept) and host recover — applied at the top of each event in the
+    same DESTROY/CREATE/FAIL/RECOVER order, and the live-migration
+    policies (THRESHOLD offload / DRAIN consolidation, minimum-
+    migration-time victim, WORST_FIT / MOST_FULL target, half-bandwidth
+    copy delay, per-MB copy joules split across both hosts).
 
 The completion-snap band matches the engine's
 (``finish_dt <= dt * (1 + 1e-5) + 1e-9``) so simultaneous completions
-collapse into the same event on both sides.
+collapse into the same event on both sides; migration-copy countdowns
+use the same band.
 
 Only FIRST_FIT provisioning is implemented — the conformance harness
 pins the engine's default policy; other policies are exercised by their
@@ -47,6 +58,9 @@ SPACE_SHARED = 0
 TIME_SHARED = 1
 VM_EMPTY, VM_PENDING, VM_ACTIVE, VM_FAILED, VM_DESTROYED = 0, 1, 2, 3, 4
 CL_EMPTY, CL_CREATED, CL_DONE, CL_FAILED = 0, 1, 2, 3
+EV_NONE, EV_VM_CREATE, EV_VM_DESTROY = 0, 1, 2
+EV_HOST_FAIL, EV_HOST_RECOVER = 3, 4
+MIG_OFF, MIG_THRESHOLD, MIG_DRAIN = 0, 1, 2
 INF = float(1e30)
 
 _SNAP_REL = 1e-5
@@ -98,6 +112,17 @@ class Vm:
     create_time: float = INF
     cloudlets: List["Cloudlet"] = dataclasses.field(default_factory=list)
     capacity: float = 0.0           # MIPS granted by the host this event
+    mig_remaining: float = 0.0      # migration-copy seconds left (downtime)
+
+
+@dataclasses.dataclass
+class Event:
+    """One dynamic-event table row (time s, EV_* kind, target slot)."""
+    index: int
+    time: float
+    kind: int
+    target: int
+    fired: bool = False
 
 
 @dataclasses.dataclass
@@ -129,6 +154,8 @@ class OracleResult:
     energy_j: np.ndarray            # f64[H] joules accrued per host slot
     time: float                     # clock at quiescence (seconds)
     n_events: int                   # events processed
+    n_migrations: int = 0           # live migrations performed
+    mig_downtime: float = 0.0       # summed migration delays (VM-seconds)
 
     @property
     def n_done(self) -> int:
@@ -145,15 +172,24 @@ class ReferenceSimulator:
     def __init__(self, hosts: List[Host], vms: List[Vm],
                  cloudlets: List[Cloudlet], *, vm_policy: int,
                  task_policy: int, reserve_pes: bool,
+                 events: Optional[List[Event]] = None,
+                 mig_policy: int = MIG_OFF, mig_threshold: float = 0.8,
+                 mig_energy_per_mb: float = 0.0,
                  n_vm_slots: Optional[int] = None,
                  n_cl_slots: Optional[int] = None,
                  n_host_slots: Optional[int] = None):
         self.hosts = hosts
         self.vms = vms
         self.cloudlets = cloudlets
+        self.events = list(events) if events else []
         self.vm_policy = int(vm_policy)
         self.task_policy = int(task_policy)
         self.reserve_pes = bool(reserve_pes)
+        self.mig_policy = int(mig_policy)
+        self.mig_threshold = float(mig_threshold)
+        self.mig_energy_per_mb = float(mig_energy_per_mb)
+        self.n_migrations = 0
+        self.mig_downtime = 0.0
         self.n_vm_slots = n_vm_slots if n_vm_slots is not None else (
             max((v.index for v in vms), default=-1) + 1)
         self.n_cl_slots = n_cl_slots if n_cl_slots is not None else (
@@ -180,6 +216,11 @@ class ReferenceSimulator:
         """Build from a ``repro.core.state.DatacenterState`` pytree."""
         g = lambda x: np.asarray(x)
         h = dc.hosts
+        # real hosts are num_pes > 0 (padding slots); `valid` is carried,
+        # not filtered — it is dynamic state now (an initially-failed
+        # real host can return via EV_HOST_RECOVER, and the engine keeps
+        # simulating it), so dropping invalid hosts here would silently
+        # narrow the differential contract below the engine's state space
         hosts = [
             Host(i, int(g(h.num_pes)[i]), float(g(h.mips_per_pe)[i]),
                  float(g(h.ram)[i]), float(g(h.bw)[i]),
@@ -189,15 +230,28 @@ class ReferenceSimulator:
                  power_curve=tuple(
                      float(x) for x in g(h.power_curve)[i]),
                  valid=bool(g(h.valid)[i]))
-            for i in range(g(h.num_pes).shape[0]) if bool(g(h.valid)[i])
+            for i in range(g(h.num_pes).shape[0])
+            if int(g(h.num_pes)[i]) > 0
         ]
+        ev = np.asarray(dc.events, np.float64).reshape(-1, 4)
+        fired = np.asarray(dc.event_fired, bool).reshape(-1)
+        events = [
+            Event(i, float(ev[i, 0]), int(ev[i, 1]), int(ev[i, 2]),
+                  fired=bool(fired[i]))
+            for i in range(ev.shape[0]) if int(ev[i, 1]) != EV_NONE
+        ]
+        create_targets = {e.target for e in events
+                          if e.kind == EV_VM_CREATE and not e.fired}
         v = dc.vms
+        # EMPTY slots are padding *unless* a pending create event will
+        # bring them to life mid-run.
         vms = [
             Vm(i, int(g(v.req_pes)[i]), float(g(v.req_mips)[i]),
                float(g(v.ram)[i]), float(g(v.bw)[i]), float(g(v.size)[i]),
-               float(g(v.submit_time)[i]), state=int(g(v.state)[i]))
+               float(g(v.submit_time)[i]), state=int(g(v.state)[i]),
+               mig_remaining=float(g(v.mig_remaining)[i]))
             for i in range(g(v.req_pes).shape[0])
-            if int(g(v.state)[i]) != VM_EMPTY
+            if int(g(v.state)[i]) != VM_EMPTY or i in create_targets
         ]
         c = dc.cloudlets
         cls_ = [
@@ -210,6 +264,10 @@ class ReferenceSimulator:
                    vm_policy=int(g(dc.vm_policy)),
                    task_policy=int(g(dc.task_policy)),
                    reserve_pes=bool(int(g(dc.reserve_pes))),
+                   events=events,
+                   mig_policy=int(g(dc.mig_policy)),
+                   mig_threshold=float(g(dc.mig_threshold)),
+                   mig_energy_per_mb=float(g(dc.mig_energy_per_mb)),
                    n_vm_slots=g(v.req_pes).shape[0],
                    n_cl_slots=g(c.vm).shape[0],
                    n_host_slots=g(h.num_pes).shape[0])
@@ -251,12 +309,76 @@ class ReferenceSimulator:
             vm.state = VM_ACTIVE
             vm.create_time = self.time
 
+    # -- dynamic events (engine.apply_due_events mirror) --------------------
+    def _apply_events(self):
+        """Apply every pending event row due now, in the engine's kind
+        order: DESTROY, CREATE, FAIL, RECOVER (ties by row index)."""
+        due = [e for e in self.events
+               if not e.fired and e.kind != EV_NONE and e.time <= self.time]
+        vm_by_index = {v.index: v for v in self.vms}
+        for e in sorted((e for e in due if e.kind == EV_VM_DESTROY),
+                        key=lambda e: e.index):
+            vm = vm_by_index.get(e.target)
+            if vm is None or vm.state not in (VM_PENDING, VM_ACTIVE):
+                continue
+            if vm.state == VM_ACTIVE and vm.host is not None:
+                h = vm.host
+                h.free_ram += vm.ram
+                h.free_bw += vm.bw
+                h.free_storage += vm.size
+                if self.reserve_pes:
+                    h.free_pes += vm.req_pes
+                h.vms.remove(vm)
+            vm.state = VM_DESTROYED
+            vm.host = None
+            vm.mig_remaining = 0.0
+            for cl in vm.cloudlets:
+                if cl.state == CL_CREATED:
+                    cl.state = CL_FAILED
+        # NOTE: submit_time is never rewritten (mirrors the engine): an
+        # evicted VM's original submission is already due, so it
+        # re-provisions immediately in original FCFS order; a created VM
+        # provisions at max(event time, its submit_time).
+        for e in sorted((e for e in due if e.kind == EV_VM_CREATE),
+                        key=lambda e: e.index):
+            vm = vm_by_index.get(e.target)
+            if vm is None or vm.state != VM_EMPTY:
+                continue
+            vm.state = VM_PENDING
+        host_by_index = {h.index: h for h in self.hosts}
+        for e in sorted((e for e in due if e.kind == EV_HOST_FAIL),
+                        key=lambda e: e.index):
+            h = host_by_index.get(e.target)
+            if h is None or not h.valid or h.num_pes <= 0:
+                continue
+            h.valid = False
+            for vm in h.vms:            # evict: back to PENDING, progress kept
+                if vm.state == VM_ACTIVE:
+                    vm.state = VM_PENDING
+                    vm.host = None
+                    vm.create_time = INF
+                    vm.mig_remaining = 0.0
+            h.vms = []
+            h.free_ram, h.free_bw = h.ram, h.bw
+            h.free_storage, h.free_pes = h.storage, float(h.num_pes)
+        for e in sorted((e for e in due if e.kind == EV_HOST_RECOVER),
+                        key=lambda e: e.index):
+            h = host_by_index.get(e.target)
+            if h is None or h.valid or h.num_pes <= 0:
+                continue
+            h.valid = True
+            h.free_ram, h.free_bw = h.ram, h.bw
+            h.free_storage, h.free_pes = h.storage, float(h.num_pes)
+        for e in due:
+            e.fired = True
+
     # -- the two-level update walk (updateVMsProcessing cascade) ------------
     def _runnable(self, cl: Cloudlet, vm: Vm) -> bool:
         return (cl.state == CL_CREATED
                 and cl.submit_time <= self.time
                 and cl.remaining > 0.0
-                and vm.state == VM_ACTIVE)
+                and vm.state == VM_ACTIVE
+                and vm.mig_remaining <= 0.0)
 
     def _update_rates(self):
         for cl in self.cloudlets:
@@ -308,18 +430,130 @@ class ReferenceSimulator:
                 for cl in runnable:
                     cl.rate = share
 
+    # -- live migration (core/migration.py mirror) --------------------------
+    def _host_util(self, host: Host) -> float:
+        """CPU utilization from current rates (energy.host_utilization)."""
+        cap = host.num_pes * host.mips_per_pe
+        if cap <= 0.0:
+            return 0.0
+        return sum(cl.rate for vm in host.vms
+                   for cl in vm.cloudlets) / cap
+
+    def _frac_used(self, host: Host) -> float:
+        return 1.0 - host.free_ram / host.ram if host.ram > 0.0 else 0.0
+
+    def _select_migration(self):
+        """(vm, src, dst, delay) for the triggered migration, else None.
+
+        Mirrors ``migration.select_migration``: single candidate per
+        event; ties break to the lowest index everywhere (the engine's
+        argmax/argmin pick the first extremum).
+        """
+        if self.mig_policy == MIG_OFF:
+            return None
+        util = {h.index: self._host_util(h) for h in self.hosts}
+        loaded = [h for h in self.hosts
+                  if h.valid and any(v.state == VM_ACTIVE for v in h.vms)]
+        if self.mig_policy == MIG_THRESHOLD:
+            over = [h for h in loaded if util[h.index] > self.mig_threshold]
+            if not over:
+                return None
+            src = max(over, key=lambda h: (util[h.index], -h.index))
+        else:                                   # MIG_DRAIN
+            under = [h for h in loaded
+                     if util[h.index] < self.mig_threshold]
+            if not under:
+                return None
+            src = min(under, key=lambda h: (self._frac_used(h), h.index))
+        cand = [v for v in src.vms
+                if v.state == VM_ACTIVE and v.mig_remaining <= 0.0]
+        if not cand:
+            return None
+        vm = min(cand, key=lambda v: (v.ram, v.index))
+        targets = []
+        for h in self.hosts:
+            if h.index == src.index or not self._feasible(h, vm):
+                continue
+            # projected utilization once the victim resumes there, from
+            # *resident VM demand* (placement-based; mid-copy and
+            # between-waves-idle VMs still claim their cores) — the
+            # anti-ping-pong stability guard: THRESHOLD targets must
+            # absorb the demand and stay within the threshold, DRAIN
+            # targets pack up to CPU capacity but never oversubscribe
+            cap = h.num_pes * h.mips_per_pe
+            resident = sum(w.req_pes * min(w.req_mips, h.mips_per_pe)
+                           for w in h.vms if w.state == VM_ACTIVE)
+            demand = vm.req_pes * min(vm.req_mips, h.mips_per_pe)
+            proj = ((resident + demand) / cap if cap > 0.0 else INF)
+            if self.mig_policy == MIG_THRESHOLD:
+                if proj > self.mig_threshold:
+                    continue                    # never overload a target
+            elif (self._frac_used(h) <= self._frac_used(src)
+                  or proj > 1.0):
+                continue                        # packing moves upward
+            targets.append(h)
+        if not targets:
+            return None
+        if self.mig_policy == MIG_THRESHOLD:    # WORST_FIT: most free RAM
+            dst = max(targets, key=lambda h: (h.free_ram, -h.index))
+        else:                                   # MOST_FULL: fullest fraction
+            dst = max(targets, key=lambda h: (self._frac_used(h), -h.index))
+        link = 0.5 * min(src.bw, dst.bw)
+        delay = vm.ram / link if link > 0.0 else INF
+        return vm, src, dst, delay
+
+    def _maybe_migrate(self) -> bool:
+        """Apply at most one migration for this event; True if one fired."""
+        sel = self._select_migration()
+        if sel is None:
+            return False
+        vm, src, dst, delay = sel
+        src.free_ram += vm.ram
+        src.free_bw += vm.bw
+        src.free_storage += vm.size
+        dst.free_ram -= vm.ram
+        dst.free_bw -= vm.bw
+        dst.free_storage -= vm.size
+        if self.reserve_pes:
+            src.free_pes += vm.req_pes
+            dst.free_pes -= vm.req_pes
+        src.vms.remove(vm)
+        dst.vms.append(vm)
+        vm.host = dst
+        vm.mig_remaining = delay
+        joules = 0.5 * vm.ram * self.mig_energy_per_mb
+        src.energy_j += joules
+        dst.energy_j += joules
+        self.n_migrations += 1
+        self.mig_downtime += delay
+        return True
+
     # -- event queue --------------------------------------------------------
-    def _next_dt(self) -> float:
+    def _next_dt(self) -> tuple:
+        """(dt, arrive) — head delta plus the absolute arrival head.
+
+        ``arrive`` is the earliest future submit/event-table time; when
+        it wins (ties included) the clock is set to that exact value,
+        mirroring the engine's exact-arrival clock rule.
+        """
         dt = INF
+        arrive = INF
         for cl in self.cloudlets:
             if cl.state == CL_CREATED and cl.rate > 0.0:
                 dt = min(dt, cl.remaining / cl.rate)
             if cl.state == CL_CREATED and cl.submit_time > self.time:
-                dt = min(dt, cl.submit_time - self.time)
+                arrive = min(arrive, cl.submit_time)
         for vm in self.vms:
             if vm.state == VM_PENDING and vm.submit_time > self.time:
-                dt = min(dt, vm.submit_time - self.time)
-        return dt
+                arrive = min(arrive, vm.submit_time)
+            if vm.mig_remaining > 0.0:
+                dt = min(dt, vm.mig_remaining)
+        for e in self.events:
+            if not e.fired and e.kind != EV_NONE and e.time > self.time:
+                arrive = min(arrive, e.time)
+        if self._select_migration() is not None:
+            dt = 0.0            # same-instant migration cascade chains on
+        return dt, arrive
 
     def _accrue_energy(self, dt: float):
         """Integrate host power over [time, time+dt) — rates are constant
@@ -333,7 +567,7 @@ class ReferenceSimulator:
             util = consumed / cap if cap > 0.0 else 0.0
             host.energy_j += host.power_at(util) * dt
 
-    def _advance(self, dt: float):
+    def _advance(self, dt: float, t_next: float):
         snap = dt * (1.0 + _SNAP_REL) + _SNAP_ABS
         for cl in self.cloudlets:
             if cl.state != CL_CREATED:
@@ -342,21 +576,34 @@ class ReferenceSimulator:
                 cl.start_time = self.time
             if cl.rate > 0.0 and cl.remaining / cl.rate <= snap:
                 cl.remaining = 0.0
-                cl.finish_time = self.time + dt
+                cl.finish_time = t_next
                 cl.state = CL_DONE
             else:
                 cl.remaining = max(cl.remaining - cl.rate * dt, 0.0)
-        self.time += dt
+        for vm in self.vms:     # migration-copy countdown, same snap band
+            if vm.mig_remaining > 0.0:
+                if vm.mig_remaining <= snap:
+                    vm.mig_remaining = 0.0
+                else:
+                    vm.mig_remaining = max(vm.mig_remaining - dt, 0.0)
+        self.time = t_next
 
     def run(self, max_events: int = 100_000) -> OracleResult:
         while self.n_events < max_events:
+            self._apply_events()
             self._provision()
             self._update_rates()
-            dt = self._next_dt()
-            if dt >= INF:
+            if self._maybe_migrate():
+                self._update_rates()
+            dt, arrive = self._next_dt()
+            dt_arr = arrive - self.time if arrive < INF else INF
+            head = min(dt, dt_arr)
+            if head >= INF:
                 break
-            self._accrue_energy(dt)
-            self._advance(dt)
+            # arrivals win ties: the clock lands on the exact table time
+            t_next = arrive if dt_arr <= dt else self.time + head
+            self._accrue_energy(head)
+            self._advance(head, t_next)
             self.n_events += 1
         return self._result()
 
@@ -378,7 +625,9 @@ class ReferenceSimulator:
             en[h.index] = h.energy_j
         return OracleResult(start_time=st, finish_time=ft, cl_state=cs,
                            vm_state=vs, vm_host=vh, energy_j=en,
-                           time=self.time, n_events=self.n_events)
+                           time=self.time, n_events=self.n_events,
+                           n_migrations=self.n_migrations,
+                           mig_downtime=self.mig_downtime)
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:

@@ -29,6 +29,7 @@ N_VMS, PER_VM = 4, 3
 POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
                for tp in (S.SPACE_SHARED, S.TIME_SHARED)]
 SEEDS = list(range(26))                 # 26 seeds x 4 combos = 104 scenarios
+DYN_SEEDS = list(range(16))             # +16 x 4 = 64 dynamic scenarios
 
 
 def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
@@ -72,6 +73,70 @@ def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
                              reserve_pes=bool(seed % 2))
 
 
+def make_dynamic_scenario(seed, vm_policy, task_policy, *, n_hosts=4,
+                          n_vms=5, per_vm=3):
+    """Randomized *dynamic* scenario: lifecycle events + live migration.
+
+    On top of ``make_scenario``'s randomized hosts/VMs/cloudlets/power
+    models this draws a timed event table — a host failure with a later
+    recovery, a mid-run VM destroy, and a latent VM slot (VM_EMPTY)
+    brought to life by a create event, cloudlets pre-attached — plus a
+    migration policy cycling OFF / THRESHOLD / DRAIN with seed.  Times
+    are 2-decimal values like the static generator so the engine's f32
+    clock lands exactly on them.
+    """
+    rng = np.random.default_rng(10_000 + seed)
+    idle = rng.uniform(0.05, 0.2, n_hosts)
+    g4 = np.asarray(energy.normalize_watts(energy.SPEC_G4_WATTS)[2])
+    lin = np.asarray(energy.linear_curve())
+    curves = np.where(rng.integers(0, 2, n_hosts)[:, None] == 1,
+                      g4[None], lin[None])
+    hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
+                         rng.choice([250.0, 500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6,
+                         idle_w=idle,
+                         peak_w=idle + rng.uniform(0.2, 0.8, n_hosts),
+                         power_curve=curves)
+    nv = n_vms + 1                      # last slot is the latent create
+    vms = S.make_vms(
+        rng.integers(1, 3, nv),
+        rng.choice([250.0, 500.0, 1000.0], nv),
+        rng.choice([64.0, 128.0, 256.0], nv), 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 5, nv), 2).astype(np.float32))
+    vms = dataclasses.replace(
+        vms, state=vms.state.at[n_vms].set(S.VM_EMPTY))
+    owners = np.repeat(np.arange(nv, dtype=np.int32), per_vm)
+    submit = np.sort(
+        np.round(rng.uniform(0, 20, (nv, per_vm)), 2),
+        axis=1).reshape(-1).astype(np.float32)
+    lengths = np.round(
+        rng.uniform(500, 8000, nv * per_vm)).astype(np.float32)
+    cl = S.make_cloudlets(owners, lengths, submit)
+
+    fail_t = round(float(rng.uniform(5, 25)), 2)
+    recover_t = round(fail_t + float(rng.uniform(5, 15)), 2)
+    fail_host = int(rng.integers(0, n_hosts))
+    destroy_t = round(float(rng.uniform(15, 35)), 2)
+    destroy_vm = int(rng.integers(0, n_vms))
+    create_t = round(float(rng.uniform(1, 10)), 2)
+    times = [fail_t, recover_t, destroy_t, create_t]
+    kinds = [S.EV_HOST_FAIL, S.EV_HOST_RECOVER, S.EV_VM_DESTROY,
+             S.EV_VM_CREATE]
+    targets = [fail_host, fail_host, destroy_vm, n_vms]
+    if seed % 4 == 0:                   # a second, uncorrelated outage
+        times.append(round(float(rng.uniform(10, 30)), 2))
+        kinds.append(S.EV_HOST_FAIL)
+        targets.append(int(rng.integers(0, n_hosts)))
+    events = S.make_events(times, kinds, targets)
+
+    mig_policy = (S.MIG_OFF, S.MIG_THRESHOLD, S.MIG_DRAIN)[seed % 3]
+    mig_threshold = 0.7 if mig_policy == S.MIG_THRESHOLD else 0.45
+    return S.make_datacenter(
+        hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
+        reserve_pes=bool(seed % 2), events=events, mig_policy=mig_policy,
+        mig_threshold=mig_threshold, mig_energy_per_mb=0.001)
+
+
 # ---------------------------------------------------------------------------
 # Engine vs oracle
 # ---------------------------------------------------------------------------
@@ -107,6 +172,49 @@ def test_engine_matches_oracle(vm_policy, task_policy):
         np.testing.assert_allclose(
             np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
             rtol=0, atol=1e-3, err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle_dynamic(vm_policy, task_policy):
+    """64 dynamic scenarios (16 seeds x 2x2 policies): VM lifecycle events,
+    host fail/recover, and live migration, engine vs oracle — completion
+    times and per-host energy within 1e-3, identical event/migration
+    counts, identical final VM placements.  Together with the 104 static
+    scenarios the conformance suite covers 168 scenarios."""
+    total_migrations = 0
+    for seed in DYN_SEEDS:
+        dc = make_dynamic_scenario(seed, vm_policy, task_policy)
+        out, trace = run_trace(dc, num_steps=384)
+        res = simulate_dense(dc)
+        ctx = (seed, vm_policy, task_policy)
+
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state), res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.start_time, np.float64)[done],
+            res.start_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        # dynamic placements: created/destroyed/evicted/migrated VMs land
+        # in identical states on identical hosts
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        # migration accounting: same count, same total downtime
+        assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx
+        np.testing.assert_allclose(float(np.asarray(out.mig_downtime)),
+                                   res.mig_downtime, rtol=0, atol=1e-3,
+                                   err_msg=str(ctx))
+        total_migrations += res.n_migrations
+    # the generator must actually exercise migration on this policy row
+    assert total_migrations > 0
 
 
 def test_oracle_matches_fig3_exactly():
@@ -352,6 +460,79 @@ def test_sweep_ragged_padding_is_inert():
     np.testing.assert_array_equal(
         np.asarray(s_big.cloudlets.finish_time),
         np.asarray(out.cloudlets.finish_time)[1])
+
+
+def test_sweep_dynamic_lanes_bitwise_and_oracle():
+    """Mixed static + dynamic lanes: the batched runner reproduces every
+    single run bit-for-bit (inert event padding on static lanes) and the
+    dynamic lanes agree with the oracle."""
+    dcs = ([make_dynamic_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 1, 5)]
+           + [make_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 3)])
+    batch = sweep.stack_scenarios(dcs)
+    assert batch.events.shape[1] > 0        # event axis padded batch-wide
+    out = sweep.run_batch(batch, max_steps=512)
+    for i, dc in enumerate(dcs):
+        single = run(dc, max_steps=512, dynamic=True)
+        nc = np.asarray(single.cloudlets.finish_time).shape[0]
+        nh = np.asarray(single.hosts.energy_j).shape[0]
+        nv = np.asarray(single.vms.host).shape[0]
+        for name in ("finish_time", "start_time", "remaining", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.cloudlets, name)),
+                np.asarray(getattr(out.cloudlets, name))[i][:nc],
+                err_msg=f"lane {i} field {name}")
+        np.testing.assert_array_equal(np.asarray(single.vms.host),
+                                      np.asarray(out.vms.host)[i][:nv])
+        np.testing.assert_array_equal(np.asarray(single.hosts.energy_j),
+                                      np.asarray(out.hosts.energy_j)[i][:nh])
+        np.testing.assert_array_equal(np.asarray(single.mig_count),
+                                      np.asarray(out.mig_count)[i])
+        np.testing.assert_array_equal(np.asarray(single.time),
+                                      np.asarray(out.time)[i])
+    for i in (0, 1, 2):                     # dynamic lanes vs the oracle
+        res = simulate_dense(dcs[i])
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state)[i][:res.cl_state.shape[0]],
+            res.cl_state)
+        assert int(np.asarray(out.mig_count)[i]) == res.n_migrations
+
+
+def test_sweep_grid_dynamic_fused_equals_nested_bitwise():
+    """Dynamic scenarios through the fused grid == nested grid == single
+    runs — event tables and migration stats included, bit for bit."""
+    dcs = [make_dynamic_scenario(s, *POLICY_GRID[s % 4]) for s in (1, 2)]
+    batch = sweep.stack_scenarios(dcs)
+    vm_p, task_p = sweep.policy_grid()
+    fused = sweep.run_grid(batch, vm_p, task_p, max_steps=512,
+                           sharded=False)
+    nested = sweep.run_grid_nested(batch, vm_p, task_p, max_steps=512)
+    for name in ("finish_time", "start_time", "remaining", "state"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.cloudlets, name)),
+            np.asarray(getattr(nested.cloudlets, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(fused.vms.host),
+                                  np.asarray(nested.vms.host))
+    np.testing.assert_array_equal(np.asarray(fused.hosts.energy_j),
+                                  np.asarray(nested.hosts.energy_j))
+    np.testing.assert_array_equal(np.asarray(fused.mig_count),
+                                  np.asarray(nested.mig_count))
+    np.testing.assert_array_equal(np.asarray(fused.mig_downtime),
+                                  np.asarray(nested.mig_downtime))
+    vm_np, task_np = np.asarray(vm_p), np.asarray(task_p)
+    for p, b in ((0, 0), (2, 1)):
+        cell = dataclasses.replace(dcs[b], vm_policy=jnp.int32(vm_np[p]),
+                                   task_policy=jnp.int32(task_np[p]))
+        single = run(cell, max_steps=512)
+        nc = np.asarray(single.cloudlets.finish_time).shape[0]
+        np.testing.assert_array_equal(
+            np.asarray(single.cloudlets.finish_time),
+            np.asarray(fused.cloudlets.finish_time)[p, b][:nc])
+        np.testing.assert_array_equal(
+            np.asarray(single.mig_count),
+            np.asarray(fused.mig_count)[p, b])
+    summ = sweep.summarize_batch(fused)
+    assert np.asarray(summ.n_migrations).shape == (4, 2)
+    assert np.asarray(summ.mig_downtime).shape == (4, 2)
 
 
 def test_sweep_oracle_cross_check():

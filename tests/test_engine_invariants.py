@@ -1,14 +1,18 @@
-"""Non-hypothesis smoke variant of the DES engine's core invariants.
+"""The DES engine's property-based invariants over fixed seed sweeps.
 
-``test_engine_properties.py`` checks these properties with hypothesis;
-this module re-asserts them over a fixed seed sweep so the invariants keep
-*some* coverage when the optional ``hypothesis`` package is absent (as in
-the minimal CI image).
+``test_engine_properties.py`` checks these properties with hypothesis-
+randomized inputs; the container (and the minimal CI image) lacks the
+optional ``hypothesis`` package, so this module carries the *same*
+properties as seed-parametrized tests with no extra dependencies: work
+conservation, causality, quiescence, the physical speed limit, energy
+non-negativity + monotonicity, and event-count/time monotonicity of the
+trace.  Every test takes ``seed`` as a pytest parameter so a failure
+names its reproducer directly.
 """
 import numpy as np
 import pytest
 
-from repro.core import state as S
+from repro.core import energy, state as S
 from repro.core.engine import run, run_trace
 from repro.core.scheduling import cloudlet_rates
 
@@ -18,11 +22,11 @@ POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
 
 
 def _scenario(seed, n_hosts, n_vms, per_vm, vm_policy, task_policy,
-              reserve):
+              reserve, *, idle_w=0.0, peak_w=0.0):
     rng = np.random.default_rng(seed)
     hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
                          rng.choice([500.0, 1000.0], n_hosts),
-                         4096.0, 1000.0, 1e6)
+                         4096.0, 1000.0, 1e6, idle_w=idle_w, peak_w=peak_w)
     vms = S.make_vms(rng.integers(1, 3, n_vms),
                      rng.choice([500.0, 1000.0], n_vms),
                      64.0, 1.0, 10.0,
@@ -39,52 +43,138 @@ def _scenario(seed, n_hosts, n_vms, per_vm, vm_policy, task_policy,
                              task_policy=task_policy, reserve_pes=reserve)
 
 
+@pytest.mark.parametrize("seed", SEEDS)
 @pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
-def test_invariants_smoke(vm_policy, task_policy):
-    for seed in SEEDS:
-        dc = _scenario(seed, n_hosts=6, n_vms=5, per_vm=4,
-                       vm_policy=vm_policy, task_policy=task_policy,
-                       reserve=bool(seed % 2))
-        out = run(dc, max_steps=2048)
-        cl = out.cloudlets
-        state = np.asarray(cl.state)
-        st_, ft = np.asarray(cl.start_time), np.asarray(cl.finish_time)
-        sub = np.asarray(cl.submit_time)
-        rem = np.asarray(cl.remaining)
-        length = np.asarray(cl.length)
+def test_invariants(seed, vm_policy, task_policy):
+    """Work conservation, causality, quiescence, and the speed limit."""
+    dc = _scenario(seed, n_hosts=6, n_vms=5, per_vm=4,
+                   vm_policy=vm_policy, task_policy=task_policy,
+                   reserve=bool(seed % 2))
+    out = run(dc, max_steps=2048)
+    cl = out.cloudlets
+    state = np.asarray(cl.state)
+    st_, ft = np.asarray(cl.start_time), np.asarray(cl.finish_time)
+    sub = np.asarray(cl.submit_time)
+    rem = np.asarray(cl.remaining)
+    length = np.asarray(cl.length)
 
-        done = state == S.CL_DONE
-        # causality: submit <= start <= finish for completed work
-        assert np.all(st_[done] >= sub[done] - 1e-4)
-        assert np.all(ft[done] >= st_[done] - 1e-4)
-        # conservation: completed work executed its full length
-        np.testing.assert_allclose(rem[done], 0.0, atol=1e-2)
-        # nothing executes past its length
-        assert np.all(length - rem >= -1e-2)
-        # quiescence: no runnable cloudlet still has positive rate
-        rates = np.asarray(cloudlet_rates(out))
-        assert np.all(rates <= 1e-6)
-        # physical speed limit: exec time >= dedicated time on fastest host
-        max_mips = float(np.asarray(dc.hosts.mips_per_pe).max())
-        assert np.all(ft[done] - st_[done]
-                      >= length[done] / max_mips - 1e-3)
-
-
-def test_while_loop_and_scan_agree_smoke():
-    for seed in SEEDS[:3]:
-        dc = _scenario(seed, n_hosts=4, n_vms=3, per_vm=3,
-                       vm_policy=S.TIME_SHARED, task_policy=S.SPACE_SHARED,
-                       reserve=False)
-        a = run(dc, max_steps=512)
-        b, _ = run_trace(dc, num_steps=512)
-        np.testing.assert_allclose(np.asarray(a.cloudlets.finish_time),
-                                   np.asarray(b.cloudlets.finish_time),
-                                   rtol=1e-6)
-        np.testing.assert_array_equal(np.asarray(a.cloudlets.state),
-                                      np.asarray(b.cloudlets.state))
+    done = state == S.CL_DONE
+    # causality: submit <= start <= finish for completed work
+    assert np.all(st_[done] >= sub[done] - 1e-4)
+    assert np.all(ft[done] >= st_[done] - 1e-4)
+    # conservation: completed work executed its full length
+    np.testing.assert_allclose(rem[done], 0.0, atol=1e-2)
+    # nothing executes past its length
+    assert np.all(length - rem >= -1e-2)
+    # quiescence: no runnable cloudlet still has positive rate
+    rates = np.asarray(cloudlet_rates(out))
+    assert np.all(rates <= 1e-6)
+    # physical speed limit: exec time >= dedicated time on fastest host
+    max_mips = float(np.asarray(dc.hosts.mips_per_pe).max())
+    assert np.all(ft[done] - st_[done]
+                  >= length[done] / max_mips - 1e-3)
 
 
-def test_determinism_smoke():
+@pytest.mark.parametrize("seed", SEEDS)
+def test_energy_nonnegative_and_monotone(seed):
+    """Per-host joules are >= 0, grow monotonically with simulated time,
+    and every interval's fleet power stays within [idle, peak] bounds."""
+    dc = _scenario(seed, n_hosts=5, n_vms=4, per_vm=3,
+                   vm_policy=S.TIME_SHARED, task_policy=S.TIME_SHARED,
+                   reserve=False, idle_w=10.0, peak_w=50.0)
+    half, _ = run_trace(dc, num_steps=16)
+    full, trace = run_trace(dc, num_steps=512)
+    e_half = np.asarray(half.hosts.energy_j, np.float64)
+    e_full = np.asarray(full.hosts.energy_j, np.float64)
+    assert np.all(e_half >= 0.0)
+    # monotone per host: more simulated events never un-burn joules
+    assert np.all(e_full >= e_half - 1e-6)
+    act = np.asarray(trace.active)
+    watts = np.asarray(trace.watts)[act]
+    n_hosts = e_full.shape[0]
+    assert np.all(watts >= 10.0 * n_hosts - 1e-3)   # fleet idle floor
+    assert np.all(watts <= 50.0 * n_hosts + 1e-3)   # fleet peak ceiling
+    # the state accumulator equals the trace integral (both exact)
+    total = float(np.asarray(energy.energy_total_j(full)))
+    dt = np.diff(np.concatenate([[0.0], np.asarray(trace.time)[act]]))
+    np.testing.assert_allclose(total, float((watts * dt).sum()), rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_event_count_and_time_monotonicity(seed):
+    """The trace clock and completion counter never decrease, events stop
+    exactly at quiescence (active is a prefix), and the while_loop and
+    scan drivers visit identical event sequences."""
+    dc = _scenario(seed, n_hosts=4, n_vms=3, per_vm=3,
+                   vm_policy=S.TIME_SHARED, task_policy=S.SPACE_SHARED,
+                   reserve=False)
+    a = run(dc, max_steps=512)
+    b, trace = run_trace(dc, num_steps=512)
+    act = np.asarray(trace.active)
+    t = np.asarray(trace.time)
+    # time monotone over the whole trace; constant after quiescence
+    assert np.all(np.diff(t) >= 0.0)
+    # n_done monotone (event-count monotonicity of completions)
+    assert np.all(np.diff(np.asarray(trace.n_done)) >= 0)
+    # active is a prefix: once quiescent, never active again (static run)
+    assert np.all(act[:-1].astype(int) >= act[1:].astype(int))
+    # both drivers land on identical final states
+    np.testing.assert_allclose(np.asarray(a.cloudlets.finish_time),
+                               np.asarray(b.cloudlets.finish_time),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.cloudlets.state),
+                                  np.asarray(b.cloudlets.state))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_space_shared_exec_time_exact(seed):
+    """Under space/space with reserved PEs, exec time == length / granted
+    MIPS exactly (the paper's §5 dedicated-host setting)."""
+    dc = _scenario(seed, n_hosts=8, n_vms=4, per_vm=3,
+                   vm_policy=S.SPACE_SHARED, task_policy=S.SPACE_SHARED,
+                   reserve=True)
+    out = run(dc, max_steps=2048)
+    cl = out.cloudlets
+    done = np.asarray(cl.state) == S.CL_DONE
+    if not done.any():
+        return
+    vms = out.vms
+    vm_of = np.asarray(cl.vm)[done]
+    host_of = np.asarray(vms.host)[vm_of]
+    mips = np.minimum(np.asarray(vms.req_mips)[vm_of],
+                      np.asarray(out.hosts.mips_per_pe)[host_of])
+    exec_t = np.asarray(cl.finish_time - cl.start_time)[done]
+    np.testing.assert_allclose(
+        exec_t, np.asarray(cl.length)[done] / mips, rtol=1e-4)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_policies_complete_same_work_at_same_cpu_cost(seed):
+    """Task policy changes the schedule, never the work: identical
+    completion sets and identical executed MI (work conservation across
+    the Figure 3 matrix)."""
+    mk = lambda tp: _scenario(seed, 6, 4, 3, S.SPACE_SHARED, tp, True)
+    a = run(mk(S.SPACE_SHARED), max_steps=1024)
+    b = run(mk(S.TIME_SHARED), max_steps=1024)
+    da = np.asarray(a.cloudlets.state) == S.CL_DONE
+    db = np.asarray(b.cloudlets.state) == S.CL_DONE
+    np.testing.assert_array_equal(da, db)   # same set completes
+    ea = np.asarray(a.cloudlets.length - a.cloudlets.remaining)
+    eb = np.asarray(b.cloudlets.length - b.cloudlets.remaining)
+    np.testing.assert_allclose(ea.sum(), eb.sum(), rtol=1e-5)
+    # per-task response can only stretch relative to dedicated service time
+    vm_of = np.asarray(a.cloudlets.vm)[da]
+    for out, mask in ((a, da), (b, db)):
+        host_of = np.asarray(out.vms.host)[vm_of]
+        mips = np.minimum(np.asarray(out.vms.req_mips)[vm_of],
+                          np.asarray(out.hosts.mips_per_pe)[host_of])
+        span = np.asarray(out.cloudlets.finish_time
+                          - out.cloudlets.start_time)[mask]
+        assert np.all(span >= np.asarray(out.cloudlets.length)[mask]
+                      / mips - 1e-3)
+
+
+def test_determinism():
     dc = _scenario(123, 6, 5, 4, S.TIME_SHARED, S.TIME_SHARED, False)
     a = run(dc, max_steps=1024)
     b = run(dc, max_steps=1024)

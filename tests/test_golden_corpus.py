@@ -1,0 +1,140 @@
+"""Golden-scenario corpus: digest, generator-drift, and replay checks.
+
+``tests/data/golden_scenarios.json`` freezes every conformance scenario
+payload (26 static + 16 dynamic seeds; the 2x2 policy matrix expands at
+replay, so 42 payloads cover the 168 conformance scenarios).  Three
+contracts:
+
+  1. the file's sha256 digest matches its payload (integrity),
+  2. the live generators in ``test_conformance.py`` still reproduce the
+     stored arrays exactly — if a future NumPy changes the
+     ``default_rng`` stream this fails loudly and the corpus file, not
+     the generators, remains the scenarios of record,
+  3. scenarios rebuilt from the JSON alone (no RNG anywhere) replay
+     engine-vs-oracle within the conformance tolerances.
+
+Regenerate after *intentional* generator changes with:
+    PYTHONPATH=src:tests python tools/make_golden_corpus.py
+"""
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from test_conformance import (DYN_SEEDS, POLICY_GRID, SEEDS,
+                              make_dynamic_scenario, make_scenario)
+
+from repro.core import state as S
+from repro.core.engine import run_trace
+from repro.oracle import simulate_dense
+
+CORPUS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
+                      "golden_scenarios.json")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    with open(CORPUS) as f:
+        return json.load(f)
+
+
+def test_corpus_digest(corpus):
+    """The stored digest matches the canonical payload (file integrity)."""
+    canon = json.dumps(corpus["scenarios"], sort_keys=True,
+                       separators=(",", ":"))
+    assert hashlib.sha256(canon.encode()).hexdigest() == corpus["digest"]
+
+
+def _assert_matches(dc, stored, ctx):
+    h, v, c = dc.hosts, dc.vms, dc.cloudlets
+    got = {
+        ("hosts", "num_pes"): h.num_pes, ("hosts", "mips_per_pe"):
+            h.mips_per_pe, ("hosts", "ram"): h.ram, ("hosts", "bw"): h.bw,
+        ("hosts", "storage"): h.storage, ("hosts", "idle_w"): h.idle_w,
+        ("hosts", "peak_w"): h.peak_w, ("hosts", "power_curve"):
+            h.power_curve,
+        ("vms", "req_pes"): v.req_pes, ("vms", "req_mips"): v.req_mips,
+        ("vms", "ram"): v.ram, ("vms", "bw"): v.bw, ("vms", "size"): v.size,
+        ("vms", "submit_time"): v.submit_time, ("vms", "state"): v.state,
+        ("cloudlets", "vm"): c.vm, ("cloudlets", "length"): c.length,
+        ("cloudlets", "submit_time"): c.submit_time,
+    }
+    for (blk, name), arr in got.items():
+        a = np.asarray(arr).reshape(-1)
+        b = np.asarray(stored[blk][name], a.dtype)
+        np.testing.assert_array_equal(a, b, err_msg=f"{ctx} {blk}.{name}")
+    np.testing.assert_array_equal(
+        np.asarray(dc.events).reshape(-1),
+        np.asarray(stored["events"], np.float32), err_msg=f"{ctx} events")
+    assert int(np.asarray(dc.reserve_pes)) == stored["reserve_pes"], ctx
+    assert int(np.asarray(dc.mig_policy)) == stored["mig_policy"], ctx
+    np.testing.assert_allclose(float(np.asarray(dc.mig_threshold)),
+                               stored["mig_threshold"], rtol=0, atol=0)
+
+
+def test_generators_reproduce_corpus(corpus):
+    """RNG-drift tripwire: regeneration must equal the frozen arrays.
+
+    A failure here means the NumPy/JAX RNG stream changed — switch the
+    conformance suite to corpus-backed replay (the file is the ground
+    truth) and regenerate deliberately."""
+    for s in SEEDS:
+        _assert_matches(make_scenario(s, 0, 0),
+                        corpus["scenarios"]["static"][str(s)],
+                        f"static seed {s}")
+    for s in DYN_SEEDS:
+        _assert_matches(make_dynamic_scenario(s, 0, 0),
+                        corpus["scenarios"]["dynamic"][str(s)],
+                        f"dynamic seed {s}")
+
+
+def rebuild(stored, vm_policy, task_policy) -> S.DatacenterState:
+    """A DatacenterState from the JSON payload alone — no RNG anywhere."""
+    h, v, c = stored["hosts"], stored["vms"], stored["cloudlets"]
+    nh = len(h["num_pes"])
+    hosts = S.make_hosts(
+        h["num_pes"], h["mips_per_pe"], h["ram"], h["bw"], h["storage"],
+        idle_w=h["idle_w"], peak_w=h["peak_w"],
+        power_curve=np.asarray(h["power_curve"],
+                               np.float32).reshape(nh, -1))
+    vms = S.make_vms(v["req_pes"], v["req_mips"], v["ram"], v["bw"],
+                     v["size"], submit_time=v["submit_time"])
+    import jax.numpy as jnp
+    vms = dataclasses.replace(
+        vms, state=jnp.asarray(v["state"], jnp.int32))
+    cl = S.make_cloudlets(c["vm"], c["length"], c["submit_time"])
+    events = np.asarray(stored["events"], np.float32).reshape(-1, 4)
+    return S.make_datacenter(
+        hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
+        reserve_pes=bool(stored["reserve_pes"]), events=events,
+        mig_policy=stored["mig_policy"],
+        mig_threshold=stored["mig_threshold"],
+        mig_energy_per_mb=stored["mig_energy_per_mb"])
+
+
+@pytest.mark.parametrize("kind,seed", [("static", 0), ("static", 9),
+                                       ("static", 17), ("dynamic", 0),
+                                       ("dynamic", 3), ("dynamic", 7)])
+def test_corpus_replays_engine_vs_oracle(corpus, kind, seed):
+    """Frozen payloads replay engine == oracle across the policy matrix
+    (the conformance pinning, sourced from disk instead of RNG)."""
+    stored = corpus["scenarios"][kind][str(seed)]
+    for vp, tp in POLICY_GRID:
+        dc = rebuild(stored, vp, tp)
+        out, trace = run_trace(dc, num_steps=384)
+        res = simulate_dense(dc)
+        ctx = (kind, seed, vp, tp)
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+        np.testing.assert_array_equal(np.asarray(out.cloudlets.state),
+                                      res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx

@@ -67,6 +67,8 @@ def test_roofline_terms_math():
                                rtol=1e-6)
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_cost_analysis_is_per_device():
     """Calibration: an SPMD-partitioned module reports PER-DEVICE flops.
 

@@ -1,0 +1,277 @@
+"""Unit semantics of the dynamic-event subsystem: VM lifecycle events,
+host fail/recover, and live migration (engine-side; the randomized
+engine-vs-oracle pinning lives in test_conformance.py)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import broker as B
+from repro.core import experiments as E
+from repro.core import migration as M
+from repro.core import state as S
+from repro.core import sweep
+from repro.core.engine import apply_due_events, run, run_trace, \
+    wants_dynamic
+
+
+def two_host_dc(**kw):
+    hosts = S.make_hosts([2, 2], [100.0, 100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=kw.pop("idle_w", 0.0),
+                         peak_w=kw.pop("peak_w", 0.0))
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 1, 1], 100.0)
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Event table semantics
+# ---------------------------------------------------------------------------
+def test_vm_destroy_frees_capacity_and_cancels_cloudlets():
+    ev = S.make_events([1.5], [S.EV_VM_DESTROY], [0])
+    dc = two_host_dc(events=ev)
+    out = run(dc, max_steps=64)
+    assert int(np.asarray(out.vms.state)[0]) == S.VM_DESTROYED
+    cl_state = np.asarray(out.cloudlets.state)
+    # VM0's first cloudlet completed at t=1 (before the destroy); the
+    # second was cancelled mid-queue; VM1's pair is untouched
+    assert cl_state[0] == S.CL_DONE and cl_state[1] == S.CL_FAILED
+    assert np.all(cl_state[2:] == S.CL_DONE)
+    # resources returned: the host could admit a same-sized VM again
+    np.testing.assert_allclose(np.asarray(out.hosts.free_ram)[0],
+                               1024.0 - 128.0)   # only VM1 still resident
+
+
+def test_vm_create_event_brings_latent_slot_to_life():
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    vms = dataclasses.replace(vms, state=vms.state.at[1].set(S.VM_EMPTY))
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    cl = S.make_cloudlets([0, 0, 1, 1], 100.0)
+    ev = S.make_events([2.0], [S.EV_VM_CREATE], [1])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, events=ev)
+    out = run(dc, max_steps=64)
+    assert int(np.asarray(out.vms.state)[1]) == S.VM_ACTIVE
+    # placed at max(create event, submit_time) = 2.0 s
+    np.testing.assert_allclose(np.asarray(out.vms.create_time)[1], 2.0)
+    # its cloudlets only start after the create event
+    assert np.all(np.asarray(out.cloudlets.start_time)[2:] >= 2.0)
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+
+
+def test_host_fail_evicts_and_reprovisions_with_progress_kept():
+    # both VMs first-fit onto host 0; it fails at t=0.5 mid-execution
+    ev = S.make_events([0.5], [S.EV_HOST_FAIL], [0])
+    dc = two_host_dc(events=ev)
+    out, trace = run_trace(dc, num_steps=64)
+    # evicted VMs land on host 1 and finish all work
+    assert np.all(np.asarray(out.vms.host) == 1)
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    assert not bool(np.asarray(out.hosts.valid)[0])
+    # progress kept: the resumed schedule is the original shifted only by
+    # nothing — re-placement is same-instant, capacity identical
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time),
+                               [1.0, 2.0, 1.0, 2.0], rtol=1e-5)
+
+
+def test_host_fail_without_spare_capacity_fails_vms():
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 1, 1], 100.0)
+    ev = S.make_events([0.5], [S.EV_HOST_FAIL], [0])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, events=ev)
+    out = run(dc, max_steps=64)
+    # nowhere to go: allocation failure, unfinished cloudlets fail
+    assert np.all(np.asarray(out.vms.state) == S.VM_FAILED)
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_FAILED)
+
+
+def test_host_recover_restores_full_capacity():
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0, submit_time=5.0)
+    cl = S.make_cloudlets([0], 100.0, submit_time=5.0)
+    ev = S.make_events([1.0, 3.0], [S.EV_HOST_FAIL, S.EV_HOST_RECOVER],
+                       [0, 0])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, events=ev)
+    out = run(dc, max_steps=64)
+    # the host recovered before the VM arrived: placement succeeds
+    assert int(np.asarray(out.vms.state)[0]) == S.VM_ACTIVE
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), 6.0,
+                               rtol=1e-5)
+
+
+def test_events_fire_exactly_once_and_out_of_range_targets_are_noops():
+    ev = S.make_events([0.5, 0.7], [S.EV_HOST_FAIL, S.EV_VM_DESTROY],
+                       [99, -3])                       # both out of range
+    dc = two_host_dc(events=ev)
+    out, trace = run_trace(dc, num_steps=64)
+    assert np.all(np.asarray(out.event_fired))
+    assert np.all(np.asarray(out.hosts.valid))
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    # firing is once: re-applying events on the final state changes nothing
+    again = apply_due_events(out)
+    np.testing.assert_array_equal(np.asarray(again.vms.state),
+                                  np.asarray(out.vms.state))
+    np.testing.assert_array_equal(np.asarray(again.hosts.free_ram),
+                                  np.asarray(out.hosts.free_ram))
+
+
+# ---------------------------------------------------------------------------
+# Migration semantics
+# ---------------------------------------------------------------------------
+def test_threshold_migration_moves_mmt_victim_and_counts_delay():
+    dc = two_host_dc(mig_policy=S.MIG_THRESHOLD, mig_threshold=0.9,
+                     mig_energy_per_mb=0.001)
+    out = run(dc, max_steps=64)
+    # both VMs start on host 0 (first-fit) at util 1.0 > 0.9: VM0 (lowest
+    # slot among equal-RAM victims) moves to host 1
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [1, 0])
+    assert int(np.asarray(out.mig_count)) == 1
+    # delay = ram / (bw/2) = 128 / 500 = 0.256 s of downtime
+    np.testing.assert_allclose(float(np.asarray(out.mig_downtime)), 0.256,
+                               rtol=1e-6)
+    # the migrated VM's cloudlets carry the downtime in their finish times
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time),
+                               [1.256, 2.256, 1.0, 2.0], rtol=1e-5)
+    # copy joules split across both hosts: 0.5 * 128 * 0.001 each
+    np.testing.assert_allclose(np.asarray(out.hosts.energy_j),
+                               [0.064, 0.064], rtol=1e-5)
+
+
+def test_migration_off_is_inert():
+    base = run(two_host_dc(), max_steps=64)
+    off = run(two_host_dc(mig_policy=S.MIG_OFF), max_steps=64,
+              dynamic=True)         # force the dynamic program
+    np.testing.assert_array_equal(np.asarray(base.cloudlets.finish_time),
+                                  np.asarray(off.cloudlets.finish_time))
+    assert int(np.asarray(off.mig_count)) == 0
+
+
+def test_drain_consolidates_upward_and_terminates():
+    # spread start: host1 holds the lone VM1 (least utilized), host0 is
+    # fuller — DRAIN packs VM1 onto host0 and stops (no ping-pong)
+    hosts = S.make_hosts([4, 4], [100.0, 100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=10.0, peak_w=50.0)
+    vms = S.make_vms([1, 1, 1], [100.0] * 3, 128.0, 10.0, 100.0)
+    vms = dataclasses.replace(vms, host=jnp.asarray([0, 0, 1], jnp.int32),
+                              state=jnp.full((3,), S.VM_ACTIVE, jnp.int32),
+                              create_time=jnp.zeros((3,), jnp.float32))
+    hosts = dataclasses.replace(
+        hosts, free_ram=hosts.free_ram - jnp.asarray([256.0, 128.0]),
+        free_bw=hosts.free_bw - jnp.asarray([20.0, 10.0]),
+        free_storage=hosts.free_storage - jnp.asarray([200.0, 100.0]))
+    cl = S.make_cloudlets([0, 1, 2], 200.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False,
+                           mig_policy=S.MIG_DRAIN, mig_threshold=0.9)
+    out, trace = run_trace(dc, num_steps=128)
+    assert np.all(np.asarray(out.vms.host) == 0)    # packed onto host 0
+    assert int(np.asarray(out.mig_count)) == 1
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    # quiesced: the trace has idle tail steps (no endless migration churn)
+    assert int(np.asarray(trace.active).sum()) < 128
+
+
+def test_threshold_never_overloads_target():
+    """The projected-utilization guard: an idle host whose utilization
+    would exceed the threshold *after* absorbing the victim is not a
+    target, so saturated fleets don't ping-pong VMs forever."""
+    hosts = S.make_hosts([1, 1], [100.0, 100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1, 1, 1], [100.0] * 3, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 1, 1, 2, 2], 400.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False,
+                           mig_policy=S.MIG_THRESHOLD, mig_threshold=0.5)
+    out = run(dc, max_steps=256)
+    # any 1-PE VM projects util 1.0 > 0.5 on any target: no migration
+    # ever fires, the fleet stays put, and all work still completes
+    assert int(np.asarray(out.mig_count)) == 0
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+
+
+def test_wants_dynamic_detection():
+    assert not wants_dynamic(two_host_dc())
+    assert wants_dynamic(two_host_dc(mig_policy=S.MIG_THRESHOLD))
+    ev = S.make_events([1.0], [S.EV_HOST_FAIL], [0])
+    assert wants_dynamic(two_host_dc(events=ev))
+
+
+def test_migration_delay_formula():
+    np.testing.assert_allclose(
+        float(M.migration_delay(jnp.float32(128.0), jnp.float32(1000.0),
+                                jnp.float32(500.0))),
+        128.0 / 250.0, rtol=1e-6)
+
+
+def test_failed_host_keeps_pre_failure_energy_in_fleet_total():
+    """``valid`` is dynamic now: a host down at quiescence must keep its
+    pre-failure joules in ``energy_total_j`` (and thus SweepSummary)."""
+    from repro.core import energy, telemetry as T
+    from repro.core.engine import run_trace as rt
+    ev = S.make_events([0.5], [S.EV_HOST_FAIL], [0])
+    dc = two_host_dc(events=ev, idle_w=10.0, peak_w=50.0)
+    final, trace = rt(dc, num_steps=64)
+    per_host = np.asarray(final.hosts.energy_j, np.float64)
+    assert per_host[0] > 0.0                     # drew power before failing
+    assert not bool(np.asarray(final.hosts.valid)[0])   # still down
+    total = float(np.asarray(energy.energy_total_j(final)))
+    np.testing.assert_allclose(total, per_host.sum(), rtol=1e-6)
+    # and the state accumulator agrees with the trace integral
+    np.testing.assert_allclose(total, T.trace_energy_j(trace), rtol=1e-5)
+
+
+def test_initially_failed_host_recovers_and_matches_oracle():
+    """A scenario may *start* with a failed real host: the oracle must
+    carry it (not drop it as padding) so EV_HOST_RECOVER conforms."""
+    from repro.oracle import simulate_dense
+    hosts = S.make_hosts([2], [100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=1.0, peak_w=5.0)
+    hosts = dataclasses.replace(hosts, valid=jnp.zeros((1,), bool))
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0, submit_time=10.0)
+    cl = S.make_cloudlets([0], 100.0, submit_time=10.0)
+    ev = S.make_events([5.0], [S.EV_HOST_RECOVER], [0])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, events=ev)
+    out, trace = run_trace(dc, num_steps=32)
+    res = simulate_dense(dc)
+    assert int(np.asarray(out.vms.state)[0]) == S.VM_ACTIVE
+    np.testing.assert_array_equal(np.asarray(out.vms.state), res.vm_state)
+    np.testing.assert_array_equal(np.asarray(out.cloudlets.state),
+                                  res.cl_state)
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time,
+                                          np.float64),
+                               res.finish_time, rtol=0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.hosts.energy_j, np.float64),
+                               res.energy_j, rtol=0, atol=1e-3)
+    assert int(np.asarray(trace.active).sum()) == res.n_events
+
+
+# ---------------------------------------------------------------------------
+# Federation threading
+# ---------------------------------------------------------------------------
+def test_federation_study_with_outage_and_migration():
+    """Dynamic knobs thread end-to-end through build_study/run_study."""
+    outage = S.make_events([30.0, 60.0],
+                           [S.EV_HOST_FAIL, S.EV_HOST_RECOVER], [0, 0])
+    providers = [
+        E.Provider(S.make_uniform_hosts(6, pes=2, ram=1024.0),
+                   S.make_market(0.05, 1e-3, 1e-4, 2e-3), events=outage),
+        E.Provider(S.make_uniform_hosts(10, pes=2, ram=1024.0),
+                   S.make_market(0.01, 1e-3, 1e-4, 2e-3)),
+    ]
+    fleets = [
+        E.UserFleet((B.VmSpec(count=8, pes=1, ram=256.0),),
+                    B.WaveSpec(waves=3, length_mi=90_000.0, period=60.0)),
+        E.UserFleet((B.VmSpec(count=6, pes=1, ram=256.0),),
+                    B.WaveSpec(waves=2, length_mi=120_000.0, period=90.0)),
+    ]
+    vm_p, task_p = sweep.policy_grid()
+    study = E.run_study(providers, fleets, vm_p, task_p, max_steps=2048,
+                        reserve_pes=False, mig_policy=S.MIG_THRESHOLD,
+                        mig_threshold=0.8)
+    assert np.asarray(study.summary.n_migrations).shape == (4, 2)
+    assert np.asarray(study.fed_migrations).shape == (4,)
+    # every policy sees the same outage; the federation still completes
+    # work on the surviving capacity
+    assert np.all(np.asarray(study.fed_done) > 0)
+    np.testing.assert_array_equal(
+        np.asarray(study.fed_migrations),
+        np.asarray(study.summary.n_migrations).sum(-1))

@@ -73,7 +73,8 @@ def test_run_sharded_on_one_device_mesh_is_bitwise():
 _TWO_DEVICE_CHECK = textwrap.dedent("""
     import numpy as np, jax
     assert jax.device_count() >= 2, jax.devices()
-    from test_conformance import make_scenario, POLICY_GRID
+    from test_conformance import (make_scenario, make_dynamic_scenario,
+                                  POLICY_GRID)
     from repro.core import sweep
     from repro.core.engine import run
 
@@ -121,7 +122,48 @@ _TWO_DEVICE_CHECK = textwrap.dedent("""
     print("SHARDED_BITWISE_OK")
 """)
 
+# Dynamic-event lanes (lifecycle events + live migration) shard the same
+# way.  A separate subprocess from the static check: the dynamic engine
+# program is its own set of XLA compilations, and one forced-2-device
+# process compiling both blows the per-test timeout on slow 2-core hosts.
+_TWO_DEVICE_DYNAMIC_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() >= 2, jax.devices()
+    from test_conformance import make_dynamic_scenario, POLICY_GRID
+    from repro.core import sweep
 
+    vm_p, task_p = sweep.policy_grid()
+    dyn = [make_dynamic_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 2)]
+    dbatch = sweep.stack_scenarios(dyn)
+    dsingle = sweep.run_grid(dbatch, vm_p, task_p, max_steps=384,
+                             sharded=False)
+    for part in ("gspmd", "shard_map"):
+        dshard = sweep.run_grid(dbatch, vm_p, task_p, max_steps=384,
+                                partitioner=part)
+        for name in ("finish_time", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(dshard.cloudlets, name)),
+                np.asarray(getattr(dsingle.cloudlets, name)),
+                err_msg=f"dynamic {part} {name}")
+        np.testing.assert_array_equal(np.asarray(dshard.vms.host),
+                                      np.asarray(dsingle.vms.host),
+                                      err_msg=f"dynamic {part} vm.host")
+        np.testing.assert_array_equal(np.asarray(dshard.hosts.energy_j),
+                                      np.asarray(dsingle.hosts.energy_j),
+                                      err_msg=f"dynamic {part} energy_j")
+        np.testing.assert_array_equal(np.asarray(dshard.mig_count),
+                                      np.asarray(dsingle.mig_count),
+                                      err_msg=f"dynamic {part} mig_count")
+        np.testing.assert_array_equal(np.asarray(dshard.event_fired),
+                                      np.asarray(dsingle.event_fired),
+                                      err_msg=f"dynamic {part} event_fired")
+    assert int(np.asarray(dsingle.mig_count).sum()) > 0
+    print("SHARDED_DYNAMIC_OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_two_devices_matches_single_device_bitwise():
     """run_grid over a (forced) 2-device host == single-device, bit-for-bit.
 
@@ -146,6 +188,40 @@ def test_sharded_two_devices_matches_single_device_bitwise():
                           env=env, cwd=REPO)
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "SHARDED_BITWISE_OK" in proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_sharded_two_devices_dynamic_lanes_bitwise():
+    """Dynamic-event grids over a (forced) 2-device host == single-device,
+    bit-for-bit, under both partitioners — migration stats and the fired
+    event masks included.
+
+    This test is the regression guard for the second CPU-partitioner
+    landmine (see ROADMAP): a loop-variant sort inside ``shard_map``
+    miscompiles into a cross-device all-reduce that deadlocks once lanes
+    quiesce at different step counts — which is why ``apply_due_events``
+    never rewrites ``vms.submit_time``.  A deadlock here surfaces as the
+    subprocess timeout.
+    """
+    if jax.device_count() >= 2:
+        exec(compile(_TWO_DEVICE_DYNAMIC_CHECK, "<two-device-dynamic>",
+                     "exec"), {})
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip(),
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)).strip(
+                os.pathsep),
+    )
+    proc = subprocess.run([sys.executable, "-c", _TWO_DEVICE_DYNAMIC_CHECK],
+                          capture_output=True, text=True, timeout=560,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED_DYNAMIC_OK" in proc.stdout
 
 
 def test_federation_study_cells_match_single_runs():

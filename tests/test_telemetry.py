@@ -79,6 +79,8 @@ def test_summarize_trace_fields():
     np.testing.assert_allclose(s["energy_total_j"], 200.0, rtol=1e-5)
     np.testing.assert_allclose(s["mean_watts"], 50.0, rtol=1e-6)
     np.testing.assert_allclose(s["peak_watts"], 50.0, rtol=1e-6)
+    assert s["migrations"] == 0
+    assert s["peak_hosts_down"] == 0
 
 
 def test_summarize_trace_empty():
@@ -91,8 +93,37 @@ def test_summarize_trace_empty():
     s = T.summarize_trace(trace)
     assert s == {"events": 0, "makespan": 0.0, "mean_util": 0.0,
                  "peak_util": 0.0, "energy_total_j": 0.0,
-                 "mean_watts": 0.0, "peak_watts": 0.0}
+                 "mean_watts": 0.0, "peak_watts": 0.0,
+                 "migrations": 0, "peak_hosts_down": 0}
     assert T.trace_energy_j(trace) == 0.0
+
+
+def test_migration_and_failure_timelines():
+    """Dynamic scenario: the migration/failure timelines record the
+    trigger, the downtime window, and the outage interval."""
+    hosts = S.make_hosts([2, 2], [100.0, 100.0], 1024.0, 1000.0, 1e6,
+                         idle_w=10.0, peak_w=50.0)
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    # the 10-MI cloudlet completes at 0.1 s — inside the 0.256 s migration
+    # copy window — so the downtime is visible on the event grid
+    cl = S.make_cloudlets([0, 0, 1, 1], [100.0, 100.0, 10.0, 100.0])
+    ev = S.make_events([6.0, 8.0], [S.EV_HOST_FAIL, S.EV_HOST_RECOVER],
+                       [1, 1])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, events=ev,
+                           mig_policy=S.MIG_THRESHOLD, mig_threshold=0.9)
+    final, trace = run_trace(dc, num_steps=64)
+    t, migs, migrating = T.migration_timeline(trace)
+    assert migs[-1] == int(np.asarray(final.mig_count)) >= 1
+    assert np.all(np.diff(migs) >= 0)       # cumulative counter
+    assert migrating.max() >= 1             # a downtime window was visible
+    tf, down = T.failure_timeline(trace)
+    assert down.max() == 1                  # host 1 failed mid-run
+    # the trailing recovery applies on the quiescing step (active=False,
+    # off the timeline) but lands in the final state
+    assert bool(np.asarray(final.hosts.valid).all())
+    s = T.summarize_trace(trace)
+    assert s["migrations"] == int(migs[-1])
+    assert s["peak_hosts_down"] == 1
 
 
 def test_gantt_groups_by_vm():

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Regenerate the golden conformance-scenario corpus.
+
+Serializes every scenario the conformance suite generates — the 26
+static seeds and 16 dynamic seeds of ``tests/test_conformance.py`` — to
+``tests/data/golden_scenarios.json`` together with a sha256 digest of
+the canonical payload.  Policies are *not* baked in: each stored seed
+expands to the full 2x2 policy matrix at replay time, exactly like the
+generators, so the file freezes 42 payloads for 168 scenarios.
+
+The committed corpus makes the conformance scenarios reproducible even
+if a future NumPy changes ``default_rng`` streams:
+``tests/test_golden_corpus.py`` fails loudly on generator drift while
+the replay test keeps pinning engine-vs-oracle from the frozen file.
+
+    PYTHONPATH=src:tests python tools/make_golden_corpus.py
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")]
+
+OUT = os.path.join(ROOT, "tests", "data", "golden_scenarios.json")
+
+
+def _arr(x):
+    """JSON-safe list from a jnp/np array (floats via float64 repr of the
+    f32 value — exact round-trip back into f32)."""
+    a = np.asarray(x)
+    if a.dtype.kind == "f":
+        return [float(v) for v in a.reshape(-1)]
+    if a.dtype.kind == "b":
+        return [bool(v) for v in a.reshape(-1)]
+    return [int(v) for v in a.reshape(-1)]
+
+
+def serialize(dc) -> dict:
+    h, v, c = dc.hosts, dc.vms, dc.cloudlets
+    return {
+        "hosts": {
+            "num_pes": _arr(h.num_pes), "mips_per_pe": _arr(h.mips_per_pe),
+            "ram": _arr(h.ram), "bw": _arr(h.bw), "storage": _arr(h.storage),
+            "idle_w": _arr(h.idle_w), "peak_w": _arr(h.peak_w),
+            "power_curve": _arr(h.power_curve),
+        },
+        "vms": {
+            "req_pes": _arr(v.req_pes), "req_mips": _arr(v.req_mips),
+            "ram": _arr(v.ram), "bw": _arr(v.bw), "size": _arr(v.size),
+            "submit_time": _arr(v.submit_time), "state": _arr(v.state),
+        },
+        "cloudlets": {
+            "vm": _arr(c.vm), "length": _arr(c.length),
+            "submit_time": _arr(c.submit_time),
+        },
+        "events": _arr(dc.events),
+        "reserve_pes": int(np.asarray(dc.reserve_pes)),
+        "mig_policy": int(np.asarray(dc.mig_policy)),
+        "mig_threshold": float(np.asarray(dc.mig_threshold)),
+        "mig_energy_per_mb": float(np.asarray(dc.mig_energy_per_mb)),
+    }
+
+
+def canonical(payload: dict) -> str:
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def digest(payload: dict) -> str:
+    return hashlib.sha256(canonical(payload).encode()).hexdigest()
+
+
+def main() -> int:
+    from test_conformance import (DYN_SEEDS, SEEDS, make_dynamic_scenario,
+                                  make_scenario)
+
+    payload = {
+        "static": {str(s): serialize(make_scenario(s, 0, 0))
+                   for s in SEEDS},
+        "dynamic": {str(s): serialize(make_dynamic_scenario(s, 0, 0))
+                    for s in DYN_SEEDS},
+    }
+    out = {"format": 1, "digest": digest(payload), "scenarios": payload}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    n = len(payload["static"]) + len(payload["dynamic"])
+    print(f"wrote {OUT}: {n} scenario payloads, digest {out['digest'][:16]}…")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
