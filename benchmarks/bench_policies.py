@@ -18,6 +18,11 @@ same workload compiled as the static program (``dynamic=False``), as the
 dynamic program with nothing to do, and with a live THRESHOLD migration
 policy actually firing.
 
+``bench_network`` does the same for the network subsystem: the
+pre-network program vs the networked program idling (disabled topology)
+vs actually staging every cloudlet's data through a contended WAN
+gateway (``networked=True`` + an enabled two-tier topology).
+
 Besides the CSV-ish stdout lines, ``main`` writes every measurement to
 ``BENCH_policies.json`` at the repo root so the perf trajectory is
 recorded run-over-run (cells/s for single vs gspmd vs shard_map, energy
@@ -223,6 +228,61 @@ def bench_migration(n_hosts=256, n_vms=96, waves=4, max_steps=4096):
     return out
 
 
+def bench_network(n_hosts=256, n_vms=96, waves=4, max_steps=4096):
+    """Network-subsystem overhead, three compilations of one workload:
+
+      * ``static``         — ``networked=False``: the pre-network program,
+      * ``networked_idle`` — ``networked=True`` with the topology
+        *disabled* (``no_network``): pays the staging/flow trace (phase
+        walk + flow segment-sums per step) but moves nothing,
+      * ``staging``        — an enabled two-tier topology actually
+        staging every cloudlet's 50 MB in / 20 MB out through a
+        contended WAN gateway.
+    """
+    import jax
+
+    from repro.core import broker as B, state as S
+    from repro.core.engine import run
+
+    def scenario(file_mb=0.0, out_mb=0.0, net=None):
+        hosts = S.make_uniform_hosts(n_hosts, pes=2, ram=2048.0)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(waves=waves,
+                                             length_mi=600_000.0,
+                                             period=300.0,
+                                             file_size=file_mb,
+                                             output_size=out_mb))
+        return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                                 task_policy=S.TIME_SHARED,
+                                 reserve_pes=False, net=net)
+
+    topo = S.make_topology([i % 8 for i in range(n_hosts)],
+                           bw_intra=1000.0, lat_intra=0.001,
+                           bw_inter=500.0, lat_inter=0.005,
+                           bw_wan=200.0, lat_wan=0.05)
+    cases = {
+        "static": (scenario(), dict(networked=False)),
+        "networked_idle": (scenario(), dict(networked=True)),
+        "staging": (scenario(50.0, 20.0, net=topo), dict(networked=True)),
+    }
+    out = {}
+    for name, (dc, kw) in cases.items():
+        jax.block_until_ready(run(dc, max_steps=max_steps, **kw).time)
+        t0 = time.perf_counter()
+        final = run(dc, max_steps=max_steps, **kw)
+        jax.block_until_ready(final.time)
+        out[name] = {
+            "wall_s": time.perf_counter() - t0,
+            "transferred_mb": float(np.asarray(final.net_transferred_mb)),
+            "done": int((np.asarray(final.cloudlets.state) == 2).sum()),
+        }
+    base = max(out["static"]["wall_s"], 1e-9)
+    out["networked_idle_overhead"] = out["networked_idle"]["wall_s"] / base
+    out["staging_overhead"] = out["staging"]["wall_s"] / base
+    return out
+
+
 def bench_sharded(batch=16, n_hosts=32, n_vms=8, waves=3, max_steps=256):
     """Fused grid on one device vs sharded over every visible device.
 
@@ -322,6 +382,14 @@ def main():
           f"_threshold_overhead={bm['threshold_overhead']:.2f}x"
           f"_migrations={bm['threshold']['migrations']}"
           f"_downtime={bm['threshold']['downtime_s']:.1f}s")
+    bn = bench_network()
+    results["network"] = bn
+    print(f"bench_network,{bn['staging']['wall_s']*1e6:.0f},"
+          f"static={bn['static']['wall_s']*1e6:.0f}us"
+          f"_idle_overhead={bn['networked_idle_overhead']:.2f}x"
+          f"_staging_overhead={bn['staging_overhead']:.2f}x"
+          f"_staged={bn['staging']['transferred_mb']:.0f}MB"
+          f"_done={bn['staging']['done']}")
     # the sharded measurement needs a multi-device backend, which must be
     # forced before jax initializes -> fresh subprocess
     env = dict(

@@ -8,6 +8,8 @@ Layer map (paper §3/§4 -> modules):
   sweep.py         batched scenario/policy sweeps (vmap over stacked states)
   provisioning.py  VMProvisioner + BW/Memory admission (first/best/worst-fit)
   engine.py        discrete-event engine (SimJava layer, tensorized)
+  network.py       two-tier topology, staged transfers, fair-share flows
+  migration.py     live-migration triggers, victims, targets, delays
   broker.py        DatacenterBroker builders + result collection
   cis.py           Cloud Information Service registry + match-making
   market.py        §3.3 cost model: quotes, bills, pricing policies
@@ -25,6 +27,8 @@ from repro.core import (  # noqa: F401
     experiments,
     federation,
     market,
+    migration,
+    network,
     provisioning,
     scheduling,
     segments,

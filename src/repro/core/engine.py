@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, migration, scheduling
+from repro.core import energy, migration, network, scheduling
+from repro.core.network import wants_network
 from repro.core.provisioning import FIRST_FIT, provision_pending
 from repro.core.state import (
     CL_CREATED,
@@ -58,6 +59,7 @@ from repro.core.state import (
     EV_VM_DESTROY,
     DatacenterState,
     INF,
+    NET_STAGE_OUT,
     VM_ACTIVE,
     VM_DESTROYED,
     VM_EMPTY,
@@ -65,7 +67,7 @@ from repro.core.state import (
 )
 
 __all__ = ["step", "run", "run_trace", "StepRecord", "apply_due_events",
-           "wants_dynamic"]
+           "wants_dynamic", "wants_network"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
 
@@ -81,6 +83,8 @@ class StepRecord(NamedTuple):
     n_migrating: jnp.ndarray   # i32[] VMs mid-migration *after* the step
     migrations: jnp.ndarray    # i32[] cumulative migrations performed
     hosts_down: jnp.ndarray    # i32[] real hosts currently failed
+    transferred_mb: jnp.ndarray  # f32[] cumulative staged MB *after* the step
+    n_flows: jnp.ndarray       # i32[] transfers drawing bandwidth during step
 
 
 def _hit(n: int, idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -239,7 +243,8 @@ def _dynamic_deltas(dc: DatacenterState, trig_next: jnp.ndarray):
 
 
 def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
-         dynamic: bool = True) -> tuple[DatacenterState, StepRecord]:
+         dynamic: bool = True, networked: bool = False
+         ) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
     Takes and returns an *unbatched* ``DatacenterState`` (leaves [H]/[V]/
@@ -252,32 +257,47 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     Order inside an event instant mirrors CloudSim: (0) pending dynamic
     events due now apply (``apply_due_events``), (1) the VMProvisioner
     places VMs whose submission is due — including VMs just evicted by a
-    host failure, (2) ``updateVMsProcessing`` — the two-level share
-    computation — fixes every rate (MIPS), (2b) the migration policy may
-    move one VM and rates are recomputed (core/migration.py), (3) the
-    clock jumps ``dt`` seconds to the earliest completion/arrival/event,
-    (4) progress (rate * dt MI), completions, migration-copy countdowns,
-    market costs ($), and per-host energy (watts * dt J — rates are
-    constant over the interval, so exact) are committed.
+    host failure, (1b) due staging-phase transitions run
+    (``network.advance_phases`` — arm input transfers, promote staged-in
+    cloudlets to CPU, complete staged-out ones), (2)
+    ``updateVMsProcessing`` — the two-level share computation — fixes
+    every rate (MIPS), (2b) the migration policy may move one VM and
+    rates are recomputed (core/migration.py), (2c) transfer flow rates
+    (MB/s) are fixed (``network.flow_rates``), (3) the clock jumps ``dt``
+    seconds to the earliest completion/arrival/event/transfer wakeup,
+    (4) progress (rate * dt MI), completions, migration-copy and
+    transfer countdowns, market costs ($), and per-host energy
+    (watts * dt J — rates are constant over the interval, so exact) are
+    committed; compute-finished cloudlets under an enabled topology arm
+    their output transfer instead of completing.
 
-    ``dynamic`` is a *static* flag: False compiles the pre-dynamic
-    program (no event table, no migration pass) for scenarios that carry
-    neither — the public runners auto-detect via ``wants_dynamic``.
+    ``dynamic`` and ``networked`` are *static* flags: False compiles the
+    pre-dynamic / pre-network program for scenarios that carry neither —
+    the public runners auto-detect via ``wants_dynamic`` /
+    ``wants_network``.
     """
     if dynamic:
         dc = apply_due_events(dc)
     dc = provision_pending(dc, provision_policy)
-    rates = scheduling.cloudlet_rates(dc)
+    if networked:
+        dc = network.advance_phases(dc)
+    rates = scheduling.cloudlet_rates(dc, networked=networked)
     if dynamic:
-        dc, _ = migration.apply_migration(dc, rates)
-        rates = scheduling.cloudlet_rates(dc)
-        trig_next = migration.select_migration(dc, rates).trigger
+        dc, _ = migration.apply_migration(dc, rates, networked=networked)
+        rates = scheduling.cloudlet_rates(dc, networked=networked)
+        trig_next = migration.select_migration(
+            dc, rates, networked=networked).trigger
+    if networked:
+        frates = network.flow_rates(dc)
+        dt_net, flow_dt = network.wake_deltas(dc, frates)
 
     dt_other, finish_dt, arrive = _next_event_deltas(dc, rates)
     if dynamic:
         dt_dyn, arr_ev = _dynamic_deltas(dc, trig_next)
         dt_other = jnp.minimum(dt_other, dt_dyn)
         arrive = jnp.minimum(arrive, arr_ev)
+    if networked:
+        dt_other = jnp.minimum(dt_other, dt_net)
     dt_arr = jnp.where(arrive < INF, arrive - dc.time, INF)
     dt = jnp.minimum(dt_other, dt_arr)
     active = dt < INF
@@ -289,17 +309,49 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
 
     cl = dc.cloudlets
     executed = rates * dt
+    # completion snap band, shared by every countdown in this commit and
+    # mirrored by the oracle's _SNAP_REL/_SNAP_ABS — keep in sync
+    snap = dt * (1.0 + 1e-5) + 1e-9
     # the argmin task(s) finish *by construction* — immune to f32 rounding
     finished = ((cl.state == CL_CREATED)
                 & (rates > 0.0)
-                & (finish_dt <= dt * (1.0 + 1e-5) + 1e-9))
+                & (finish_dt <= snap))
     remaining = jnp.where(finished, 0.0,
                           jnp.maximum(cl.remaining - executed, 0.0))
 
     started = (rates > 0.0) & (cl.start_time < 0.0)
     start_time = jnp.where(started, dc.time, cl.start_time)
-    finish_time = jnp.where(finished, t_next, cl.finish_time)
-    state = jnp.where(finished, CL_DONE, cl.state)
+    net_phase, net_lat, net_rem = cl.net_phase, cl.net_lat, cl.net_remaining
+    if networked:
+        # enabled lanes: compute completion arms the output transfer
+        # instead of finishing (NET_STAGE_OUT; ``advance_phases`` marks
+        # CL_DONE once it drains); disabled lanes keep old semantics.
+        enabled = dc.net.enabled == 1
+        done_now = finished & ~enabled
+        arm_out = finished & enabled
+        # transfer countdowns — the same snap band as completions, so
+        # the wake event lands on the same step as the f64 oracle's
+        lat_active = network.staging_mask(dc) & (cl.net_lat > 0.0)
+        lat_done = lat_active & (cl.net_lat <= snap)
+        net_lat = jnp.where(
+            lat_done, 0.0,
+            jnp.where(lat_active, jnp.maximum(cl.net_lat - dt, 0.0),
+                      cl.net_lat))
+        xfer_done = (frates > 0.0) & (flow_dt <= snap)
+        net_rem = jnp.where(
+            xfer_done, 0.0,
+            jnp.where(frates > 0.0,
+                      jnp.maximum(cl.net_remaining - frates * dt, 0.0),
+                      cl.net_remaining))
+        # a compute-finished cloudlet is in NET_RUN — never also a flow —
+        # so arming cannot clash with the countdowns above
+        net_phase = jnp.where(arm_out, NET_STAGE_OUT, cl.net_phase)
+        net_lat = jnp.where(arm_out, network.stage_latency(dc), net_lat)
+        net_rem = jnp.where(arm_out, cl.output_size, net_rem)
+    else:
+        done_now = finished
+    finish_time = jnp.where(done_now, t_next, cl.finish_time)
+    state = jnp.where(done_now, CL_DONE, cl.state)
 
     # ---- market accounting (§3.3) ----------------------------------------
     nv = dc.vms.req_pes.shape[0]
@@ -308,7 +360,10 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     mips_pe = dc.hosts.mips_per_pe[jnp.clip(host_of_cl, 0, nh - 1)]
     pe_seconds = jnp.sum(executed / jnp.maximum(mips_pe, 1e-30))
     cpu_cost = dc.acct.cpu_cost + dc.rates.cost_per_cpu_sec * pe_seconds
-    moved_mb = jnp.sum(jnp.where(finished, cl.file_size + cl.output_size,
+    # networked lanes bill per drained transfer below
+    # (``transfer_accounting``; ``done_now`` excludes them) — same total
+    # per finished task
+    moved_mb = jnp.sum(jnp.where(done_now, cl.file_size + cl.output_size,
                                  0.0))
     bw_cost = dc.acct.bw_cost + dc.rates.cost_per_bw * moved_mb
 
@@ -320,13 +375,21 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     host_watts = energy.step_power(dc, rates)              # f32[H]
     energy_j = dc.hosts.energy_j + host_watts * dt
 
+    transferred_mb = dc.net_transferred_mb
+    if networked:
+        # drained transfers book their whole size on this (active) step
+        xfer_energy, moved = network.transfer_accounting(dc, xfer_done)
+        energy_j = energy_j + xfer_energy
+        bw_cost = bw_cost + dc.rates.cost_per_bw * moved
+        transferred_mb = transferred_mb + moved
+
     vms = dc.vms
     if dynamic:
         # migration copy countdown — a delta like cloudlet ``remaining``,
         # with the same completion snap band so the resume event lands on
         # the same step on both the engine and the f64 oracle.
         mig = vms.mig_remaining
-        mig_done = (mig > 0.0) & (mig <= dt * (1.0 + 1e-5) + 1e-9)
+        mig_done = (mig > 0.0) & (mig <= snap)
         mig_rem = jnp.where(mig_done, 0.0,
                             jnp.where(mig > 0.0,
                                       jnp.maximum(mig - dt, 0.0), mig))
@@ -338,9 +401,11 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         vms=vms,
         cloudlets=dataclasses.replace(
             cl, remaining=remaining, start_time=start_time,
-            finish_time=finish_time, state=state),
+            finish_time=finish_time, state=state, net_phase=net_phase,
+            net_lat=net_lat, net_remaining=net_rem),
         acct=dataclasses.replace(dc.acct, cpu_cost=cpu_cost, bw_cost=bw_cost),
         time=t_next,
+        net_transferred_mb=transferred_mb,
     )
 
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
@@ -357,6 +422,9 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         migrations=new.mig_count,
         hosts_down=jnp.sum((~new.hosts.valid
                             & (new.hosts.num_pes > 0)).astype(jnp.int32)),
+        transferred_mb=new.net_transferred_mb,
+        n_flows=(jnp.sum((frates > 0.0).astype(jnp.int32)) if networked
+                 else jnp.int32(0)),
     )
     return new, rec
 
@@ -377,9 +445,10 @@ def wants_dynamic(dc: DatacenterState) -> bool:
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic"))
+                                   "dynamic", "networked"))
 def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
-         provision_policy: int, dynamic: bool) -> DatacenterState:
+         provision_policy: int, dynamic: bool,
+         networked: bool) -> DatacenterState:
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
     def cond(carry):
@@ -389,7 +458,7 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
     def body(carry):
         dc, n, _ = carry
         new, rec = step(dc, provision_policy=provision_policy,
-                        dynamic=dynamic)
+                        dynamic=dynamic, networked=networked)
         return new, n + 1, rec.active
 
     out, _, _ = jax.lax.while_loop(cond, body, (dc, jnp.int32(0),
@@ -399,31 +468,36 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
 
 def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         horizon: float = float("inf"), provision_policy: int = FIRST_FIT,
-        dynamic: bool | None = None) -> DatacenterState:
+        dynamic: bool | None = None,
+        networked: bool | None = None) -> DatacenterState:
     """Run the simulation to quiescence with ``lax.while_loop``.
 
     Terminates when the event queue is empty (no runnable work, no future
-    submissions, no pending dynamic events), the ``horizon`` (simulated
-    seconds) is passed, or ``max_steps`` events fire (a safety net
-    against pathological scenarios).  Returns the final
-    ``DatacenterState`` (same leaf shapes as the input; ``time`` is the
-    quiescence clock in seconds).  ``dynamic=None`` auto-detects via
-    ``wants_dynamic``; pass an explicit bool when calling under a trace.
+    submissions, no pending dynamic events, no in-flight transfers), the
+    ``horizon`` (simulated seconds) is passed, or ``max_steps`` events
+    fire (a safety net against pathological scenarios).  Returns the
+    final ``DatacenterState`` (same leaf shapes as the input; ``time`` is
+    the quiescence clock in seconds).  ``dynamic=None`` / ``networked=
+    None`` auto-detect via ``wants_dynamic`` / ``wants_network``; pass
+    explicit bools when calling under a trace.
     """
     if dynamic is None:
         dynamic = wants_dynamic(dc)
+    if networked is None:
+        networked = wants_network(dc)
     return _run(dc, max_steps=max_steps, horizon=horizon,
-                provision_policy=provision_policy, dynamic=dynamic)
+                provision_policy=provision_policy, dynamic=dynamic,
+                networked=networked)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "provision_policy",
-                                   "dynamic"))
+                                   "dynamic", "networked"))
 def _run_trace(dc: DatacenterState, *, num_steps: int,
-               provision_policy: int, dynamic: bool
+               provision_policy: int, dynamic: bool, networked: bool
                ) -> tuple[DatacenterState, StepRecord]:
     def body(dc, _):
         new, rec = step(dc, provision_policy=provision_policy,
-                        dynamic=dynamic)
+                        dynamic=dynamic, networked=networked)
         return new, rec
 
     return jax.lax.scan(body, dc, None, length=num_steps)
@@ -431,7 +505,8 @@ def _run_trace(dc: DatacenterState, *, num_steps: int,
 
 def run_trace(dc: DatacenterState, *, num_steps: int,
               provision_policy: int = FIRST_FIT,
-              dynamic: bool | None = None
+              dynamic: bool | None = None,
+              networked: bool | None = None
               ) -> tuple[DatacenterState, StepRecord]:
     """Run exactly ``num_steps`` events via ``lax.scan``, keeping telemetry.
 
@@ -442,5 +517,8 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
     """
     if dynamic is None:
         dynamic = wants_dynamic(dc)
+    if networked is None:
+        networked = wants_network(dc)
     return _run_trace(dc, num_steps=num_steps,
-                      provision_policy=provision_policy, dynamic=dynamic)
+                      provision_policy=provision_policy, dynamic=dynamic,
+                      networked=networked)

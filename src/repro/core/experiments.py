@@ -48,11 +48,15 @@ class Provider:
     ``events`` optionally attaches a dynamic-event table
     (``state.make_events``) to this provider's datacenter — e.g. host
     fail/recover windows — so federation studies can model regional
-    outages; None keeps the provider static.
+    outages; None keeps the provider static.  ``net`` optionally attaches
+    a network topology (``state.make_topology``) so the provider stages
+    cloudlet data over contended WAN/uplink/fabric tiers; None keeps the
+    provider non-networked.
     """
     hosts: S.HostState
     rates: S.MarketRates
     events: object = None          # f32[E, 4] | None
+    net: object = None             # state.NetTopology | None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +85,7 @@ class FederationStudy(NamedTuple):
     fed_done: jnp.ndarray        # i32[P] completed cloudlets across providers
     fed_energy_j: jnp.ndarray    # f32[P] summed host energy across providers (J)
     fed_migrations: jnp.ndarray  # i32[P] live migrations across providers
+    fed_transferred_mb: jnp.ndarray  # f32[P] staged MB across providers
 
 
 def fleet_demand(fleets: Sequence[UserFleet]) -> F.UserDemand:
@@ -125,7 +130,9 @@ def build_study(providers: Sequence[Provider],
                 reserve_pes: bool = True,
                 mig_policy: int = S.MIG_OFF,
                 mig_threshold: float = 0.8,
-                mig_energy_per_mb: float = 0.0
+                mig_energy_per_mb: float = 0.0,
+                latency=None, origin=None,
+                latency_weight: float = 0.0
                 ) -> tuple[list[S.DatacenterState], jnp.ndarray,
                            cis.CisEntry]:
     """Route fleets across providers; build one datacenter scenario each.
@@ -139,17 +146,24 @@ def build_study(providers: Sequence[Provider],
     descriptor row, ``federation.assign_users`` greedily grants each user
     the cheapest feasible provider in FCFS order, and each granted fleet's
     VMs + cloudlet waves are appended to its provider's dense blocks.
+    ``latency``/``origin``/``latency_weight`` opt into latency-aware
+    routing: an f32[D, D] inter-provider latency matrix, each user's home
+    region row, and the $-per-second exchange rate the broker scores with
+    (see ``federation.assign_users``).
     """
     bare = [S.make_datacenter(p.hosts, _empty_vms(), _empty_cloudlets(),
                               vm_policy=vm_policy, task_policy=task_policy,
                               reserve_pes=reserve_pes, rates=p.rates,
                               events=p.events, mig_policy=mig_policy,
                               mig_threshold=mig_threshold,
-                              mig_energy_per_mb=mig_energy_per_mb)
+                              mig_energy_per_mb=mig_energy_per_mb,
+                              net=p.net)
             for p in providers]
     table = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[cis.register(d) for d in bare])
-    assignment = F.assign_users(table, fleet_demand(fleets))
+    assignment = F.assign_users(table, fleet_demand(fleets),
+                                latency=latency, origin=origin,
+                                latency_weight=latency_weight)
     assign_np = np.asarray(assignment)
 
     dcs = []
@@ -178,11 +192,13 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
               provision_policy: int = FIRST_FIT, reserve_pes: bool = True,
               mig_policy: int = S.MIG_OFF, mig_threshold: float = 0.8,
               mig_energy_per_mb: float = 0.0,
+              latency=None, origin=None, latency_weight: float = 0.0,
               mesh=None, sharded: bool | None = None) -> FederationStudy:
     """An arXiv:0907.4878-style inter-cloud policy study, end to end.
 
-    Routes ``fleets`` over ``providers`` once (``build_study``), then runs
-    the D routed datacenters under all P ``(vm_policies[i],
+    Routes ``fleets`` over ``providers`` once (``build_study``; pass
+    ``latency``/``origin``/``latency_weight`` for latency-aware routing),
+    then runs the D routed datacenters under all P ``(vm_policies[i],
     task_policies[i])`` pairs as one fused device-sharded batch
     (``sweep.run_grid`` — P*D lanes, padded to the mesh, single vmap) and
     reduces to federation-level metrics.  ``mesh``/``sharded`` forward to
@@ -190,7 +206,8 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
     """
     dcs, assignment, table = build_study(
         providers, fleets, reserve_pes=reserve_pes, mig_policy=mig_policy,
-        mig_threshold=mig_threshold, mig_energy_per_mb=mig_energy_per_mb)
+        mig_threshold=mig_threshold, mig_energy_per_mb=mig_energy_per_mb,
+        latency=latency, origin=origin, latency_weight=latency_weight)
     batch = sweep.stack_scenarios(dcs)
     final = sweep.run_grid(batch, vm_policies, task_policies,
                            max_steps=max_steps,
@@ -207,4 +224,5 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
         fed_done=jnp.sum(summary.n_done, axis=-1),
         fed_energy_j=jnp.sum(summary.energy_j, axis=-1),
         fed_migrations=jnp.sum(summary.n_migrations, axis=-1),
+        fed_transferred_mb=jnp.sum(summary.transferred_mb, axis=-1),
     )

@@ -45,20 +45,47 @@ class UserDemand(NamedTuple):
     storage: jnp.ndarray    # f32[U] total storage (MB)
 
 
-def assign_users(table: cis.CisEntry, demand: UserDemand) -> jnp.ndarray:
+def assign_users(table: cis.CisEntry, demand: UserDemand, *,
+                 latency: jnp.ndarray | None = None,
+                 origin: jnp.ndarray | None = None,
+                 latency_weight: float = 0.0) -> jnp.ndarray:
     """i32[U] — cheapest feasible datacenter per user, capacity-aware FCFS.
 
     Sequential greedy (earlier users consume capacity seen by later ones),
     replicated on every shard — the table is tiny (one row per DC).
     Users no datacenter can host get -1.
+
+    Latency-aware routing (arXiv:0903.2525 §4.1's inter-entity latency
+    matrix, lifted to the federation): ``latency`` is an optional
+    f32[D, D] inter-datacenter latency matrix (seconds), ``origin`` the
+    i32[U] home region (a row index) of each user (default: region 0),
+    and ``latency_weight`` trades $ per second of WAN distance — user
+    ``u`` is routed to the feasible datacenter minimizing::
+
+        cost_per_cpu_sec[d] + latency_weight * latency[origin[u], d]
+
+    ``latency=None`` (the default) is latency-blind routing, bit-identical
+    to the pre-network broker.
     """
+    if latency is not None:
+        latency = jnp.asarray(latency, jnp.float32)
+        n_users = demand.pes.shape[0]
+        origin = (jnp.zeros((n_users,), jnp.int32) if origin is None
+                  else jnp.asarray(origin, jnp.int32))
+        weight = jnp.float32(latency_weight)
+
     def body(carry, u):
         free_pes, free_ram, free_sto = carry
         feas = ((free_pes >= demand.pes[u])
                 & (table.max_mips_pe >= demand.mips[u])
                 & (free_ram >= demand.ram[u])
                 & (free_sto >= demand.storage[u]))
-        cost = jnp.where(feas, table.cost_per_cpu_sec, jnp.float32(1e30))
+        score = table.cost_per_cpu_sec
+        if latency is not None:
+            nd = latency.shape[0]
+            score = score + weight * latency[
+                jnp.clip(origin[u], 0, nd - 1)]
+        cost = jnp.where(feas, score, jnp.float32(1e30))
         pick = jnp.argmin(cost).astype(jnp.int32)
         ok = jnp.any(feas)
         d = jnp.where(ok, pick, -1)

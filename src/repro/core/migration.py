@@ -38,6 +38,12 @@ bandwidth reserved (the CloudSim convention)::
 
     delay_s = ram_mb / (0.5 * min(bw_src, bw_dst))
 
+Under an enabled network topology (core/network.py; the engine's static
+``networked`` gate) the copy instead routes over the *actual*
+source->target path: same edge cluster -> ``lat_intra + ram/bw_intra``,
+cross-cluster -> ``lat_inter + ram/bw_inter``.  The disabled default
+topology compiles the half-NIC formula unchanged, bit for bit.
+
 During the delay the VM's resources are already moved to the destination
 (admission uses the destination's free pools) but its cloudlets execute
 at rate 0 — the downtime window.  ``VmState.mig_remaining`` carries the
@@ -58,7 +64,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import energy
+from repro.core import energy, network
 from repro.core.provisioning import MOST_FULL, WORST_FIT, _choose, \
     feasible_hosts
 from repro.core.state import (
@@ -90,12 +96,16 @@ class Migration(NamedTuple):
     delay: jnp.ndarray     # f32[]  copy seconds (downtime window)
 
 
-def select_migration(dc: DatacenterState, rates: jnp.ndarray) -> Migration:
+def select_migration(dc: DatacenterState, rates: jnp.ndarray, *,
+                     networked: bool = False) -> Migration:
     """Evaluate the trigger policy on the current state + cloudlet rates.
 
     Pure decision — no state change.  ``rates f32[C]`` are the
     ``scheduling.cloudlet_rates`` of this event; CPU utilization derives
     from them exactly as the energy model's (``energy.host_utilization``).
+    ``networked`` (the engine's static gate) switches the copy delay to
+    the topology route; lanes with ``net.enabled == 0`` keep the half-NIC
+    formula even inside a networked batch.
     """
     hosts, vms = dc.hosts, dc.vms
     nh = hosts.num_pes.shape[0]
@@ -152,10 +162,15 @@ def select_migration(dc: DatacenterState, rates: jnp.ndarray) -> Migration:
 
     dstc = jnp.clip(dst, 0, nh - 1)
     delay = migration_delay(vms.ram[v], hosts.bw[src], hosts.bw[dstc])
+    if networked:
+        link_bw, link_lat = network.migration_route(dc, src, dstc)
+        net_delay = link_lat + vms.ram[v] / jnp.maximum(link_bw, 1e-30)
+        delay = jnp.where(dc.net.enabled == 1, net_delay, delay)
     return Migration(trigger=trigger, vm=v, src=src, dst=dst, delay=delay)
 
 
-def apply_migration(dc: DatacenterState, rates: jnp.ndarray
+def apply_migration(dc: DatacenterState, rates: jnp.ndarray, *,
+                    networked: bool = False
                     ) -> tuple[DatacenterState, Migration]:
     """Apply at most one migration for this event (pure, vmap-safe).
 
@@ -165,7 +180,7 @@ def apply_migration(dc: DatacenterState, rates: jnp.ndarray
     energy + stats.  Everything is ``where``-gated on ``trigger`` so the
     no-migration case is a bit-exact identity.
     """
-    mig = select_migration(dc, rates)
+    mig = select_migration(dc, rates, networked=networked)
     hosts, vms = dc.hosts, dc.vms
     nh = hosts.num_pes.shape[0]
     v, src = mig.vm, mig.src

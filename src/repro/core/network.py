@@ -1,0 +1,264 @@
+"""Topology-aware network model — staged transfers as fluid fair-shared flows.
+
+CloudSim (§4.1) routes every inter-entity message through a latency
+matrix and charges data transfers against link bandwidth; the follow-on
+InterCloud work (arXiv:0907.4878) names network modeling the
+prerequisite for credible federated-cloud studies.  This module carries
+both on the dense state:
+
+Topology (``state.NetTopology``): hosts group into edge clusters
+(``cluster i32[H]``) under three nested link tiers —
+
+    user gateway --(bw_wan)--> DC core --(bw_inter)--> cluster k
+                 --(bw_intra)--> host h
+
+Staged cloudlet lifecycle: under an enabled topology a cloudlet's data
+moves before and after execution — NET_PRE -> NET_STAGE_IN (``file_size``
+MB inbound, armed the instant the cloudlet would otherwise become
+runnable, overlapping any CPU queueing) -> NET_RUN (execution) ->
+NET_STAGE_OUT (``output_size`` MB outbound) -> CL_DONE.  Each transfer
+serializes a latency countdown (``lat_wan + lat_inter + lat_intra``
+seconds, a per-event delta like migration copies) followed by a
+bandwidth phase.
+
+Fluid fair share: every tier splits its capacity equally among the
+transfers crossing it and a flow progresses at the *bottleneck* share of
+its path::
+
+    rate(c) = min( bw_wan   / n_flows(datacenter),
+                   bw_inter / n_flows(cluster of host(c)),
+                   bw_intra / n_flows(host(c)) )
+
+Rates are piecewise-constant between events, so transfer completions
+join the engine's event queue exactly like cloudlet completions and
+migration copies: remaining-MB / rate is a wake delta, countdowns commit
+with the same snap band.  Flow counts derive from *static* topology
+indices (cluster ids, host slots) via segment sums — never from sorted,
+loop-variant link state (ROADMAP landmine #2).
+
+Migration copies re-route through the actual source->target link: same
+cluster -> ``lat_intra + ram / bw_intra``, cross-cluster -> ``lat_inter
++ ram / bw_inter``.  With the topology disabled the old CloudSim
+half-NIC convention ``ram / (0.5 * min(bw))`` is compiled unchanged.
+
+Accounting: completed transfers accrue ``DatacenterState
+.net_transferred_mb`` (exact — whole sizes, not rate*dt residue, so byte
+conservation holds bitwise per transfer), bill ``cost_per_bw`` $ per MB,
+and burn ``net.energy_per_mb`` joules on the serving host, reusing the
+PR-3 energy accrual.
+
+Everything is gated twice: the *static* ``networked`` flag
+(``wants_network``, mirroring ``wants_dynamic``) keeps non-networked
+scenarios on the bit-identical pre-network program, and the *traced*
+``net.enabled`` scalar keeps disabled lanes inert inside a networked
+sweep batch.  The NumPy oracle (``repro.oracle``) mirrors every rule
+here in f64 with plain loops (``docs/network.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import (
+    CL_CREATED,
+    CL_DONE,
+    DatacenterState,
+    INF,
+    NET_PRE,
+    NET_RUN,
+    NET_STAGE_IN,
+    NET_STAGE_OUT,
+    VM_ACTIVE,
+)
+
+__all__ = ["wants_network", "stage_latency", "staging_mask", "flow_rates",
+           "wake_deltas", "advance_phases", "transfer_accounting",
+           "migration_route"]
+
+
+def wants_network(dc: DatacenterState) -> bool:
+    """True when the scenario carries an enabled topology (staged
+    transfers + topology-routed migration).  Host-side dispatch helper,
+    the network sibling of ``engine.wants_dynamic`` — on traced inputs it
+    conservatively answers True."""
+    try:
+        return bool(np.any(np.asarray(dc.net.enabled) != 0))
+    except Exception:           # tracer — cannot inspect; take the safe path
+        return True
+
+
+def stage_latency(dc: DatacenterState) -> jnp.ndarray:
+    """f32[] — seconds of serial path latency per staged transfer.
+
+    A staging transfer traverses all three tiers (gateway -> uplink ->
+    access fabric), so their latencies add once per transfer."""
+    net = dc.net
+    return net.lat_wan + net.lat_inter + net.lat_intra
+
+
+def staging_mask(dc: DatacenterState) -> jnp.ndarray:
+    """bool[C] — cloudlets with an in-flight staged transfer context.
+
+    Requires a live placement (the route is ``cluster[host[vm]]``): a
+    transfer whose VM is evicted back to PENDING pauses — counters kept —
+    and resumes once the VM is re-placed (possibly on another cluster;
+    routing re-derives from the current placement each event).  A VM
+    mid-migration keeps transferring: ``vms.host`` already points at the
+    destination, so the flow re-routes with the copy."""
+    cl, vms, net = dc.cloudlets, dc.vms, dc.net
+    nv = vms.req_pes.shape[0]
+    owner = jnp.clip(cl.vm, 0, nv - 1)
+    vm_live = ((vms.state[owner] == VM_ACTIVE) & (vms.host[owner] >= 0)
+               & (cl.vm >= 0))
+    in_stage = ((cl.net_phase == NET_STAGE_IN)
+                | (cl.net_phase == NET_STAGE_OUT))
+    return (net.enabled == 1) & (cl.state == CL_CREATED) & vm_live & in_stage
+
+
+def _flow_and_cluster(dc: DatacenterState):
+    """(flow bool[C], host i32[C], cluster i32[C]) for active flows."""
+    cl, vms, net = dc.cloudlets, dc.vms, dc.net
+    nh = dc.hosts.num_pes.shape[0]
+    nv = vms.req_pes.shape[0]
+    flow = (staging_mask(dc) & (cl.net_lat <= 0.0)
+            & (cl.net_remaining > 0.0))
+    host = jnp.clip(vms.host[jnp.clip(cl.vm, 0, nv - 1)], 0, nh - 1)
+    k = jnp.clip(net.cluster[host], 0, nh - 1)
+    return flow, host, k
+
+
+def flow_rates(dc: DatacenterState) -> jnp.ndarray:
+    """f32[C] — MB/s granted to each active transfer this event.
+
+    The bottleneck fair share over the flow's three-tier path (module
+    docstring).  Zero for cloudlets without an active flow."""
+    net = dc.net
+    nh = dc.hosts.num_pes.shape[0]
+    flow, host, k = _flow_and_cluster(dc)
+    w = flow.astype(jnp.float32)
+    n_wan = jnp.sum(w)
+    n_up = jax.ops.segment_sum(w, k, num_segments=nh)[k]
+    n_acc = jax.ops.segment_sum(w, host, num_segments=nh)[host]
+    share = jnp.minimum(
+        net.bw_wan / jnp.maximum(n_wan, 1.0),
+        jnp.minimum(net.bw_inter / jnp.maximum(n_up, 1.0),
+                    net.bw_intra / jnp.maximum(n_acc, 1.0)))
+    return jnp.where(flow, share, 0.0)
+
+
+def wake_deltas(dc: DatacenterState, frates: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(dt_net f32[], flow_dt f32[C]) — the network's event-queue head.
+
+    ``flow_dt`` is per-transfer remaining-MB / rate (INF when idle);
+    ``dt_net`` additionally folds in the earliest latency-countdown
+    expiry.  Both are deltas, like cloudlet completions."""
+    cl = dc.cloudlets
+    lat_active = staging_mask(dc) & (cl.net_lat > 0.0)
+    dt_lat = jnp.min(jnp.where(lat_active, cl.net_lat, INF), initial=INF)
+    flow_dt = jnp.where(frates > 0.0,
+                        cl.net_remaining / jnp.maximum(frates, 1e-30), INF)
+    return jnp.minimum(dt_lat, jnp.min(flow_dt, initial=INF)), flow_dt
+
+
+def advance_phases(dc: DatacenterState) -> DatacenterState:
+    """Run every due staging-phase transition at ``dc.time`` (pure).
+
+    Called at the top of ``engine.step`` (after events + provisioning,
+    before rates), mirroring the oracle's walk:
+
+      1. NET_PRE -> NET_STAGE_IN: arm the input transfer (latency +
+         ``file_size`` MB) the instant the cloudlet would otherwise be
+         runnable — submitted, VM placed and not migrating.
+      2. NET_STAGE_IN -> NET_RUN when latency and payload are exhausted
+         (cascades with 1 in the same call, so zero-size zero-latency
+         transfers cost no extra event).
+      3. NET_STAGE_OUT -> CL_DONE likewise; ``finish_time`` is the
+         current clock (the transfer completed exactly at this event's
+         time).
+
+    Transfer accounting (MB moved, $ billed, host joules) happens in the
+    *commit* of the event whose flow drains (``engine.step``) — on the
+    active step, so telemetry timelines see it — not here: a transfer
+    promoted by this walk either already accounted there or moved zero
+    bytes.  With nothing due this is a bit-exact identity, so quiescence
+    stays a fixed point.
+    """
+    cl, vms, net = dc.cloudlets, dc.vms, dc.net
+    nh = dc.hosts.num_pes.shape[0]
+    nv = vms.req_pes.shape[0]
+    enabled = net.enabled == 1
+    owner = jnp.clip(cl.vm, 0, nv - 1)
+    vm_ready = ((vms.state[owner] == VM_ACTIVE) & (vms.host[owner] >= 0)
+                & (vms.mig_remaining[owner] <= 0.0) & (cl.vm >= 0))
+    live = enabled & (cl.state == CL_CREATED)
+
+    # ---- 1. arm the input transfer ---------------------------------------
+    enter_in = (live & vm_ready & (cl.net_phase == NET_PRE)
+                & (cl.submit_time <= dc.time))
+    phase = jnp.where(enter_in, NET_STAGE_IN, cl.net_phase)
+    lat = jnp.where(enter_in, stage_latency(dc), cl.net_lat)
+    rem = jnp.where(enter_in, cl.file_size, cl.net_remaining)
+
+    # ---- 2. input transfer done -> CPU phase ------------------------------
+    done_in = (live & (phase == NET_STAGE_IN) & (lat <= 0.0)
+               & (rem <= 0.0))
+    phase = jnp.where(done_in, NET_RUN, phase)
+
+    # ---- 3. output transfer done -> cloudlet complete ---------------------
+    done_out = (live & (phase == NET_STAGE_OUT) & (lat <= 0.0)
+                & (rem <= 0.0))
+    state = jnp.where(done_out, CL_DONE, cl.state)
+    finish = jnp.where(done_out, dc.time, cl.finish_time)
+
+    return dataclasses.replace(
+        dc,
+        cloudlets=dataclasses.replace(
+            cl, net_phase=phase, net_lat=lat, net_remaining=rem,
+            state=state, finish_time=finish),
+    )
+
+
+def transfer_accounting(dc: DatacenterState, drained: jnp.ndarray
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(energy_add f32[H], moved_mb f32[]) for this event's drained flows.
+
+    ``drained bool[C]`` marks flows whose remaining MB snapped to zero in
+    this event's commit (``engine.step``).  Each books its *whole* size —
+    ``file_size`` in NET_STAGE_IN, ``output_size`` in NET_STAGE_OUT (the
+    pre-commit phase) — so ``net_transferred_mb`` carries no rate*dt
+    float residue and byte conservation is exact per transfer.
+    ``energy_add`` is the per-host ``energy_per_mb`` charge on the VM's
+    current host; the caller also bills ``cost_per_bw * moved_mb``.
+    Zero-size transfers never become flows and would book exactly 0 MB,
+    so the phase walk skipping them loses nothing.
+    """
+    cl, vms, net = dc.cloudlets, dc.vms, dc.net
+    nh = dc.hosts.num_pes.shape[0]
+    nv = vms.req_pes.shape[0]
+    mb = jnp.where(drained,
+                   jnp.where(cl.net_phase == NET_STAGE_IN, cl.file_size,
+                             cl.output_size),
+                   0.0)
+    host = vms.host[jnp.clip(cl.vm, 0, nv - 1)]
+    energy_add = jnp.zeros((nh,), jnp.float32).at[
+        jnp.clip(host, 0, nh - 1)].add(
+        jnp.where(host >= 0, mb * net.energy_per_mb, 0.0))
+    return energy_add, jnp.sum(mb)
+
+
+def migration_route(dc: DatacenterState, src: jnp.ndarray, dst: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(bw f32[], lat f32[]) of the source->target migration path.
+
+    Routed by the static cluster map: same cluster -> the intra-cluster
+    access fabric, different clusters -> the cluster uplinks."""
+    net = dc.net
+    nh = dc.hosts.num_pes.shape[0]
+    same = (net.cluster[jnp.clip(src, 0, nh - 1)]
+            == net.cluster[jnp.clip(dst, 0, nh - 1)])
+    return (jnp.where(same, net.bw_intra, net.bw_inter),
+            jnp.where(same, net.lat_intra, net.lat_inter))

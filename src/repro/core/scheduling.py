@@ -34,6 +34,7 @@ from repro.core.state import (
     CL_CREATED,
     DatacenterState,
     INF,
+    NET_RUN,
     SPACE_SHARED,
     TIME_SHARED,
     VM_ACTIVE,
@@ -56,23 +57,33 @@ segment_cumsum_grouped = segment_cumsum
 # ---------------------------------------------------------------------------
 # Runnability predicates
 # ---------------------------------------------------------------------------
-def cloudlet_runnable(dc: DatacenterState) -> jnp.ndarray:
+def cloudlet_runnable(dc: DatacenterState, *,
+                      networked: bool = False) -> jnp.ndarray:
     """bool[C] — submitted, unfinished, and its VM is placed and running.
 
     A VM mid-migration (``mig_remaining > 0``, see core/migration.py)
     contributes no execution — its task units pause for the downtime
     window; the default all-zero field keeps static scenarios unchanged.
+
+    ``networked`` is the engine's static gate (core/network.py): under
+    it a cloudlet additionally needs its input data staged in
+    (``net_phase == NET_RUN``) before it may draw CPU — unless its lane's
+    topology is disabled (``net.enabled == 0``), which must behave
+    exactly like the non-networked program.
     """
     cl = dc.cloudlets
     owner = jnp.clip(cl.vm, 0, None)
     vm_ok = dc.vms.state[owner] == VM_ACTIVE
     not_migrating = dc.vms.mig_remaining[owner] <= 0.0
-    return ((cl.state == CL_CREATED)
-            & (cl.submit_time <= dc.time)
-            & (cl.remaining > 0.0)
-            & (cl.vm >= 0)
-            & vm_ok
-            & not_migrating)
+    runnable = ((cl.state == CL_CREATED)
+                & (cl.submit_time <= dc.time)
+                & (cl.remaining > 0.0)
+                & (cl.vm >= 0)
+                & vm_ok
+                & not_migrating)
+    if networked:
+        runnable &= (dc.net.enabled != 1) | (cl.net_phase == NET_RUN)
+    return runnable
 
 
 def vm_has_work(dc: DatacenterState, runnable: jnp.ndarray) -> jnp.ndarray:
@@ -174,14 +185,16 @@ def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # Full two-level pass (the tensorized ``updateVMsProcessing``)
 # ---------------------------------------------------------------------------
-def cloudlet_rates(dc: DatacenterState) -> jnp.ndarray:
+def cloudlet_rates(dc: DatacenterState, *,
+                   networked: bool = False) -> jnp.ndarray:
     """f32[C] — execution rate (MIPS) of every cloudlet at ``dc.time``.
 
     One fused pass over all hosts x VMs x cloudlets; the vectorized
     equivalent of CloudSim's per-entity ``updateVMsProcessing`` /
-    ``updateGridletsProcessing`` cascade (§4.1).
+    ``updateGridletsProcessing`` cascade (§4.1).  ``networked`` forwards
+    to ``cloudlet_runnable`` (data must be staged in before CPU).
     """
-    runnable = cloudlet_runnable(dc)
+    runnable = cloudlet_runnable(dc, networked=networked)
     active = dc.vms.state == VM_ACTIVE
     # reserve_pes=1: placement reserved PEs for the VM's whole life (§5
     # experiment).  reserve_pes=0: only VMs with work compete (Fig. 3).

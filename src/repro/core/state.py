@@ -56,6 +56,16 @@ MIG_OFF = 0        # no live migration
 MIG_THRESHOLD = 1  # offload the most CPU-overloaded host (util > threshold)
 MIG_DRAIN = 2      # consolidation: drain the least-utilized non-empty host
 
+# Network staging phases (core/network.py).  Under a networked topology a
+# cloudlet's data moves before/after execution: NET_PRE (transfer not yet
+# armed — also the inert value for non-networked scenarios) -> NET_STAGE_IN
+# (file_size MB inbound) -> NET_RUN (CPU execution) -> NET_STAGE_OUT
+# (output_size MB outbound) -> CL_DONE.
+NET_PRE = 0
+NET_STAGE_IN = 1
+NET_RUN = 2
+NET_STAGE_OUT = 3
+
 
 def pytree_dataclass(cls):
     """Register a dataclass whose every field is pytree data."""
@@ -130,6 +140,75 @@ class CloudletState:
     finish_time: jnp.ndarray    # f32[C]   INF until done
     rank_in_vm: jnp.ndarray     # i32[C]   FCFS submission rank within its VM
     state: jnp.ndarray          # i32[C]   CL_* codes
+    # staged-transfer machinery (core/network.py), inert (all zero / NET_PRE)
+    # unless the scenario carries an enabled topology.  ``net_lat`` and
+    # ``net_remaining`` are *deltas* decremented per event like cloudlet
+    # ``remaining`` — immune to f32 clock resolution.
+    net_phase: jnp.ndarray      # i32[C]   NET_* staging phase
+    net_remaining: jnp.ndarray  # f32[C]   MB left in the current transfer
+    net_lat: jnp.ndarray        # f32[C]   latency seconds left before the flow
+
+
+# ---------------------------------------------------------------------------
+# Network topology  (paper §4.1: latency matrix + bandwidth-charged
+# transfers; arXiv:0907.4878 names network modeling the prerequisite for
+# inter-networked-cloud studies)
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class NetTopology:
+    """Two-tier per-datacenter topology (core/network.py).
+
+    Hosts group into edge clusters (``cluster i32[H]``); three nested
+    link tiers carry staged cloudlet data from the user gateway down to a
+    host — per-host access fabric (``bw_intra``), per-cluster uplink
+    (``bw_inter``), per-datacenter WAN gateway (``bw_wan``) — each tier
+    fair-sharing its capacity among concurrent transfers.  Migration
+    copies route host-to-host: same cluster over the intra fabric,
+    cross-cluster over the uplinks.  All-zero fields with ``enabled == 0``
+    (the ``no_network`` default) are exactly inert: the engine compiles
+    the pre-network program (static gate, ``engine.wants_network``) and
+    results are bit-identical to a state without this block.
+
+    Units: bandwidth in MB/s, latency in seconds, energy in J/MB.
+    """
+    enabled: jnp.ndarray        # i32[]  1 => staged transfers + routing on
+    cluster: jnp.ndarray        # i32[H] host -> edge-cluster id in [0, H)
+    bw_intra: jnp.ndarray       # f32[]  host access fabric, MB/s
+    lat_intra: jnp.ndarray      # f32[]  s
+    bw_inter: jnp.ndarray       # f32[]  cluster uplink, MB/s
+    lat_inter: jnp.ndarray      # f32[]  s
+    bw_wan: jnp.ndarray         # f32[]  datacenter WAN gateway, MB/s
+    lat_wan: jnp.ndarray        # f32[]  s
+    energy_per_mb: jnp.ndarray  # f32[]  J charged to the host per staged MB
+
+
+def make_topology(cluster, *, bw_intra=1000.0, lat_intra=0.0,
+                  bw_inter=500.0, lat_inter=0.0, bw_wan=100.0,
+                  lat_wan=0.0, energy_per_mb=0.0) -> NetTopology:
+    """An *enabled* two-tier topology from a host->cluster map.
+
+    ``cluster`` is a length-H sequence of edge-cluster ids (any ids in
+    ``[0, H)``; hosts sharing an id share an edge cluster).  Bandwidths
+    in MB/s (``INF`` for an uncontended tier), latencies in seconds.
+    """
+    cluster = jnp.asarray(cluster, jnp.int32)
+    g = lambda x: jnp.asarray(x, jnp.float32)
+    return NetTopology(
+        enabled=jnp.int32(1), cluster=cluster,
+        bw_intra=g(bw_intra), lat_intra=g(lat_intra),
+        bw_inter=g(bw_inter), lat_inter=g(lat_inter),
+        bw_wan=g(bw_wan), lat_wan=g(lat_wan),
+        energy_per_mb=g(energy_per_mb))
+
+
+def no_network(n_hosts: int) -> NetTopology:
+    """The disabled topology (all zeros) — the non-networked default."""
+    z = jnp.float32(0.0)
+    return NetTopology(
+        enabled=jnp.int32(0),
+        cluster=jnp.zeros((n_hosts,), jnp.int32),
+        bw_intra=z, lat_intra=z, bw_inter=z, lat_inter=z,
+        bw_wan=z, lat_wan=z, energy_per_mb=z)
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +266,11 @@ class DatacenterState:
     mig_energy_per_mb: jnp.ndarray  # f32[] joules per dirty MB migrated
     mig_count: jnp.ndarray         # i32[]  migrations performed
     mig_downtime: jnp.ndarray      # f32[]  summed migration delays (VM-s)
+    # network topology + transfer accounting (core/network.py); the
+    # ``no_network`` default keeps every field inert and the compiled
+    # program identical to the pre-network engine.
+    net: NetTopology
+    net_transferred_mb: jnp.ndarray  # f32[] MB moved by completed transfers
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +347,9 @@ def make_cloudlets(vm, length, submit_time=0.0, file_size=0.0,
         finish_time=jnp.full((c,), INF),
         rank_in_vm=rank,
         state=jnp.full((c,), CL_CREATED, jnp.int32),
+        net_phase=jnp.full((c,), NET_PRE, jnp.int32),
+        net_remaining=jnp.zeros((c,), jnp.float32),
+        net_lat=jnp.zeros((c,), jnp.float32),
     )
 
 
@@ -310,10 +397,13 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
                     reserve_pes=True, rates: MarketRates | None = None,
                     events: jnp.ndarray | None = None,
                     mig_policy=MIG_OFF, mig_threshold=0.8,
-                    mig_energy_per_mb=0.0) -> DatacenterState:
+                    mig_energy_per_mb=0.0,
+                    net: NetTopology | None = None) -> DatacenterState:
     zero = jnp.float32(0.0)
     events = no_events() if events is None else jnp.asarray(events,
                                                             jnp.float32)
+    if net is None:
+        net = no_network(hosts.num_pes.shape[0])
     return DatacenterState(
         hosts=hosts, vms=vms, cloudlets=cloudlets,
         rates=rates if rates is not None else make_market(),
@@ -329,4 +419,6 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
         mig_energy_per_mb=jnp.float32(mig_energy_per_mb),
         mig_count=jnp.int32(0),
         mig_downtime=jnp.float32(0.0),
+        net=net,
+        net_transferred_mb=jnp.float32(0.0),
     )

@@ -127,11 +127,16 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         finish_time=_pad_axis0(c.finish_time, nc, INF),
         rank_in_vm=_pad_axis0(c.rank_in_vm, nc, 0),
         state=_pad_axis0(c.state, nc, CL_EMPTY),
+        net_phase=_pad_axis0(c.net_phase, nc, 0),
+        net_remaining=_pad_axis0(c.net_remaining, nc, 0.0),
+        net_lat=_pad_axis0(c.net_lat, nc, 0.0),
     )
     return dataclasses.replace(
         dc, hosts=hosts, vms=vms, cloudlets=cloudlets,
         events=_pad_axis0(dc.events, ne, 0.0),
-        event_fired=_pad_axis0(dc.event_fired, ne, False))
+        event_fired=_pad_axis0(dc.event_fired, ne, False),
+        net=dataclasses.replace(
+            dc.net, cluster=_pad_axis0(dc.net.cluster, nh, 0)))
 
 
 def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
@@ -154,37 +159,45 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
 # Batched runners
 # ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic"))
+                                   "dynamic", "networked"))
 def _run_batch(batch: DatacenterState, *, max_steps: int,
-               provision_policy: int, dynamic: bool) -> DatacenterState:
+               provision_policy: int, dynamic: bool,
+               networked: bool) -> DatacenterState:
     f = partial(engine.run, max_steps=max_steps,
-                provision_policy=provision_policy, dynamic=dynamic)
+                provision_policy=provision_policy, dynamic=dynamic,
+                networked=networked)
     return jax.vmap(f)(batch)
 
 
 def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
               provision_policy: int = FIRST_FIT,
-              dynamic: bool | None = None) -> DatacenterState:
+              dynamic: bool | None = None,
+              networked: bool | None = None) -> DatacenterState:
     """vmap ``engine.run`` over a stacked scenario batch (one compiled call).
 
     Each lane runs to its own quiescence; lanes that finish early take
     inert no-op steps (``step`` is a fixed point at quiescence) until the
     whole batch quiesces, so per-lane results are identical to single runs.
     ``dynamic=None`` auto-detects whether any lane carries events or a
-    migration policy (``engine.wants_dynamic``); the whole batch then
-    runs the dynamic program — inert for lanes without events.
+    migration policy (``engine.wants_dynamic``); ``networked=None``
+    likewise auto-detects an enabled topology (``engine.wants_network``).
+    The whole batch then runs the dynamic/networked program — inert for
+    lanes without events or with a disabled topology.
     """
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
+    if networked is None:
+        networked = engine.wants_network(batch)
     return _run_batch(batch, max_steps=max_steps,
-                      provision_policy=provision_policy, dynamic=dynamic)
+                      provision_policy=provision_policy, dynamic=dynamic,
+                      networked=networked)
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic"))
+                                   "dynamic", "networked"))
 def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                      task_policies: jnp.ndarray, *, max_steps: int,
-                     provision_policy: int, dynamic: bool
+                     provision_policy: int, dynamic: bool, networked: bool
                      ) -> DatacenterState:
     def one_policy(vp, tp):
         withp = dataclasses.replace(
@@ -193,7 +206,7 @@ def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
             task_policy=jnp.broadcast_to(tp, batch.task_policy.shape))
         return _run_batch(withp, max_steps=max_steps,
                           provision_policy=provision_policy,
-                          dynamic=dynamic)
+                          dynamic=dynamic, networked=networked)
 
     return jax.vmap(one_policy)(jnp.asarray(vm_policies, jnp.int32),
                                 jnp.asarray(task_policies, jnp.int32))
@@ -202,7 +215,8 @@ def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
 def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                     task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
                     provision_policy: int = FIRST_FIT,
-                    dynamic: bool | None = None) -> DatacenterState:
+                    dynamic: bool | None = None,
+                    networked: bool | None = None) -> DatacenterState:
     """Reference grid runner: outer vmap over policies, inner over scenarios.
 
     The PR-1 implementation, kept as the differential baseline for the
@@ -211,10 +225,12 @@ def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
     """
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
+    if networked is None:
+        networked = engine.wants_network(batch)
     return _run_grid_nested(batch, vm_policies, task_policies,
                             max_steps=max_steps,
                             provision_policy=provision_policy,
-                            dynamic=dynamic)
+                            dynamic=dynamic, networked=networked)
 
 
 def fuse_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
@@ -310,7 +326,7 @@ def _default_inner() -> str:
 
 @lru_cache(maxsize=None)
 def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                    inner: str, dynamic: bool):
+                    inner: str, dynamic: bool, networked: bool):
     """jit(shard_map(map-or-vmap(run))) for one (mesh, statics) combination.
 
     Cached so repeated sweeps with the same mesh reuse the compiled
@@ -331,7 +347,8 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
              out_specs=spec, check_vma=False)
     def go(block: DatacenterState) -> DatacenterState:
         f = partial(engine.run, max_steps=max_steps,
-                    provision_policy=provision_policy, dynamic=dynamic)
+                    provision_policy=provision_policy, dynamic=dynamic,
+                    networked=networked)
         if inner == "vmap":
             return jax.vmap(f)(block)
         return jax.lax.map(f, block)
@@ -341,7 +358,7 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
 
 @lru_cache(maxsize=None)
 def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                  dynamic: bool):
+                  dynamic: bool, networked: bool):
     """jit(vmap(run)) with GSPMD in/out shardings over the lane axis.
 
     Same program as ``run_batch`` — XLA's automatic partitioner splits
@@ -352,7 +369,8 @@ def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
     """
     shd = NamedSharding(mesh, P(axis))
     f = partial(engine.run, max_steps=max_steps,
-                provision_policy=provision_policy, dynamic=dynamic)
+                provision_policy=provision_policy, dynamic=dynamic,
+                networked=networked)
     return jax.jit(jax.vmap(f), in_shardings=(shd,), out_shardings=shd)
 
 
@@ -361,7 +379,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
                 provision_policy: int = FIRST_FIT,
                 partitioner: str = "auto",
                 inner: str | None = None,
-                dynamic: bool | None = None) -> DatacenterState:
+                dynamic: bool | None = None,
+                networked: bool | None = None) -> DatacenterState:
     """``run_batch`` with the lane axis split across the devices of a mesh.
 
     ``mesh`` is a 1-D ``jax.sharding.Mesh`` (default: all local devices,
@@ -391,6 +410,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         axis = _lane_axis(mesh)
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
+    if networked is None:
+        networked = engine.wants_network(batch)
     partitioner = _resolve_partitioner(partitioner)
     n_dev = mesh.shape[axis]
     have = batch.time.shape[0]
@@ -398,11 +419,12 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
     padded = pad_batch(batch, lanes)
     if partitioner == "gspmd":
         out = _gspmd_runner(mesh, axis, max_steps,
-                            provision_policy, dynamic)(padded)
+                            provision_policy, dynamic, networked)(padded)
     else:
         out = _sharded_runner(mesh, axis, max_steps, provision_policy,
                               inner if inner is not None
-                              else _default_inner(), dynamic)(padded)
+                              else _default_inner(), dynamic,
+                              networked)(padded)
     if lanes == have:
         return out
     return jax.tree_util.tree_map(lambda x: x[:have], out)
@@ -410,7 +432,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
 
 @lru_cache(maxsize=None)
 def _grid_runner(mesh, max_steps: int, provision_policy: int,
-                 partitioner: str, inner: str, dynamic: bool):
+                 partitioner: str, inner: str, dynamic: bool,
+                 networked: bool):
     """One jitted fuse -> (shard) -> run -> reshape pipeline per config.
 
     The whole grid — policy broadcast, inert mesh padding, the flat lane
@@ -420,7 +443,7 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
     """
     run_lane = lambda dc: engine.run(dc, max_steps=max_steps,
                                      provision_policy=provision_policy,
-                                     dynamic=dynamic)
+                                     dynamic=dynamic, networked=networked)
 
     def fn(batch, vm_policies, task_policies):
         n_pol = vm_policies.shape[0]
@@ -457,7 +480,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
              provision_policy: int = FIRST_FIT, mesh=None,
              sharded: bool | None = None,
              partitioner: str = "auto",
-             dynamic: bool | None = None) -> DatacenterState:
+             dynamic: bool | None = None,
+             networked: bool | None = None) -> DatacenterState:
     """Scenarios x policy grid as ONE fused, device-sharded batch.
 
     ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
@@ -486,10 +510,12 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         mesh = None
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
+    if networked is None:
+        networked = engine.wants_network(batch)
     return _grid_runner(mesh, max_steps, provision_policy,
                         _resolve_partitioner(partitioner),
-                        _default_inner(), dynamic)(batch, vm_policies,
-                                                   task_policies)
+                        _default_inner(), dynamic,
+                        networked)(batch, vm_policies, task_policies)
 
 
 def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -515,6 +541,7 @@ class SweepSummary(NamedTuple):
     energy_j: jnp.ndarray        # f32[...]  total joules over valid hosts
     n_migrations: jnp.ndarray    # i32[...]  live migrations performed
     mig_downtime: jnp.ndarray    # f32[...]  summed migration delays, VM-s
+    transferred_mb: jnp.ndarray  # f32[...]  MB moved by completed transfers
 
 
 def summarize_batch(final: DatacenterState) -> SweepSummary:
@@ -533,4 +560,5 @@ def summarize_batch(final: DatacenterState) -> SweepSummary:
         energy_j=energy_total_j(final),
         n_migrations=final.mig_count,
         mig_downtime=final.mig_downtime,
+        transferred_mb=final.net_transferred_mb,
     )

@@ -16,6 +16,7 @@ from repro.core.engine import StepRecord
 
 __all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
            "trace_energy_j", "migration_timeline", "failure_timeline",
+           "transfer_timeline", "link_utilization_timeline",
            "gantt", "summarize_trace"]
 
 
@@ -77,6 +78,38 @@ def failure_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
     return np.asarray(trace.time)[act], np.asarray(trace.hosts_down)[act]
 
 
+def transfer_timeline(trace: StepRecord
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(times, cumulative transferred MB, active flows) per event step.
+
+    The network sibling of ``completion_curve`` (core/network.py):
+    ``transferred`` counts MB of *completed* staged transfers after each
+    step; ``n_flows`` counts transfers that drew bandwidth during it.
+    """
+    act = np.asarray(trace.active)
+    return (np.asarray(trace.time)[act],
+            np.asarray(trace.transferred_mb)[act],
+            np.asarray(trace.n_flows)[act])
+
+
+def link_utilization_timeline(trace: StepRecord, wan_bw_mbps: float
+                              ) -> tuple[np.ndarray, np.ndarray]:
+    """(times, WAN gateway utilization in [0, 1]) per event step.
+
+    Derived from the transferred-MB timeline: interval throughput =
+    ΔMB / Δt, normalized by the gateway capacity.  Exact on intervals
+    whose transfers complete at their end (rates are piecewise-constant);
+    a smoothed view of mid-transfer intervals otherwise.
+    """
+    t, mb, _ = transfer_timeline(trace)
+    if len(t) == 0:
+        return t, mb
+    dt = np.diff(np.concatenate([[0.0], t]))
+    dmb = np.diff(np.concatenate([[0.0], mb]))
+    util = np.where(dt > 0, dmb / np.maximum(dt, 1e-12), 0.0)
+    return t, np.clip(util / max(float(wan_bw_mbps), 1e-12), 0.0, 1.0)
+
+
 def gantt(dc: S.DatacenterState) -> Dict[int, list]:
     """Per-VM list of (cloudlet slot, start, finish) for completed tasks."""
     cl = dc.cloudlets
@@ -100,7 +133,8 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
         return {"events": 0, "makespan": 0.0, "mean_util": 0.0,
                 "peak_util": 0.0, "energy_total_j": 0.0,
                 "mean_watts": 0.0, "peak_watts": 0.0,
-                "migrations": 0, "peak_hosts_down": 0}
+                "migrations": 0, "peak_hosts_down": 0,
+                "transferred_mb": 0.0, "peak_flows": 0}
     # time-weighted means over event intervals (interval i ends at t[i])
     if len(t) > 1:
         dt = np.diff(np.concatenate([[0.0], t]))
@@ -120,4 +154,6 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
         "peak_watts": float(watts.max()),
         "migrations": int(np.asarray(trace.migrations)[act][-1]),
         "peak_hosts_down": int(np.asarray(trace.hosts_down)[act].max()),
+        "transferred_mb": float(np.asarray(trace.transferred_mb)[act][-1]),
+        "peak_flows": int(np.asarray(trace.n_flows)[act].max()),
     }

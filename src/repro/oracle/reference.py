@@ -31,7 +31,13 @@ Covered semantics (all four Figure 3 policy combinations):
     same DESTROY/CREATE/FAIL/RECOVER order, and the live-migration
     policies (THRESHOLD offload / DRAIN consolidation, minimum-
     migration-time victim, WORST_FIT / MOST_FULL target, half-bandwidth
-    copy delay, per-MB copy joules split across both hosts).
+    copy delay, per-MB copy joules split across both hosts),
+  * the network model (``core/network.py``): the staged cloudlet
+    lifecycle (NET_PRE -> STAGE_IN -> RUN -> STAGE_OUT -> done) with
+    serial path latency + bottleneck fair-shared flows over the
+    three-tier topology (per-host access fabric / per-cluster uplink /
+    WAN gateway), transfer-completion accounting (MB moved, per-MB host
+    joules), and topology-routed migration copy delays — all in f64.
 
 The completion-snap band matches the engine's
 (``finish_dt <= dt * (1 + 1e-5) + 1e-9``) so simultaneous completions
@@ -61,6 +67,7 @@ CL_EMPTY, CL_CREATED, CL_DONE, CL_FAILED = 0, 1, 2, 3
 EV_NONE, EV_VM_CREATE, EV_VM_DESTROY = 0, 1, 2
 EV_HOST_FAIL, EV_HOST_RECOVER = 3, 4
 MIG_OFF, MIG_THRESHOLD, MIG_DRAIN = 0, 1, 2
+NET_PRE, NET_STAGE_IN, NET_RUN, NET_STAGE_OUT = 0, 1, 2, 3
 INF = float(1e30)
 
 _SNAP_REL = 1e-5
@@ -86,6 +93,7 @@ class Host:
     power_curve: tuple = tuple(i / 10.0 for i in range(11))
     energy_j: float = 0.0           # accrued joules (f64)
     valid: bool = True
+    cluster: int = 0                # edge-cluster id (core/network.py)
     vms: List["Vm"] = dataclasses.field(default_factory=list)
 
     def power_at(self, util: float) -> float:
@@ -136,6 +144,13 @@ class Cloudlet:
     finish_time: float = INF
     state: int = CL_CREATED
     rate: float = 0.0               # MIPS granted this event
+    # staged transfers (core/network.py mirror)
+    file_size: float = 0.0          # MB staged in before execution
+    output_size: float = 0.0        # MB staged out after execution
+    net_phase: int = NET_PRE
+    net_remaining: float = 0.0      # MB left in the current transfer
+    net_lat: float = 0.0            # latency seconds left before the flow
+    frate: float = 0.0              # MB/s granted this event
 
 
 @dataclasses.dataclass
@@ -156,6 +171,7 @@ class OracleResult:
     n_events: int                   # events processed
     n_migrations: int = 0           # live migrations performed
     mig_downtime: float = 0.0       # summed migration delays (VM-seconds)
+    transferred_mb: float = 0.0     # MB moved by completed staged transfers
 
     @property
     def n_done(self) -> int:
@@ -175,6 +191,11 @@ class ReferenceSimulator:
                  events: Optional[List[Event]] = None,
                  mig_policy: int = MIG_OFF, mig_threshold: float = 0.8,
                  mig_energy_per_mb: float = 0.0,
+                 net_enabled: bool = False,
+                 bw_intra: float = 0.0, lat_intra: float = 0.0,
+                 bw_inter: float = 0.0, lat_inter: float = 0.0,
+                 bw_wan: float = 0.0, lat_wan: float = 0.0,
+                 net_energy_per_mb: float = 0.0,
                  n_vm_slots: Optional[int] = None,
                  n_cl_slots: Optional[int] = None,
                  n_host_slots: Optional[int] = None):
@@ -190,6 +211,14 @@ class ReferenceSimulator:
         self.mig_energy_per_mb = float(mig_energy_per_mb)
         self.n_migrations = 0
         self.mig_downtime = 0.0
+        # network topology (state.NetTopology mirror; host.cluster carries
+        # the per-host edge-cluster id)
+        self.net_enabled = bool(net_enabled)
+        self.bw_intra, self.lat_intra = float(bw_intra), float(lat_intra)
+        self.bw_inter, self.lat_inter = float(bw_inter), float(lat_inter)
+        self.bw_wan, self.lat_wan = float(bw_wan), float(lat_wan)
+        self.net_energy_per_mb = float(net_energy_per_mb)
+        self.transferred_mb = 0.0
         self.n_vm_slots = n_vm_slots if n_vm_slots is not None else (
             max((v.index for v in vms), default=-1) + 1)
         self.n_cl_slots = n_cl_slots if n_cl_slots is not None else (
@@ -198,10 +227,10 @@ class ReferenceSimulator:
             max((h.index for h in hosts), default=-1) + 1)
         self.time = 0.0
         self.n_events = 0
-        vm_by_index = {v.index: v for v in vms}
+        self._vm_by_index = {v.index: v for v in vms}
         for cl in cloudlets:
             cl.remaining = cl.length
-            owner = vm_by_index.get(cl.vm)
+            owner = self._vm_by_index.get(cl.vm)
             if owner is not None:
                 owner.cloudlets.append(cl)
             else:                   # orphan cloudlet can never run
@@ -229,7 +258,8 @@ class ReferenceSimulator:
                  peak_w=float(g(h.peak_w)[i]),
                  power_curve=tuple(
                      float(x) for x in g(h.power_curve)[i]),
-                 valid=bool(g(h.valid)[i]))
+                 valid=bool(g(h.valid)[i]),
+                 cluster=int(g(dc.net.cluster)[i]))
             for i in range(g(h.num_pes).shape[0])
             if int(g(h.num_pes)[i]) > 0
         ]
@@ -256,10 +286,16 @@ class ReferenceSimulator:
         c = dc.cloudlets
         cls_ = [
             Cloudlet(i, int(g(c.vm)[i]), float(g(c.length)[i]),
-                     float(g(c.submit_time)[i]), state=int(g(c.state)[i]))
+                     float(g(c.submit_time)[i]), state=int(g(c.state)[i]),
+                     file_size=float(g(c.file_size)[i]),
+                     output_size=float(g(c.output_size)[i]),
+                     net_phase=int(g(c.net_phase)[i]),
+                     net_remaining=float(g(c.net_remaining)[i]),
+                     net_lat=float(g(c.net_lat)[i]))
             for i in range(g(c.vm).shape[0])
             if int(g(c.state)[i]) != CL_EMPTY
         ]
+        net = dc.net
         return cls(hosts, vms, cls_,
                    vm_policy=int(g(dc.vm_policy)),
                    task_policy=int(g(dc.task_policy)),
@@ -268,6 +304,14 @@ class ReferenceSimulator:
                    mig_policy=int(g(dc.mig_policy)),
                    mig_threshold=float(g(dc.mig_threshold)),
                    mig_energy_per_mb=float(g(dc.mig_energy_per_mb)),
+                   net_enabled=bool(int(g(net.enabled))),
+                   bw_intra=float(g(net.bw_intra)),
+                   lat_intra=float(g(net.lat_intra)),
+                   bw_inter=float(g(net.bw_inter)),
+                   lat_inter=float(g(net.lat_inter)),
+                   bw_wan=float(g(net.bw_wan)),
+                   lat_wan=float(g(net.lat_wan)),
+                   net_energy_per_mb=float(g(net.energy_per_mb)),
                    n_vm_slots=g(v.req_pes).shape[0],
                    n_cl_slots=g(c.vm).shape[0],
                    n_host_slots=g(h.num_pes).shape[0])
@@ -372,13 +416,98 @@ class ReferenceSimulator:
         for e in due:
             e.fired = True
 
+    # -- staged transfers (core/network.py mirror) --------------------------
+    def _stage_latency(self) -> float:
+        """Serial path latency per staged transfer (all three tiers)."""
+        return self.lat_wan + self.lat_inter + self.lat_intra
+
+    def _complete_transfer(self, cl: Cloudlet, mb: float):
+        """Book a drained transfer: MB moved + J on the serving host.
+
+        Called from ``_advance`` on the event whose flow snaps to zero
+        (the engine's ``transfer_accounting`` commit), booking the whole
+        size so byte conservation holds exactly per transfer."""
+        self.transferred_mb += mb
+        vm = self._vm_by_index.get(cl.vm)
+        if vm is not None and vm.host is not None:
+            vm.host.energy_j += mb * self.net_energy_per_mb
+
+    def _advance_phases(self):
+        """Run every due staging-phase transition (network.advance_phases
+        mirror): arm input transfers for would-be-runnable cloudlets,
+        promote drained STAGE_IN transfers to the CPU phase (cascading
+        with arming, so zero-size zero-latency transfers cost no extra
+        event), and complete drained STAGE_OUT transfers.  Accounting
+        happened at flow-drain time (``_complete_transfer``); zero-size
+        transfers promoted here moved zero bytes."""
+        if not self.net_enabled:
+            return
+        total_lat = self._stage_latency()
+        for cl in self.cloudlets:
+            if cl.state != CL_CREATED:
+                continue
+            vm = self._vm_by_index.get(cl.vm)
+            vm_ready = (vm is not None and vm.state == VM_ACTIVE
+                        and vm.host is not None and vm.mig_remaining <= 0.0)
+            if (cl.net_phase == NET_PRE and vm_ready
+                    and cl.submit_time <= self.time):
+                cl.net_phase = NET_STAGE_IN
+                cl.net_lat = total_lat
+                cl.net_remaining = cl.file_size
+            if (cl.net_phase == NET_STAGE_IN and cl.net_lat <= 0.0
+                    and cl.net_remaining <= 0.0):
+                cl.net_phase = NET_RUN
+            elif (cl.net_phase == NET_STAGE_OUT and cl.net_lat <= 0.0
+                  and cl.net_remaining <= 0.0):
+                cl.state = CL_DONE
+                cl.finish_time = self.time
+
+    def _flow_active(self, cl: Cloudlet) -> bool:
+        """Cloudlet has an in-flight staged transfer context
+        (network.staging_mask mirror): a live placement is required — an
+        evicted VM pauses its transfers, a mid-migration VM keeps
+        transferring via its (already-repointed) destination host."""
+        if not self.net_enabled or cl.state != CL_CREATED:
+            return False
+        if cl.net_phase not in (NET_STAGE_IN, NET_STAGE_OUT):
+            return False
+        vm = self._vm_by_index.get(cl.vm)
+        return (vm is not None and vm.state == VM_ACTIVE
+                and vm.host is not None)
+
+    def _update_flow_rates(self):
+        """Bottleneck fair share over the three-tier path
+        (network.flow_rates mirror): every tier splits its capacity
+        equally among its transfers; a flow runs at the minimum share."""
+        for cl in self.cloudlets:
+            cl.frate = 0.0
+        if not self.net_enabled:
+            return
+        flows = [cl for cl in self.cloudlets
+                 if self._flow_active(cl) and cl.net_lat <= 0.0
+                 and cl.net_remaining > 0.0]
+        if not flows:
+            return
+        n_up: dict = {}
+        n_acc: dict = {}
+        for cl in flows:
+            h = self._vm_by_index[cl.vm].host
+            n_up[h.cluster] = n_up.get(h.cluster, 0) + 1
+            n_acc[h.index] = n_acc.get(h.index, 0) + 1
+        for cl in flows:
+            h = self._vm_by_index[cl.vm].host
+            cl.frate = min(self.bw_wan / len(flows),
+                           self.bw_inter / n_up[h.cluster],
+                           self.bw_intra / n_acc[h.index])
+
     # -- the two-level update walk (updateVMsProcessing cascade) ------------
     def _runnable(self, cl: Cloudlet, vm: Vm) -> bool:
         return (cl.state == CL_CREATED
                 and cl.submit_time <= self.time
                 and cl.remaining > 0.0
                 and vm.state == VM_ACTIVE
-                and vm.mig_remaining <= 0.0)
+                and vm.mig_remaining <= 0.0
+                and (not self.net_enabled or cl.net_phase == NET_RUN))
 
     def _update_rates(self):
         for cl in self.cloudlets:
@@ -498,8 +627,17 @@ class ReferenceSimulator:
             dst = max(targets, key=lambda h: (h.free_ram, -h.index))
         else:                                   # MOST_FULL: fullest fraction
             dst = max(targets, key=lambda h: (self._frac_used(h), -h.index))
-        link = 0.5 * min(src.bw, dst.bw)
-        delay = vm.ram / link if link > 0.0 else INF
+        if self.net_enabled:
+            # topology route (network.migration_route mirror): same edge
+            # cluster -> intra fabric, cross-cluster -> cluster uplinks
+            if src.cluster == dst.cluster:
+                bw, lat = self.bw_intra, self.lat_intra
+            else:
+                bw, lat = self.bw_inter, self.lat_inter
+            delay = lat + vm.ram / max(bw, 1e-30)
+        else:
+            link = 0.5 * min(src.bw, dst.bw)
+            delay = vm.ram / link if link > 0.0 else INF
         return vm, src, dst, delay
 
     def _maybe_migrate(self) -> bool:
@@ -543,6 +681,12 @@ class ReferenceSimulator:
                 dt = min(dt, cl.remaining / cl.rate)
             if cl.state == CL_CREATED and cl.submit_time > self.time:
                 arrive = min(arrive, cl.submit_time)
+        for cl in self.cloudlets:       # staged-transfer wake set
+            if self._flow_active(cl):
+                if cl.net_lat > 0.0:
+                    dt = min(dt, cl.net_lat)
+                elif cl.frate > 0.0:
+                    dt = min(dt, cl.net_remaining / cl.frate)
         for vm in self.vms:
             if vm.state == VM_PENDING and vm.submit_time > self.time:
                 arrive = min(arrive, vm.submit_time)
@@ -572,12 +716,38 @@ class ReferenceSimulator:
         for cl in self.cloudlets:
             if cl.state != CL_CREATED:
                 continue
+            # staged-transfer countdowns first, same snap band — from the
+            # pre-commit phase, so a freshly armed output transfer (below)
+            # is not decremented in its arming event (engine ordering)
+            if self._flow_active(cl):
+                if cl.net_lat > 0.0:
+                    if cl.net_lat <= snap:
+                        cl.net_lat = 0.0
+                    else:
+                        cl.net_lat = max(cl.net_lat - dt, 0.0)
+                elif cl.frate > 0.0:
+                    if cl.net_remaining / cl.frate <= snap:
+                        cl.net_remaining = 0.0
+                        self._complete_transfer(
+                            cl, cl.file_size
+                            if cl.net_phase == NET_STAGE_IN
+                            else cl.output_size)
+                    else:
+                        cl.net_remaining = max(
+                            cl.net_remaining - cl.frate * dt, 0.0)
             if cl.rate > 0.0 and cl.start_time < 0.0:
                 cl.start_time = self.time
             if cl.rate > 0.0 and cl.remaining / cl.rate <= snap:
                 cl.remaining = 0.0
-                cl.finish_time = t_next
-                cl.state = CL_DONE
+                if self.net_enabled:
+                    # compute completion arms the output transfer; the
+                    # cloudlet finishes when STAGE_OUT drains
+                    cl.net_phase = NET_STAGE_OUT
+                    cl.net_lat = self._stage_latency()
+                    cl.net_remaining = cl.output_size
+                else:
+                    cl.finish_time = t_next
+                    cl.state = CL_DONE
             else:
                 cl.remaining = max(cl.remaining - cl.rate * dt, 0.0)
         for vm in self.vms:     # migration-copy countdown, same snap band
@@ -592,9 +762,11 @@ class ReferenceSimulator:
         while self.n_events < max_events:
             self._apply_events()
             self._provision()
+            self._advance_phases()
             self._update_rates()
             if self._maybe_migrate():
                 self._update_rates()
+            self._update_flow_rates()
             dt, arrive = self._next_dt()
             dt_arr = arrive - self.time if arrive < INF else INF
             head = min(dt, dt_arr)
@@ -627,7 +799,8 @@ class ReferenceSimulator:
                            vm_state=vs, vm_host=vh, energy_j=en,
                            time=self.time, n_events=self.n_events,
                            n_migrations=self.n_migrations,
-                           mig_downtime=self.mig_downtime)
+                           mig_downtime=self.mig_downtime,
+                           transferred_mb=self.transferred_mb)
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:

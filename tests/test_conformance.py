@@ -30,6 +30,7 @@ POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
                for tp in (S.SPACE_SHARED, S.TIME_SHARED)]
 SEEDS = list(range(26))                 # 26 seeds x 4 combos = 104 scenarios
 DYN_SEEDS = list(range(16))             # +16 x 4 = 64 dynamic scenarios
+NET_SEEDS = list(range(8))              # +8 x 4 = 32 networked -> 200 total
 
 
 def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
@@ -137,6 +138,74 @@ def make_dynamic_scenario(seed, vm_policy, task_policy, *, n_hosts=4,
         mig_threshold=mig_threshold, mig_energy_per_mb=0.001)
 
 
+def make_networked_scenario(seed, vm_policy, task_policy, *, n_hosts=4,
+                            n_vms=4, per_vm=3):
+    """Randomized *networked* scenario: topology + staged transfers.
+
+    Random host->cluster maps over 1-3 edge clusters, random three-tier
+    bandwidths/latencies (2-decimal latencies so the f32 clock stays
+    close to the f64 oracle's), and per-cloudlet file/output sizes with
+    a sprinkle of zero-size transfers (degenerate staging paths).  Odd
+    seeds additionally compose with the dynamic subsystem: a host
+    failure/recovery pair plus a THRESHOLD/DRAIN migration policy, so
+    topology-routed migration copies and transfer pauses under eviction
+    are pinned too.
+    """
+    rng = np.random.default_rng(20_000 + seed)
+    idle = rng.uniform(0.05, 0.2, n_hosts)
+    g4 = np.asarray(energy.normalize_watts(energy.SPEC_G4_WATTS)[2])
+    lin = np.asarray(energy.linear_curve())
+    curves = np.where(rng.integers(0, 2, n_hosts)[:, None] == 1,
+                      g4[None], lin[None])
+    hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
+                         rng.choice([250.0, 500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6,
+                         idle_w=idle,
+                         peak_w=idle + rng.uniform(0.2, 0.8, n_hosts),
+                         power_curve=curves)
+    net = S.make_topology(
+        rng.integers(0, int(rng.integers(1, 4)), n_hosts),
+        bw_intra=float(rng.choice([50.0, 100.0, 200.0])),
+        bw_inter=float(rng.choice([20.0, 50.0, 100.0])),
+        bw_wan=float(rng.choice([10.0, 25.0, 50.0])),
+        lat_intra=round(float(rng.uniform(0.0, 0.1)), 2),
+        lat_inter=round(float(rng.uniform(0.0, 0.2)), 2),
+        lat_wan=round(float(rng.uniform(0.0, 0.5)), 2),
+        energy_per_mb=0.001)
+    vms = S.make_vms(
+        rng.integers(1, 3, n_vms),
+        rng.choice([250.0, 500.0, 1000.0], n_vms),
+        rng.choice([64.0, 128.0], n_vms), 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 5, n_vms), 2).astype(np.float32))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(
+        np.round(rng.uniform(0, 20, (n_vms, per_vm)), 2),
+        axis=1).reshape(-1).astype(np.float32)
+    lengths = np.round(
+        rng.uniform(500, 8000, n_vms * per_vm)).astype(np.float32)
+    nc = n_vms * per_vm
+    file_mb = np.round(rng.uniform(0, 40, nc), 1).astype(np.float32)
+    out_mb = np.round(rng.uniform(0, 20, nc), 1).astype(np.float32)
+    file_mb[rng.uniform(size=nc) < 0.2] = 0.0     # degenerate: no input
+    out_mb[rng.uniform(size=nc) < 0.2] = 0.0      # degenerate: no output
+    cl = S.make_cloudlets(owners, lengths, submit, file_size=file_mb,
+                          output_size=out_mb)
+    kw = {}
+    if seed % 2 == 1:                   # compose with the dynamic subsystem
+        fail_t = round(float(rng.uniform(5, 20)), 2)
+        kw["events"] = S.make_events(
+            [fail_t, round(fail_t + float(rng.uniform(5, 15)), 2)],
+            [S.EV_HOST_FAIL, S.EV_HOST_RECOVER],
+            [int(rng.integers(0, n_hosts))] * 2)
+        kw["mig_policy"] = (S.MIG_THRESHOLD, S.MIG_DRAIN)[seed % 4 == 1]
+        kw["mig_threshold"] = 0.7 if kw["mig_policy"] == S.MIG_THRESHOLD \
+            else 0.45
+        kw["mig_energy_per_mb"] = 0.001
+    return S.make_datacenter(
+        hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
+        reserve_pes=bool(seed % 2), net=net, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Engine vs oracle
 # ---------------------------------------------------------------------------
@@ -215,6 +284,53 @@ def test_engine_matches_oracle_dynamic(vm_policy, task_policy):
         total_migrations += res.n_migrations
     # the generator must actually exercise migration on this policy row
     assert total_migrations > 0
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle_networked(vm_policy, task_policy):
+    """32 networked scenarios (8 seeds x 2x2 policies): randomized two-tier
+    topologies, staged STAGE_IN/RUN/STAGE_OUT transfers as fair-shared
+    flows, odd seeds composed with host failures + live migration —
+    engine vs oracle on completion/start times, per-host energy, and
+    transferred MB within 1e-3, identical event/migration counts and
+    final placements.  Total conformance coverage: 104 static + 64
+    dynamic + 32 networked = 200 scenarios."""
+    total_mb = 0.0
+    for seed in NET_SEEDS:
+        dc = make_networked_scenario(seed, vm_policy, task_policy)
+        out, trace = run_trace(dc, num_steps=512)
+        res = simulate_dense(dc)
+        ctx = (seed, vm_policy, task_policy)
+
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state), res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.start_time, np.float64)[done],
+            res.start_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        # transferred MB: the engine's completion-time accrual vs the
+        # oracle's independent booking, within 1e-3 MB
+        np.testing.assert_allclose(
+            float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx
+        np.testing.assert_allclose(float(np.asarray(out.mig_downtime)),
+                                   res.mig_downtime, rtol=0, atol=1e-3,
+                                   err_msg=str(ctx))
+        total_mb += res.transferred_mb
+    # the generator must actually move bytes on this policy row
+    assert total_mb > 0.0
 
 
 def test_oracle_matches_fig3_exactly():

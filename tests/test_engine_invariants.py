@@ -9,6 +9,8 @@ non-negativity + monotonicity, and event-count/time monotonicity of the
 trace.  Every test takes ``seed`` as a pytest parameter so a failure
 names its reproducer directly.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -180,3 +182,103 @@ def test_determinism():
     b = run(dc, max_steps=1024)
     np.testing.assert_array_equal(np.asarray(a.cloudlets.finish_time),
                                   np.asarray(b.cloudlets.finish_time))
+
+
+# ---------------------------------------------------------------------------
+# Network invariants (core/network.py)
+# ---------------------------------------------------------------------------
+def _net_scenario(seed, *, lat_scale=1.0, bw=None, enabled=True):
+    """A static networked scenario with randomized transfer sizes."""
+    rng = np.random.default_rng(seed)
+    n_hosts, n_vms, per_vm = 4, 4, 3
+    # uniform fast hosts: every VM class is admissible, so the byte-
+    # conservation and monotonicity checks always see finished work
+    hosts = S.make_hosts(rng.integers(1, 4, n_hosts),
+                         np.full(n_hosts, 1000.0),
+                         4096.0, 1000.0, 1e6)
+    vms = S.make_vms(rng.integers(1, 3, n_vms),
+                     rng.choice([500.0, 1000.0], n_vms),
+                     64.0, 1.0, 10.0,
+                     submit_time=np.round(
+                         rng.uniform(0, 5, n_vms), 2).astype(np.float32))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(np.round(rng.uniform(0, 20, (n_vms, per_vm)), 2),
+                     axis=1).reshape(-1).astype(np.float32)
+    lengths = np.round(
+        rng.uniform(500, 8000, n_vms * per_vm)).astype(np.float32)
+    nc = n_vms * per_vm
+    cl = S.make_cloudlets(
+        owners, lengths, submit,
+        file_size=np.round(rng.uniform(0, 30, nc), 1).astype(np.float32),
+        output_size=np.round(rng.uniform(0, 15, nc), 1).astype(np.float32))
+    if enabled:
+        net = S.make_topology(
+            rng.integers(0, 2, n_hosts),
+            bw_intra=bw if bw is not None else 100.0,
+            bw_inter=bw if bw is not None else 50.0,
+            bw_wan=bw if bw is not None else 25.0,
+            lat_intra=0.05 * lat_scale, lat_inter=0.1 * lat_scale,
+            lat_wan=0.25 * lat_scale)
+    else:
+        net = S.no_network(n_hosts)
+    return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                             task_policy=S.TIME_SHARED,
+                             reserve_pes=bool(seed % 2), net=net)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_byte_conservation(seed):
+    """Total transferred MB == Σ(file_size + output_size) over finished
+    cloudlets — every staged byte is accounted exactly once (no dynamic
+    events here, so no cancelled mid-stage transfers)."""
+    dc = _net_scenario(seed)
+    out = run(dc, max_steps=2048)
+    cl = out.cloudlets
+    done = np.asarray(cl.state) == S.CL_DONE
+    assert done.any()
+    expect = (np.asarray(cl.file_size, np.float64)[done].sum()
+              + np.asarray(cl.output_size, np.float64)[done].sum())
+    np.testing.assert_allclose(
+        float(np.asarray(out.net_transferred_mb)), expect, rtol=0,
+        atol=1e-3)
+    # and nothing is left in flight at quiescence
+    assert np.all(np.asarray(cl.net_remaining)[done] == 0.0)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_makespan_monotone_in_link_latency(seed):
+    """Scaling every link latency up never finishes the workload earlier
+    (staging is serial latency + bandwidth, so delays only add)."""
+    makespans = []
+    for scale in (0.0, 1.0, 4.0):
+        out = run(_net_scenario(seed, lat_scale=scale), max_steps=2048)
+        cl = out.cloudlets
+        done = np.asarray(cl.state) == S.CL_DONE
+        makespans.append(float(np.asarray(cl.finish_time)[done].max()))
+    assert makespans[0] <= makespans[1] + 1e-3
+    assert makespans[1] <= makespans[2] + 1e-3
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_zero_latency_infinite_bw_is_bitwise_non_networked(seed):
+    """The degenerate topology (zero latency, INF bandwidth) reproduces
+    the non-networked program's times and states *bitwise*: transfers
+    drain in sub-ulp time, so the clock and every rate interval are
+    unchanged (event counts differ — staging transitions take extra
+    zero-advance steps — which is exactly what the static gate buys)."""
+    free = S.make_topology([0] * 4, bw_intra=float(S.INF),
+                           bw_inter=float(S.INF), bw_wan=float(S.INF),
+                           lat_intra=0.0, lat_inter=0.0, lat_wan=0.0)
+    netted = dataclasses.replace(_net_scenario(seed), net=free)
+    plain = dataclasses.replace(_net_scenario(seed), net=S.no_network(4))
+    a = run(netted, max_steps=4096)
+    b = run(plain, max_steps=4096)
+    for name in ("finish_time", "start_time", "remaining", "state"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.cloudlets, name)),
+            np.asarray(getattr(b.cloudlets, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(a.vms.host),
+                                  np.asarray(b.vms.host))
+    np.testing.assert_array_equal(np.asarray(a.time), np.asarray(b.time))
+    np.testing.assert_array_equal(np.asarray(a.hosts.energy_j),
+                                  np.asarray(b.hosts.energy_j))

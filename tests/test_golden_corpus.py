@@ -1,9 +1,9 @@
 """Golden-scenario corpus: digest, generator-drift, and replay checks.
 
 ``tests/data/golden_scenarios.json`` freezes every conformance scenario
-payload (26 static + 16 dynamic seeds; the 2x2 policy matrix expands at
-replay, so 42 payloads cover the 168 conformance scenarios).  Three
-contracts:
+payload (26 static + 16 dynamic + 8 networked seeds; the 2x2 policy
+matrix expands at replay, so 50 payloads cover the 200 conformance
+scenarios).  Three contracts:
 
   1. the file's sha256 digest matches its payload (integrity),
   2. the live generators in ``test_conformance.py`` still reproduce the
@@ -24,8 +24,9 @@ import os
 import numpy as np
 import pytest
 
-from test_conformance import (DYN_SEEDS, POLICY_GRID, SEEDS,
-                              make_dynamic_scenario, make_scenario)
+from test_conformance import (DYN_SEEDS, NET_SEEDS, POLICY_GRID, SEEDS,
+                              make_dynamic_scenario,
+                              make_networked_scenario, make_scenario)
 
 from repro.core import state as S
 from repro.core.engine import run_trace
@@ -61,6 +62,8 @@ def _assert_matches(dc, stored, ctx):
         ("vms", "submit_time"): v.submit_time, ("vms", "state"): v.state,
         ("cloudlets", "vm"): c.vm, ("cloudlets", "length"): c.length,
         ("cloudlets", "submit_time"): c.submit_time,
+        ("cloudlets", "file_size"): c.file_size,
+        ("cloudlets", "output_size"): c.output_size,
     }
     for (blk, name), arr in got.items():
         a = np.asarray(arr).reshape(-1)
@@ -73,6 +76,16 @@ def _assert_matches(dc, stored, ctx):
     assert int(np.asarray(dc.mig_policy)) == stored["mig_policy"], ctx
     np.testing.assert_allclose(float(np.asarray(dc.mig_threshold)),
                                stored["mig_threshold"], rtol=0, atol=0)
+    net, sn = dc.net, stored["net"]
+    assert int(np.asarray(net.enabled)) == sn["enabled"], ctx
+    np.testing.assert_array_equal(np.asarray(net.cluster),
+                                  np.asarray(sn["cluster"], np.int32),
+                                  err_msg=f"{ctx} net.cluster")
+    for k in ("bw_intra", "lat_intra", "bw_inter", "lat_inter",
+              "bw_wan", "lat_wan", "energy_per_mb"):
+        np.testing.assert_allclose(float(np.asarray(getattr(net, k))),
+                                   sn[k], rtol=0, atol=0,
+                                   err_msg=f"{ctx} net.{k}")
 
 
 def test_generators_reproduce_corpus(corpus):
@@ -89,6 +102,10 @@ def test_generators_reproduce_corpus(corpus):
         _assert_matches(make_dynamic_scenario(s, 0, 0),
                         corpus["scenarios"]["dynamic"][str(s)],
                         f"dynamic seed {s}")
+    for s in NET_SEEDS:
+        _assert_matches(make_networked_scenario(s, 0, 0),
+                        corpus["scenarios"]["networked"][str(s)],
+                        f"networked seed {s}")
 
 
 def rebuild(stored, vm_policy, task_policy) -> S.DatacenterState:
@@ -105,26 +122,37 @@ def rebuild(stored, vm_policy, task_policy) -> S.DatacenterState:
     import jax.numpy as jnp
     vms = dataclasses.replace(
         vms, state=jnp.asarray(v["state"], jnp.int32))
-    cl = S.make_cloudlets(c["vm"], c["length"], c["submit_time"])
+    cl = S.make_cloudlets(c["vm"], c["length"], c["submit_time"],
+                          file_size=np.asarray(c["file_size"], np.float32),
+                          output_size=np.asarray(c["output_size"],
+                                                 np.float32))
     events = np.asarray(stored["events"], np.float32).reshape(-1, 4)
+    sn = stored["net"]
+    net = S.make_topology(
+        sn["cluster"], bw_intra=sn["bw_intra"], lat_intra=sn["lat_intra"],
+        bw_inter=sn["bw_inter"], lat_inter=sn["lat_inter"],
+        bw_wan=sn["bw_wan"], lat_wan=sn["lat_wan"],
+        energy_per_mb=sn["energy_per_mb"]) if sn["enabled"] else \
+        S.no_network(nh)
     return S.make_datacenter(
         hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
         reserve_pes=bool(stored["reserve_pes"]), events=events,
         mig_policy=stored["mig_policy"],
         mig_threshold=stored["mig_threshold"],
-        mig_energy_per_mb=stored["mig_energy_per_mb"])
+        mig_energy_per_mb=stored["mig_energy_per_mb"], net=net)
 
 
 @pytest.mark.parametrize("kind,seed", [("static", 0), ("static", 9),
                                        ("static", 17), ("dynamic", 0),
-                                       ("dynamic", 3), ("dynamic", 7)])
+                                       ("dynamic", 3), ("dynamic", 7),
+                                       ("networked", 1), ("networked", 4)])
 def test_corpus_replays_engine_vs_oracle(corpus, kind, seed):
     """Frozen payloads replay engine == oracle across the policy matrix
     (the conformance pinning, sourced from disk instead of RNG)."""
     stored = corpus["scenarios"][kind][str(seed)]
     for vp, tp in POLICY_GRID:
         dc = rebuild(stored, vp, tp)
-        out, trace = run_trace(dc, num_steps=384)
+        out, trace = run_trace(dc, num_steps=512)
         res = simulate_dense(dc)
         ctx = (kind, seed, vp, tp)
         assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
@@ -138,3 +166,6 @@ def test_corpus_replays_engine_vs_oracle(corpus, kind, seed):
             np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
             rtol=0, atol=1e-3, err_msg=str(ctx))
         assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx
+        np.testing.assert_allclose(
+            float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
+            rtol=0, atol=1e-3, err_msg=str(ctx))

@@ -1,0 +1,330 @@
+"""Unit semantics of the network subsystem: staged transfers, fair-shared
+flows, topology-routed migration copies, and latency-aware federation
+routing (engine-side; the randomized engine-vs-oracle pinning lives in
+test_conformance.py)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import broker as B
+from repro.core import experiments as E
+from repro.core import federation as F
+from repro.core import migration as M
+from repro.core import network as N
+from repro.core import state as S
+from repro.core import sweep, telemetry as T
+from repro.core.engine import run, run_trace, wants_network
+
+
+def one_cl_dc(*, file_size=10.0, output_size=5.0, length=100.0, **net_kw):
+    """1 host / 1 VM / 1 cloudlet on a single-cluster topology."""
+    net = S.make_topology([0], **net_kw)
+    hosts = S.make_hosts([1], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0], length, file_size=file_size,
+                          output_size=output_size)
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=False, net=net)
+
+
+# ---------------------------------------------------------------------------
+# Staged lifecycle
+# ---------------------------------------------------------------------------
+def test_staged_timeline_exact():
+    """finish = lat + file/bw + length/mips + lat + output/bw, by hand."""
+    dc = one_cl_dc(bw_intra=10.0, bw_inter=10.0, bw_wan=10.0,
+                   lat_intra=0.1, lat_inter=0.2, lat_wan=0.2)
+    out, trace = run_trace(dc, num_steps=32)
+    # 0.5 lat + 1.0 in + 1.0 run + 0.5 lat + 0.5 out
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), 3.5,
+                               rtol=1e-6)
+    # start_time is the first CPU instant — after stage-in
+    np.testing.assert_allclose(np.asarray(out.cloudlets.start_time), 1.5,
+                               rtol=1e-6)
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    np.testing.assert_allclose(float(np.asarray(out.net_transferred_mb)),
+                               15.0, rtol=1e-6)
+    # telemetry: the transfer timeline ends at the total and flows peaked
+    t, mb, flows = T.transfer_timeline(trace)
+    assert mb[-1] == 15.0 and flows.max() == 1
+    summ = T.summarize_trace(trace)
+    assert summ["transferred_mb"] == 15.0 and summ["peak_flows"] == 1
+
+
+def test_fair_share_splits_bottleneck_link():
+    """Two concurrent stage-ins to one host halve the access-fabric rate."""
+    net = S.make_topology([0], bw_intra=10.0, bw_inter=1e6, bw_wan=1e6)
+    hosts = S.make_hosts([1], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 1, 1], [100.0] * 4,
+                          file_size=10.0, output_size=0.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, net=net,
+                           vm_policy=S.TIME_SHARED,
+                           task_policy=S.TIME_SHARED)
+    out = run(dc, max_steps=128)
+    # 4 flows share the 10 MB/s fabric: 10 MB each at 2.5 MB/s = 4 s in,
+    # then 4 tasks time-share 100 MIPS: 100 MI each -> 4 s run
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), 8.0,
+                               rtol=1e-5)
+
+
+def test_wan_is_shared_across_clusters_but_fabric_is_not():
+    """Flows to different clusters contend on the WAN tier only."""
+    net = S.make_topology([0, 1], bw_intra=1e6, bw_inter=1e6, bw_wan=10.0)
+    hosts = S.make_hosts([1, 1], [100.0] * 2, 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 1], [100.0] * 2, file_size=10.0,
+                          output_size=0.0)
+    # reserve_pes pins one VM per 1-PE host -> one flow per cluster
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=True, net=net)
+    out = run(dc, max_steps=64)
+    # the VMs sit on different hosts/clusters; the two flows still split
+    # the 10 MB/s gateway: 2 s stage-in each, 1 s run
+    np.testing.assert_array_equal(np.asarray(out.vms.host), [0, 1])
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), 3.0,
+                               rtol=1e-5)
+
+
+def test_zero_size_transfers_cost_no_events():
+    """file=output=0 with zero latency == the non-networked run exactly."""
+    base = one_cl_dc(file_size=0.0, output_size=0.0,
+                     bw_intra=10.0, bw_inter=10.0, bw_wan=10.0)
+    plain = dataclasses.replace(base, net=S.no_network(1))
+    out_n, tr_n = run_trace(base, num_steps=16)
+    out_p, tr_p = run_trace(plain, num_steps=16)
+    np.testing.assert_array_equal(np.asarray(out_n.cloudlets.finish_time),
+                                  np.asarray(out_p.cloudlets.finish_time))
+    assert (int(np.asarray(tr_n.active).sum())
+            == int(np.asarray(tr_p.active).sum()))
+
+
+def test_wants_network_detection():
+    assert wants_network(one_cl_dc())
+    assert not wants_network(
+        dataclasses.replace(one_cl_dc(), net=S.no_network(1)))
+
+
+def test_disabled_lane_inside_networked_program_is_bitwise():
+    """net.enabled == 0 under the networked *program* == the pre-network
+    program, bit for bit (the traced-gate half of the static gate)."""
+    plain = dataclasses.replace(one_cl_dc(), net=S.no_network(1))
+    a = run(plain, max_steps=32, networked=False)
+    b = run(plain, max_steps=32, networked=True)
+    for name in ("finish_time", "start_time", "remaining", "state"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.cloudlets, name)),
+            np.asarray(getattr(b.cloudlets, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(a.time), np.asarray(b.time))
+    np.testing.assert_array_equal(np.asarray(a.acct.bw_cost),
+                                  np.asarray(b.acct.bw_cost))
+    assert float(np.asarray(b.net_transferred_mb)) == 0.0
+
+
+def test_transfer_pauses_while_vm_unplaced():
+    """A host failure mid-stage pauses the flow; it resumes after the VM
+    re-provisions on the surviving host and all work completes."""
+    net = S.make_topology([0, 0], bw_intra=10.0, bw_inter=1e6, bw_wan=1e6)
+    hosts = S.make_hosts([1, 1], [100.0] * 2, 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0], 100.0, file_size=10.0, output_size=0.0)
+    ev = S.make_events([0.5], [S.EV_HOST_FAIL], [0])
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, net=net,
+                           events=ev)
+    out = run(dc, max_steps=128)
+    assert int(np.asarray(out.vms.host)[0]) == 1
+    assert np.all(np.asarray(out.cloudlets.state) == S.CL_DONE)
+    # re-placement is same-instant (submit already due): 1 s in + 1 s run
+    np.testing.assert_allclose(np.asarray(out.cloudlets.finish_time), 2.0,
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(np.asarray(out.net_transferred_mb)),
+                               10.0, rtol=1e-6)
+
+
+def test_staging_bills_bw_cost_and_charges_host_joules():
+    dc = one_cl_dc(bw_intra=10.0, bw_inter=10.0, bw_wan=10.0,
+                   energy_per_mb=0.01)
+    dc = dataclasses.replace(dc, rates=S.make_market(cost_per_bw=2.0))
+    out = run(dc, max_steps=32)
+    # 15 MB moved: $2/MB billed, 0.01 J/MB on the serving host
+    np.testing.assert_allclose(float(np.asarray(out.acct.bw_cost)), 30.0,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.hosts.energy_j), [0.15],
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Topology-routed migration copies
+# ---------------------------------------------------------------------------
+def mig_dc(cluster, **net_kw):
+    hosts = S.make_hosts([2, 2], [100.0, 100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0, 0, 1, 1], 100.0)
+    net = S.make_topology(cluster, **net_kw)
+    return S.make_datacenter(hosts, vms, cl, reserve_pes=False, net=net,
+                             mig_policy=S.MIG_THRESHOLD, mig_threshold=0.9)
+
+
+def test_migration_routes_same_cluster_over_intra_fabric():
+    out = run(mig_dc([0, 0], bw_intra=400.0, lat_intra=0.1,
+                     bw_inter=20.0, lat_inter=1.0, bw_wan=1e6),
+              max_steps=64)
+    assert int(np.asarray(out.mig_count)) == 1
+    # delay = lat_intra + ram/bw_intra = 0.1 + 128/400 = 0.42 s
+    np.testing.assert_allclose(float(np.asarray(out.mig_downtime)), 0.42,
+                               rtol=1e-5)
+
+
+def test_migration_routes_cross_cluster_over_uplinks():
+    out = run(mig_dc([0, 1], bw_intra=400.0, lat_intra=0.1,
+                     bw_inter=64.0, lat_inter=0.5, bw_wan=1e6),
+              max_steps=64)
+    assert int(np.asarray(out.mig_count)) == 1
+    # delay = lat_inter + ram/bw_inter = 0.5 + 128/64 = 2.5 s
+    np.testing.assert_allclose(float(np.asarray(out.mig_downtime)), 2.5,
+                               rtol=1e-5)
+
+
+def test_default_topology_reproduces_half_nic_delay_bitwise():
+    """Satellite regression: with the topology *disabled* the migration
+    copy delay is the old ``ram / (0.5 * min(bw))`` — bit for bit, even
+    when compiled under the networked program."""
+    def bare():
+        hosts = S.make_hosts([2, 2], [100.0, 100.0], 1024.0, 1000.0, 1e6)
+        vms = S.make_vms([1, 1], [100.0] * 2, 128.0, 10.0, 100.0)
+        cl = S.make_cloudlets([0, 0, 1, 1], 100.0)
+        return S.make_datacenter(hosts, vms, cl, reserve_pes=False,
+                                 mig_policy=S.MIG_THRESHOLD,
+                                 mig_threshold=0.9)
+    old = run(bare(), max_steps=64, networked=False)
+    new = run(bare(), max_steps=64, networked=True)
+    # the pinned PR-4 value: 128 / (0.5 * 1000) = 0.256 s
+    np.testing.assert_allclose(float(np.asarray(old.mig_downtime)), 0.256,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(old.mig_downtime),
+                                  np.asarray(new.mig_downtime))
+    np.testing.assert_array_equal(np.asarray(old.cloudlets.finish_time),
+                                  np.asarray(new.cloudlets.finish_time))
+    np.testing.assert_array_equal(
+        np.asarray(
+            M.select_migration(bare(), jnp.zeros((4,)),
+                               networked=True).delay),
+        np.asarray(
+            M.select_migration(bare(), jnp.zeros((4,))).delay))
+
+
+# ---------------------------------------------------------------------------
+# Latency-aware federation routing
+# ---------------------------------------------------------------------------
+def routing_fixture():
+    providers = [
+        E.Provider(S.make_uniform_hosts(8, pes=2),
+                   S.make_market(0.01, 1e-3, 1e-4, 2e-3)),
+        E.Provider(S.make_uniform_hosts(8, pes=2),
+                   S.make_market(0.05, 1e-3, 1e-4, 2e-3)),
+    ]
+    fleets = [E.UserFleet((B.VmSpec(count=2, pes=1, ram=256.0),),
+                          B.WaveSpec(waves=1, length_mi=60_000.0))
+              for _ in range(2)]
+    # users live in region 1: provider 1 is 10 ms away, provider 0 500 ms
+    lat = jnp.asarray([[0.0, 0.5], [0.5, 0.01]], jnp.float32)
+    origin = jnp.asarray([1, 1], jnp.int32)
+    return providers, fleets, lat, origin
+
+
+def test_latency_blind_routing_is_unchanged():
+    providers, fleets, lat, origin = routing_fixture()
+    demand = E.fleet_demand(fleets)
+    _, _, table = E.build_study(providers, fleets)
+    a = F.assign_users(table, demand)
+    b = F.assign_users(table, demand, latency=None, origin=origin,
+                       latency_weight=5.0)   # weight ignored without matrix
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.all(np.asarray(a) == 0)        # cheapest provider wins
+
+
+def test_latency_weighted_routing_prefers_near_provider():
+    providers, fleets, lat, origin = routing_fixture()
+    aware = E.build_study(providers, fleets, latency=lat, origin=origin,
+                          latency_weight=1.0)[1]
+    blind = E.build_study(providers, fleets, latency=lat, origin=origin,
+                          latency_weight=0.0)[1]
+    assert np.all(np.asarray(blind) == 0)    # $0.01 beats $0.05 at w=0
+    assert np.all(np.asarray(aware) == 1)    # 0.05+0.01 beats 0.01+0.5
+    # end to end: run_study threads the knobs and reports transfers
+    net = S.make_topology([0] * 8, bw_wan=25.0, lat_wan=0.05)
+    providers = [dataclasses.replace(p, net=net) for p in providers]
+    vm_p, task_p = sweep.policy_grid()
+    study = E.run_study(providers, fleets, vm_p, task_p, max_steps=2048,
+                        reserve_pes=False, latency=lat, origin=origin,
+                        latency_weight=1.0)
+    np.testing.assert_array_equal(np.asarray(study.assignment),
+                                  np.asarray(aware))
+    assert np.asarray(study.fed_transferred_mb).shape == (4,)
+    assert np.all(np.asarray(study.fed_transferred_mb) > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration
+# ---------------------------------------------------------------------------
+def test_mixed_networked_lanes_batch_bitwise():
+    """Networked + plain lanes stacked: per-lane results == single runs,
+    and the networked program leaves disabled lanes untouched."""
+    from test_conformance import POLICY_GRID, make_networked_scenario, \
+        make_scenario
+    dcs = ([make_networked_scenario(s, *POLICY_GRID[s % 4])
+            for s in (0, 1, 3)]
+           + [make_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 5)])
+    batch = sweep.stack_scenarios(dcs)
+    out = sweep.run_batch(batch, max_steps=1024)
+    for i, dc in enumerate(dcs):
+        single = run(dc, max_steps=1024, dynamic=True, networked=True)
+        nc = np.asarray(single.cloudlets.finish_time).shape[0]
+        nh = np.asarray(single.hosts.energy_j).shape[0]
+        for name in ("finish_time", "state", "net_phase", "net_remaining"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.cloudlets, name)),
+                np.asarray(getattr(out.cloudlets, name))[i][:nc],
+                err_msg=f"lane {i} field {name}")
+        np.testing.assert_array_equal(
+            np.asarray(single.hosts.energy_j),
+            np.asarray(out.hosts.energy_j)[i][:nh])
+        np.testing.assert_array_equal(
+            np.asarray(single.net_transferred_mb),
+            np.asarray(out.net_transferred_mb)[i])
+    assert np.all(np.asarray(out.net_transferred_mb)[3:] == 0.0)
+    summ = sweep.summarize_batch(out)
+    np.testing.assert_array_equal(np.asarray(summ.transferred_mb),
+                                  np.asarray(out.net_transferred_mb))
+
+
+def test_networked_grid_fused_equals_nested_bitwise():
+    """Networked lanes through the fused grid == nested grid == single
+    runs — transferred MB included, bit for bit."""
+    from test_conformance import POLICY_GRID, make_networked_scenario
+    dcs = [make_networked_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 2)]
+    batch = sweep.stack_scenarios(dcs)
+    vm_p, task_p = sweep.policy_grid()
+    fused = sweep.run_grid(batch, vm_p, task_p, max_steps=1024,
+                           sharded=False)
+    nested = sweep.run_grid_nested(batch, vm_p, task_p, max_steps=1024)
+    for name in ("finish_time", "start_time", "state", "net_phase"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.cloudlets, name)),
+            np.asarray(getattr(nested.cloudlets, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(fused.net_transferred_mb),
+                                  np.asarray(nested.net_transferred_mb))
+    np.testing.assert_array_equal(np.asarray(fused.hosts.energy_j),
+                                  np.asarray(nested.hosts.energy_j))
+    vm_np, task_np = np.asarray(vm_p), np.asarray(task_p)
+    for p, b in ((0, 0), (3, 1)):
+        cell = dataclasses.replace(dcs[b], vm_policy=jnp.int32(vm_np[p]),
+                                   task_policy=jnp.int32(task_np[p]))
+        single = run(cell, max_steps=1024)
+        np.testing.assert_array_equal(
+            np.asarray(single.net_transferred_mb),
+            np.asarray(fused.net_transferred_mb)[p, b])
+        nc = np.asarray(single.cloudlets.finish_time).shape[0]
+        np.testing.assert_array_equal(
+            np.asarray(single.cloudlets.finish_time),
+            np.asarray(fused.cloudlets.finish_time)[p, b][:nc])

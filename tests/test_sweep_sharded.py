@@ -190,6 +190,76 @@ def test_sharded_two_devices_matches_single_device_bitwise():
     assert "SHARDED_BITWISE_OK" in proc.stdout
 
 
+# Networked lanes (two-tier topologies + staged transfers) shard the
+# same way.  Its own subprocess for the same reason as the dynamic
+# check: the networked engine program is a separate set of XLA
+# compilations.
+_TWO_DEVICE_NETWORKED_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() >= 2, jax.devices()
+    from test_conformance import make_networked_scenario, POLICY_GRID
+    from repro.core import sweep
+
+    vm_p, task_p = sweep.policy_grid()
+    net = [make_networked_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 2)]
+    nbatch = sweep.stack_scenarios(net)
+    nsingle = sweep.run_grid(nbatch, vm_p, task_p, max_steps=768,
+                             sharded=False)
+    for part in ("gspmd", "shard_map"):
+        nshard = sweep.run_grid(nbatch, vm_p, task_p, max_steps=768,
+                                partitioner=part)
+        for name in ("finish_time", "state", "net_phase", "net_remaining"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(nshard.cloudlets, name)),
+                np.asarray(getattr(nsingle.cloudlets, name)),
+                err_msg=f"networked {part} {name}")
+        np.testing.assert_array_equal(np.asarray(nshard.vms.host),
+                                      np.asarray(nsingle.vms.host),
+                                      err_msg=f"networked {part} vm.host")
+        np.testing.assert_array_equal(
+            np.asarray(nshard.hosts.energy_j),
+            np.asarray(nsingle.hosts.energy_j),
+            err_msg=f"networked {part} energy_j")
+        np.testing.assert_array_equal(
+            np.asarray(nshard.net_transferred_mb),
+            np.asarray(nsingle.net_transferred_mb),
+            err_msg=f"networked {part} transferred_mb")
+    assert float(np.asarray(nsingle.net_transferred_mb).sum()) > 0.0
+    print("SHARDED_NETWORKED_OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_sharded_two_devices_networked_lanes_bitwise():
+    """Networked grids over a (forced) 2-device host == single-device,
+    bit-for-bit, under both partitioners — staged-transfer state and
+    transferred-MB accounting included.  The flow-count segment sums
+    route by *static* topology indices, so no loop-variant sort ever
+    reaches the CPU partitioner (ROADMAP landmine #2); a regression
+    deadlocks into this subprocess timeout exactly like the dynamic
+    check."""
+    if jax.device_count() >= 2:
+        exec(compile(_TWO_DEVICE_NETWORKED_CHECK, "<two-device-networked>",
+                     "exec"), {})
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip(),
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)).strip(
+                os.pathsep),
+    )
+    proc = subprocess.run([sys.executable, "-c",
+                           _TWO_DEVICE_NETWORKED_CHECK],
+                          capture_output=True, text=True, timeout=560,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED_NETWORKED_OK" in proc.stdout
+
+
 @pytest.mark.slow
 @pytest.mark.subprocess
 def test_sharded_two_devices_dynamic_lanes_bitwise():

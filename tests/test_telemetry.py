@@ -83,6 +83,25 @@ def test_summarize_trace_fields():
     assert s["peak_hosts_down"] == 0
 
 
+def test_transfer_and_link_utilization_timelines():
+    """A saturated single-flow staging keeps the WAN gateway at 1.0."""
+    net = S.make_topology([0], bw_intra=1e6, bw_inter=1e6, bw_wan=10.0)
+    hosts = S.make_hosts([1], [100.0], 1024.0, 1000.0, 1e6)
+    vms = S.make_vms([1], [100.0], 128.0, 10.0, 100.0)
+    cl = S.make_cloudlets([0], 100.0, file_size=20.0, output_size=10.0)
+    dc = S.make_datacenter(hosts, vms, cl, reserve_pes=False, net=net)
+    _, trace = run_trace(dc, num_steps=32)
+    t, mb, flows = T.transfer_timeline(trace)
+    assert np.all(np.diff(mb) >= 0.0)           # cumulative
+    np.testing.assert_allclose(mb[-1], 30.0, rtol=1e-6)
+    assert flows.max() == 1
+    # stage-in interval: 20 MB over [0, 2] s -> gateway utilization 1.0
+    t2, util = T.link_utilization_timeline(trace, wan_bw_mbps=10.0)
+    np.testing.assert_allclose(util[np.isclose(t2, 2.0)], 1.0, rtol=1e-5)
+    s = T.summarize_trace(trace)
+    assert s["transferred_mb"] == 30.0 and s["peak_flows"] == 1
+
+
 def test_summarize_trace_empty():
     """A scenario that never runs anything yields the zero summary."""
     hosts = S.make_hosts([1], [100.0], 1024.0, 1000.0, 1e6)
@@ -94,7 +113,8 @@ def test_summarize_trace_empty():
     assert s == {"events": 0, "makespan": 0.0, "mean_util": 0.0,
                  "peak_util": 0.0, "energy_total_j": 0.0,
                  "mean_watts": 0.0, "peak_watts": 0.0,
-                 "migrations": 0, "peak_hosts_down": 0}
+                 "migrations": 0, "peak_hosts_down": 0,
+                 "transferred_mb": 0.0, "peak_flows": 0}
     assert T.trace_energy_j(trace) == 0.0
 
 

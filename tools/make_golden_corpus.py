@@ -2,11 +2,12 @@
 """Regenerate the golden conformance-scenario corpus.
 
 Serializes every scenario the conformance suite generates — the 26
-static seeds and 16 dynamic seeds of ``tests/test_conformance.py`` — to
-``tests/data/golden_scenarios.json`` together with a sha256 digest of
-the canonical payload.  Policies are *not* baked in: each stored seed
-expands to the full 2x2 policy matrix at replay time, exactly like the
-generators, so the file freezes 42 payloads for 168 scenarios.
+static, 16 dynamic, and 8 networked seeds of
+``tests/test_conformance.py`` — to ``tests/data/golden_scenarios.json``
+together with a sha256 digest of the canonical payload.  Policies are
+*not* baked in: each stored seed expands to the full 2x2 policy matrix
+at replay time, exactly like the generators, so the file freezes 50
+payloads for 200 scenarios.
 
 The committed corpus makes the conformance scenarios reproducible even
 if a future NumPy changes ``default_rng`` streams:
@@ -58,12 +59,25 @@ def serialize(dc) -> dict:
         "cloudlets": {
             "vm": _arr(c.vm), "length": _arr(c.length),
             "submit_time": _arr(c.submit_time),
+            "file_size": _arr(c.file_size),
+            "output_size": _arr(c.output_size),
         },
         "events": _arr(dc.events),
         "reserve_pes": int(np.asarray(dc.reserve_pes)),
         "mig_policy": int(np.asarray(dc.mig_policy)),
         "mig_threshold": float(np.asarray(dc.mig_threshold)),
         "mig_energy_per_mb": float(np.asarray(dc.mig_energy_per_mb)),
+        "net": {
+            "enabled": int(np.asarray(dc.net.enabled)),
+            "cluster": _arr(dc.net.cluster),
+            "bw_intra": float(np.asarray(dc.net.bw_intra)),
+            "lat_intra": float(np.asarray(dc.net.lat_intra)),
+            "bw_inter": float(np.asarray(dc.net.bw_inter)),
+            "lat_inter": float(np.asarray(dc.net.lat_inter)),
+            "bw_wan": float(np.asarray(dc.net.bw_wan)),
+            "lat_wan": float(np.asarray(dc.net.lat_wan)),
+            "energy_per_mb": float(np.asarray(dc.net.energy_per_mb)),
+        },
     }
 
 
@@ -76,21 +90,25 @@ def digest(payload: dict) -> str:
 
 
 def main() -> int:
-    from test_conformance import (DYN_SEEDS, SEEDS, make_dynamic_scenario,
-                                  make_scenario)
+    from test_conformance import (DYN_SEEDS, NET_SEEDS, SEEDS,
+                                  make_dynamic_scenario,
+                                  make_networked_scenario, make_scenario)
 
     payload = {
         "static": {str(s): serialize(make_scenario(s, 0, 0))
                    for s in SEEDS},
         "dynamic": {str(s): serialize(make_dynamic_scenario(s, 0, 0))
                     for s in DYN_SEEDS},
+        "networked": {str(s): serialize(make_networked_scenario(s, 0, 0))
+                      for s in NET_SEEDS},
     }
-    out = {"format": 1, "digest": digest(payload), "scenarios": payload}
+    out = {"format": 2, "digest": digest(payload), "scenarios": payload}
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
         f.write("\n")
-    n = len(payload["static"]) + len(payload["dynamic"])
+    n = (len(payload["static"]) + len(payload["dynamic"])
+         + len(payload["networked"]))
     print(f"wrote {OUT}: {n} scenario payloads, digest {out['digest'][:16]}…")
     return 0
 
