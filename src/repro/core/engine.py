@@ -59,6 +59,8 @@ from repro.core.state import (
     EV_VM_DESTROY,
     DatacenterState,
     INF,
+    MIG_OFF,
+    MIG_THRESHOLD,
     NET_STAGE_OUT,
     VM_ACTIVE,
     VM_DESTROYED,
@@ -66,10 +68,16 @@ from repro.core.state import (
     VM_PENDING,
 )
 
-__all__ = ["step", "run", "run_trace", "StepRecord", "apply_due_events",
-           "wants_dynamic", "wants_network"]
+__all__ = ["step", "run", "run_trace", "batched_run", "StepRecord",
+           "apply_due_events", "wants_dynamic", "wants_network"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
+
+# Event-horizon leaping (``step(..., leap=True)``) is the default for the
+# while_loop runners; ``run_trace`` keeps it off so the scan trace stays
+# one record per event.  Tests force both settings and assert bitwise
+# equality (tests/test_leap_parity.py).
+_LEAP_DEFAULT = True
 
 
 class StepRecord(NamedTuple):
@@ -85,6 +93,8 @@ class StepRecord(NamedTuple):
     hosts_down: jnp.ndarray    # i32[] real hosts currently failed
     transferred_mb: jnp.ndarray  # f32[] cumulative staged MB *after* the step
     n_flows: jnp.ndarray       # i32[] transfers drawing bandwidth during step
+    n_events: jnp.ndarray      # i32[] events committed by this step (>= 1;
+    #                                  > 1 when the horizon leap fired)
 
 
 def _hit(n: int, idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -242,8 +252,182 @@ def _dynamic_deltas(dc: DatacenterState, trig_next: jnp.ndarray):
     return jnp.minimum(dt_mig, dt_trig), arr_ev
 
 
+def _occupancy(dc: DatacenterState) -> jnp.ndarray:
+    """i32[H] — placed ACTIVE VMs per host (loop-invariant inside a leap
+    window: no provisioning, migration, or destroy can occur there)."""
+    nh = dc.hosts.num_pes.shape[0]
+    placed = (dc.vms.state == VM_ACTIVE) & (dc.vms.host >= 0)
+    return jnp.zeros((nh,), jnp.int32).at[
+        jnp.clip(dc.vms.host, 0, nh - 1)].add(placed.astype(jnp.int32))
+
+
+def _drain_safe(pre: DatacenterState, post: DatacenterState,
+                occ: jnp.ndarray, *, networked: bool) -> jnp.ndarray:
+    """bool[] — the commit ``pre -> post`` cannot change any surviving rate.
+
+    Completions reshuffle the two-level shares in exactly two ways:
+
+      * VM-level reshare — a VM running more task units than virtual PEs
+        re-splits its capacity when one finishes (TIME divides by
+        ``max(n, pes)``; SPACE promotes a queued unit into the freed PE).
+        Safe only when ``n_runnable <= req_pes`` (the divisor is pinned to
+        ``pes`` and every unit already holds a PE, so survivors keep their
+        exact f32 rate).
+      * eligibility flip — without ``reserve_pes`` a VM that drains its
+        last runnable unit stops competing for host capacity
+        (``vm_has_work``), changing its host's level-1 split.  Safe when
+        the VM keeps work, PEs are reserved (eligibility is then
+        placement-only), or the VM is alone on its host (the level-1
+        segments of other hosts are untouched and its own rates are
+        already zero).
+
+    Conservative: False forgoes a leap, never corrupts one.
+    """
+    nv = pre.vms.req_pes.shape[0]
+    nh = pre.hosts.num_pes.shape[0]
+    owner = jnp.clip(pre.cloudlets.vm, 0, nv - 1)
+    run_pre = scheduling.cloudlet_runnable(pre, networked=networked)
+    run_post = scheduling.cloudlet_runnable(post, networked=networked)
+    n_pre = jax.ops.segment_sum(run_pre.astype(jnp.int32), owner,
+                                num_segments=nv)
+    n_post = jax.ops.segment_sum(run_post.astype(jnp.int32), owner,
+                                 num_segments=nv)
+    pes = jnp.maximum(pre.vms.req_pes, 1)
+    placed = (pre.vms.state == VM_ACTIVE) & (pre.vms.host >= 0)
+    alone = placed & (occ[jnp.clip(pre.vms.host, 0, nh - 1)] == 1)
+    keeps_work = (n_post >= 1) | (pre.reserve_pes == 1) | alone
+    safe = (n_post == n_pre) | ((n_pre <= pes) & keeps_work)
+    return jnp.all(safe)
+
+
+def _leap_window(pre: DatacenterState, new: DatacenterState,
+                 rates: jnp.ndarray, active, dt_arr, dt_other, arrive,
+                 trig_next, mig_done, budget, horizon, *,
+                 dynamic: bool, networked: bool
+                 ) -> tuple[DatacenterState, jnp.ndarray]:
+    """Commit further queued events cheaply while no decision can intervene.
+
+    ``pre`` is the post-passes state whose ``rates`` the main commit used;
+    ``new`` is the state after that commit.  While the window gate holds,
+    rates are *loop-invariant modulo masking*: the next event is a pure
+    completion/copy countdown and its commit arithmetic — the exact f32
+    ops of ``step``'s commit, on frozen rates — lands bit-for-bit where a
+    full ``step`` would.  Decision points close the window:
+
+      * an arrival (cloudlet/VM submit, event-table time) at or before the
+        candidate clock — provisioning/events must run,
+      * a completion failing ``_drain_safe`` — rates would reshuffle,
+      * a migration trigger becoming possible — lanes leap only with the
+        policy OFF, or THRESHOLD with no host over-threshold (utilization
+        under frozen, shrinking rates is non-increasing, so no host can
+        *become* overloaded mid-window; DRAIN triggers on *under*-loaded
+        hosts, which completions can create, so DRAIN lanes never leap),
+      * a migration copy finishing — the VM resumes and rates grow (the
+        copy completion itself commits, then the window closes),
+      * an enabled network topology (transfer wakes are decision points).
+
+    No sort runs in here — deltas are elementwise mins and segment sums,
+    so every lexsort key stays loop-invariant (ROADMAP landmine #2).
+    Returns ``(state, extra_events_committed)``.
+    """
+    r0 = rates
+    occ = _occupancy(new)
+    gate = active & (dt_arr > dt_other) & (arrive > new.time)
+    gate &= _drain_safe(pre, new, occ, networked=networked)
+    if dynamic:
+        gate &= ~trig_next & ~jnp.any(mig_done)
+        cl1 = new.cloudlets
+        r1 = jnp.where((cl1.state == CL_CREATED) & (cl1.remaining > 0.0),
+                       r0, 0.0)
+        util = energy.host_utilization(new, r1)
+        loaded = new.hosts.valid & (occ > 0)
+        gate &= ((new.mig_policy == MIG_OFF)
+                 | ((new.mig_policy == MIG_THRESHOLD)
+                    & ~jnp.any(loaded & (util > new.mig_threshold))))
+    if networked:
+        gate &= new.net.enabled == 0
+    budget = (jnp.int32(2 ** 30) if budget is None
+              else jnp.asarray(budget, jnp.int32))
+    horizon = (jnp.float32(INF) if horizon is None
+               else jnp.minimum(jnp.asarray(horizon, jnp.float32), INF))
+
+    def cond(carry):
+        state, k, going = carry
+        return going & (k < budget) & (state.time < horizon)
+
+    def body(carry):
+        state, k, going = carry
+        cl = state.cloudlets
+        # frozen rates, re-masked: survivors keep their exact f32 rate
+        # (guaranteed by _drain_safe), finished/zeroed ones drop out
+        r = jnp.where((cl.state == CL_CREATED) & (cl.remaining > 0.0),
+                      r0, 0.0)
+        dt_fin, finish_dt, arr = _next_event_deltas(state, r)
+        dt_o = dt_fin
+        if dynamic:
+            dt_dyn, arr_ev = _dynamic_deltas(state, jnp.bool_(False))
+            dt_o = jnp.minimum(dt_o, dt_dyn)
+            arr = jnp.minimum(arr, arr_ev)
+        d_arr = jnp.where(arr < INF, arr - state.time, INF)
+        dt = jnp.minimum(dt_o, d_arr)
+        act = dt < INF
+        dt = jnp.where(act, dt, 0.0)
+        t_next = state.time + dt
+        # ---- the exact commit arithmetic of step() ------------------------
+        snap = dt * (1.0 + 1e-5) + 1e-9
+        fin = (cl.state == CL_CREATED) & (r > 0.0) & (finish_dt <= snap)
+        executed = r * dt
+        remaining = jnp.where(fin, 0.0,
+                              jnp.maximum(cl.remaining - executed, 0.0))
+        nv = state.vms.req_pes.shape[0]
+        nh = state.hosts.num_pes.shape[0]
+        mips_pe = state.hosts.mips_per_pe[jnp.clip(
+            state.vms.host[jnp.clip(cl.vm, 0, nv - 1)], 0, nh - 1)]
+        pe_seconds = jnp.sum(executed / jnp.maximum(mips_pe, 1e-30))
+        moved_mb = jnp.sum(jnp.where(fin, cl.file_size + cl.output_size,
+                                     0.0))
+        host_watts = energy.step_power(state, r)
+        vms = state.vms
+        stop = jnp.bool_(False)
+        if dynamic:
+            mig = vms.mig_remaining
+            m_done = (mig > 0.0) & (mig <= snap)
+            vms = dataclasses.replace(
+                vms, mig_remaining=jnp.where(
+                    m_done, 0.0,
+                    jnp.where(mig > 0.0, jnp.maximum(mig - dt, 0.0), mig)))
+            stop = jnp.any(m_done)      # VM resumes -> rates grow -> close
+        cand = dataclasses.replace(
+            state,
+            hosts=dataclasses.replace(
+                state.hosts,
+                energy_j=state.hosts.energy_j + host_watts * dt),
+            vms=vms,
+            cloudlets=dataclasses.replace(
+                cl, remaining=remaining,
+                finish_time=jnp.where(fin, t_next, cl.finish_time),
+                state=jnp.where(fin, CL_DONE, cl.state)),
+            acct=dataclasses.replace(
+                state.acct,
+                cpu_cost=(state.acct.cpu_cost
+                          + state.rates.cost_per_cpu_sec * pe_seconds),
+                bw_cost=(state.acct.bw_cost
+                         + state.rates.cost_per_bw * moved_mb)),
+            time=t_next,
+        )
+        do = (going & act & (d_arr > dt_o) & (arr > t_next)
+              & _drain_safe(state, cand, occ, networked=networked))
+        nxt = jax.tree.map(lambda a, b: jnp.where(do, a, b), cand, state)
+        return nxt, k + do.astype(jnp.int32), do & ~stop
+
+    out, extra, _ = jax.lax.while_loop(cond, body,
+                                       (new, jnp.int32(0), gate))
+    return out, extra
+
+
 def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
-         dynamic: bool = True, networked: bool = False
+         dynamic: bool = True, networked: bool = False, leap: bool = False,
+         leap_budget=None, leap_horizon=None
          ) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
@@ -276,20 +460,61 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     the public runners auto-detect via ``wants_dynamic`` /
     ``wants_network``.
     """
-    if dynamic:
-        dc = apply_due_events(dc)
-    dc = provision_pending(dc, provision_policy)
+    # Every pass below is a bit-exact identity when its trigger predicate
+    # is False (verified pass by pass; the quiescence fixed point depends
+    # on it), so each can sit behind a runtime lax.cond: quiesced lanes and
+    # steps with nothing due skip the pass body instead of paying for the
+    # full gather/scatter/scan machinery.  Under vmap the conds lower to
+    # selects — both branches run — so batched callers lose nothing; the
+    # unbatched while_loop runners (and lax.map inner loops) get real
+    # branches.
+    if dynamic and dc.events.shape[0]:
+        ev_k = dc.events[:, 1].astype(jnp.int32)
+        due_any = jnp.any((~dc.event_fired) & (ev_k != EV_NONE)
+                          & (dc.events[:, 0] <= dc.time))
+        dc = jax.lax.cond(due_any, apply_due_events, lambda d: d, dc)
+    pending_due = jnp.any((dc.vms.state == VM_PENDING)
+                          & (dc.vms.submit_time <= dc.time))
+    dc = jax.lax.cond(pending_due,
+                      lambda d: provision_pending(d, provision_policy),
+                      lambda d: d, dc)
     if networked:
-        dc = network.advance_phases(dc)
+        dc = jax.lax.cond(dc.net.enabled == 1, network.advance_phases,
+                          lambda d: d, dc)
     rates = scheduling.cloudlet_rates(dc, networked=networked)
     if dynamic:
-        dc, _ = migration.apply_migration(dc, rates, networked=networked)
-        rates = scheduling.cloudlet_rates(dc, networked=networked)
-        trig_next = migration.select_migration(
-            dc, rates, networked=networked).trigger
+        mig0 = migration.select_migration(dc, rates, networked=networked)
+
+        def _mig_apply(op):
+            d, r = op
+            d2 = migration.apply_selected(d, mig0)
+            r2 = scheduling.cloudlet_rates(d2, networked=networked)
+            t2 = migration.select_migration(
+                d2, r2, networked=networked).trigger
+            return d2, r2, t2
+
+        def _mig_skip(op):
+            # no-trigger apply is an identity and re-derives identical
+            # rates/trigger, so the skip branch is bitwise equivalent
+            d, r = op
+            return d, r, jnp.bool_(False)
+
+        dc, rates, trig_next = jax.lax.cond(mig0.trigger, _mig_apply,
+                                            _mig_skip, (dc, rates))
     if networked:
-        frates = network.flow_rates(dc)
-        dt_net, flow_dt = network.wake_deltas(dc, frates)
+        def _net_on(d):
+            fr = network.flow_rates(d)
+            dtn, fdt = network.wake_deltas(d, fr)
+            return fr, dtn, fdt
+
+        def _net_off(d):
+            # flow_rates/wake_deltas of a disabled topology, verbatim
+            nc = d.cloudlets.remaining.shape[0]
+            return (jnp.zeros((nc,), jnp.float32), jnp.float32(INF),
+                    jnp.full((nc,), INF, jnp.float32))
+
+        frates, dt_net, flow_dt = jax.lax.cond(dc.net.enabled == 1,
+                                               _net_on, _net_off, dc)
 
     dt_other, finish_dt, arrive = _next_event_deltas(dc, rates)
     if dynamic:
@@ -408,12 +633,22 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         net_transferred_mb=transferred_mb,
     )
 
+    n_events = active.astype(jnp.int32)
+    if leap:
+        new, extra = _leap_window(
+            dc, new, rates, active, dt_arr, dt_other, arrive,
+            trig_next if dynamic else None,
+            mig_done if dynamic else None,
+            leap_budget, leap_horizon,
+            dynamic=dynamic, networked=networked)
+        n_events = n_events + extra
+
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
                                   dc.hosts.capacity_mips, 0.0))
     rec = StepRecord(
         time=new.time,
         n_running=jnp.sum((rates > 0.0).astype(jnp.int32)),
-        n_done=jnp.sum((state == CL_DONE).astype(jnp.int32)),
+        n_done=jnp.sum((new.cloudlets.state == CL_DONE).astype(jnp.int32)),
         utilization=jnp.sum(rates) / jnp.maximum(host_mips, 1e-30),
         watts=jnp.sum(host_watts),
         active=active,
@@ -425,6 +660,7 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         transferred_mb=new.net_transferred_mb,
         n_flows=(jnp.sum((frates > 0.0).astype(jnp.int32)) if networked
                  else jnp.int32(0)),
+        n_events=n_events,
     )
     return new, rec
 
@@ -445,10 +681,10 @@ def wants_dynamic(dc: DatacenterState) -> bool:
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked"))
+                                   "dynamic", "networked", "leap"))
 def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
          provision_policy: int, dynamic: bool,
-         networked: bool) -> DatacenterState:
+         networked: bool, leap: bool) -> DatacenterState:
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
     def cond(carry):
@@ -458,8 +694,10 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
     def body(carry):
         dc, n, _ = carry
         new, rec = step(dc, provision_policy=provision_policy,
-                        dynamic=dynamic, networked=networked)
-        return new, n + 1, rec.active
+                        dynamic=dynamic, networked=networked, leap=leap,
+                        leap_budget=jnp.int32(max_steps) - n - 1,
+                        leap_horizon=horizon)
+        return new, n + rec.n_events, rec.active
 
     out, _, _ = jax.lax.while_loop(cond, body, (dc, jnp.int32(0),
                                                 jnp.bool_(True)))
@@ -469,7 +707,8 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
 def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         horizon: float = float("inf"), provision_policy: int = FIRST_FIT,
         dynamic: bool | None = None,
-        networked: bool | None = None) -> DatacenterState:
+        networked: bool | None = None,
+        leap: bool | None = None) -> DatacenterState:
     """Run the simulation to quiescence with ``lax.while_loop``.
 
     Terminates when the event queue is empty (no runnable work, no future
@@ -480,14 +719,22 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
     the quiescence clock in seconds).  ``dynamic=None`` / ``networked=
     None`` auto-detect via ``wants_dynamic`` / ``wants_network``; pass
     explicit bools when calling under a trace.
+
+    ``leap`` (default on) enables event-horizon batching: when no
+    provisioning/migration/network decision can intervene, one loop
+    iteration commits a run of queued completions (``_leap_window``) —
+    bit-for-bit identical results, fewer iterations.  ``leap=False``
+    forces the one-event-per-iteration program (parity tests).
     """
     if dynamic is None:
         dynamic = wants_dynamic(dc)
     if networked is None:
         networked = wants_network(dc)
+    if leap is None:
+        leap = _LEAP_DEFAULT
     return _run(dc, max_steps=max_steps, horizon=horizon,
                 provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked)
+                networked=networked, leap=leap)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "provision_policy",
@@ -522,3 +769,98 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
     return _run_trace(dc, num_steps=num_steps,
                       provision_policy=provision_policy, dynamic=dynamic,
                       networked=networked)
+
+
+def _lane_dynamic(batch: DatacenterState) -> jnp.ndarray:
+    """bool[L] — lanes that can still exhibit dynamic behaviour: a live
+    migration policy, an in-flight copy, or unfired event rows.  Purely
+    monotone (never flips back on), so once the reduction over live lanes
+    goes False the dynamic pass stays off for the rest of the run."""
+    lane = jnp.asarray(batch.mig_policy) != MIG_OFF
+    lane |= jnp.any(batch.vms.mig_remaining > 0.0, axis=-1)
+    if batch.events.shape[-2]:
+        kinds = batch.events[..., 1].astype(jnp.int32)
+        lane |= jnp.any((~batch.event_fired) & (kinds != EV_NONE), axis=-1)
+    return lane
+
+
+@partial(jax.jit, static_argnames=("max_steps", "provision_policy",
+                                   "dynamic", "networked", "leap"))
+def batched_run(batch: DatacenterState, *, max_steps: int,
+                horizon: float = float("inf"),
+                provision_policy: int = FIRST_FIT, dynamic: bool = True,
+                networked: bool = False,
+                leap: bool = _LEAP_DEFAULT) -> DatacenterState:
+    """Run a batched state (leading lane axis) to quiescence.
+
+    Equivalent to ``vmap(run)`` lane for lane — finished lanes are frozen
+    by a per-lane select exactly like vmap's batched while_loop — but the
+    loop is engine-level, which buys the *dead-lane early-exit*: each
+    iteration reduces ``any(live & lane_dynamic)`` / ``any(live &
+    net.enabled)`` over the batch and dispatches (``lax.cond``, real
+    branches — the predicates are scalars here) the cheapest step variant
+    that is still exact for every live lane.  A fused policy grid where
+    only some lanes migrate, or where the dynamic lanes quiesce early,
+    stops paying the dynamic/networked tax the moment the last such lane
+    drains.  The static variant is bitwise-identical to the dynamic one
+    for lanes ``_lane_dynamic`` rejects (no due events, no trigger, no
+    copy countdown — each gated pass skips), so switching variants
+    mid-run never perturbs results.
+    """
+    hor = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
+    lanes = batch.time.shape[0]
+
+    def _vstep(dyn: bool, net: bool):
+        def one(d, bud):
+            return step(d, provision_policy=provision_policy, dynamic=dyn,
+                        networked=net, leap=leap, leap_budget=bud,
+                        leap_horizon=hor)
+        return lambda op: jax.vmap(one)(op[0], op[1])
+
+    variants = [(dyn, net)
+                for dyn in ([True, False] if dynamic else [False])
+                for net in ([True, False] if networked else [False])]
+
+    def body(carry):
+        b, n, alive = carry
+        live = alive & (n < max_steps) & (b.time < hor)
+        bud = jnp.int32(max_steps) - n - 1
+        op = (b, bud)
+        if len(variants) == 1:
+            new, rec = _vstep(*variants[0])(op)
+        else:
+            need_d = (jnp.any(live & _lane_dynamic(b)) if dynamic
+                      else jnp.bool_(False))
+            need_n = (jnp.any(live & (b.net.enabled == 1)) if networked
+                      else jnp.bool_(False))
+            if dynamic and networked:
+                new, rec = jax.lax.cond(
+                    need_d,
+                    lambda o: jax.lax.cond(need_n, _vstep(True, True),
+                                           _vstep(True, False), o),
+                    lambda o: jax.lax.cond(need_n, _vstep(False, True),
+                                           _vstep(False, False), o),
+                    op)
+            elif dynamic:
+                new, rec = jax.lax.cond(need_d, _vstep(True, False),
+                                        _vstep(False, False), op)
+            else:
+                new, rec = jax.lax.cond(need_n, _vstep(False, True),
+                                        _vstep(False, False), op)
+        # freeze finished lanes — the batching rule vmap applies to
+        # while_loop, replicated here leaf by leaf
+        sel = lambda a, o: jnp.where(
+            live.reshape(live.shape + (1,) * (a.ndim - 1)), a, o)
+        b2 = jax.tree.map(sel, new, b)
+        n2 = jnp.where(live, n + rec.n_events, n)
+        alive2 = jnp.where(live, rec.active, alive)
+        return b2, n2, alive2
+
+    def cond(carry):
+        b, n, alive = carry
+        return jnp.any(alive & (n < max_steps) & (b.time < hor))
+
+    out, _, _ = jax.lax.while_loop(
+        cond, body, (batch, jnp.zeros((lanes,), jnp.int32),
+                     jnp.ones((lanes,), bool)))
+    return out

@@ -76,7 +76,8 @@ from repro.core.state import (
 )
 
 __all__ = ["MIG_OFF", "MIG_THRESHOLD", "MIG_DRAIN", "migration_delay",
-           "select_migration", "apply_migration", "Migration"]
+           "select_migration", "apply_selected", "apply_migration",
+           "Migration"]
 
 _BIG = jnp.float32(1e30)
 
@@ -169,18 +170,16 @@ def select_migration(dc: DatacenterState, rates: jnp.ndarray, *,
     return Migration(trigger=trigger, vm=v, src=src, dst=dst, delay=delay)
 
 
-def apply_migration(dc: DatacenterState, rates: jnp.ndarray, *,
-                    networked: bool = False
-                    ) -> tuple[DatacenterState, Migration]:
-    """Apply at most one migration for this event (pure, vmap-safe).
+def apply_selected(dc: DatacenterState, mig: Migration) -> DatacenterState:
+    """Apply a precomputed ``Migration`` decision (pure, vmap-safe).
 
     Moves the victim's RAM/BW/storage (and PEs under ``reserve_pes``)
     from source to destination pools, repoints ``vms.host``, starts the
     downtime clock (``mig_remaining = delay``), and books the copy
     energy + stats.  Everything is ``where``-gated on ``trigger`` so the
-    no-migration case is a bit-exact identity.
+    no-migration case is a bit-exact identity — which lets the engine
+    skip this pass entirely behind a ``lax.cond`` on ``mig.trigger``.
     """
-    mig = select_migration(dc, rates, networked=networked)
     hosts, vms = dc.hosts, dc.vms
     nh = hosts.num_pes.shape[0]
     v, src = mig.vm, mig.src
@@ -206,9 +205,21 @@ def apply_migration(dc: DatacenterState, rates: jnp.ndarray, *,
         mig_remaining=vms.mig_remaining.at[v].set(
             jnp.where(mig.trigger, mig.delay, vms.mig_remaining[v])),
     )
-    new = dataclasses.replace(
+    return dataclasses.replace(
         dc, hosts=new_hosts, vms=new_vms,
         mig_count=dc.mig_count + mig.trigger.astype(jnp.int32),
         mig_downtime=dc.mig_downtime + amt(mig.delay),
     )
-    return new, mig
+
+
+def apply_migration(dc: DatacenterState, rates: jnp.ndarray, *,
+                    networked: bool = False
+                    ) -> tuple[DatacenterState, Migration]:
+    """Select and apply at most one migration for this event.
+
+    Convenience wrapper kept for callers/tests; ``engine.step`` now calls
+    ``select_migration`` + ``apply_selected`` separately so the apply can
+    sit behind a runtime branch.
+    """
+    mig = select_migration(dc, rates, networked=networked)
+    return apply_selected(dc, mig), mig

@@ -134,7 +134,15 @@ def flow_rates(dc: DatacenterState) -> jnp.ndarray:
     """f32[C] — MB/s granted to each active transfer this event.
 
     The bottleneck fair share over the flow's three-tier path (module
-    docstring).  Zero for cloudlets without an active flow."""
+    docstring).  Zero for cloudlets without an active flow.
+
+    The engine only evaluates this behind a ``net.enabled`` branch
+    (``engine.step``'s ``_net_off`` arm substitutes all-zero rates and
+    INF wake deltas — exactly what a disabled topology would produce),
+    so non-networked lanes never pay the two segment-sums.  Rates
+    reshuffle at *every* phase boundary, which is also why networked
+    lanes are excluded from event-horizon leaping
+    (``engine._leap_window``; see docs/performance.md)."""
     net = dc.net
     nh = dc.hosts.num_pes.shape[0]
     flow, host, k = _flow_and_cluster(dc)

@@ -38,6 +38,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
@@ -45,11 +46,13 @@ from repro.core import engine
 from repro.core.energy import energy_total_j
 from repro.core.provisioning import FIRST_FIT
 from repro.core.state import (
+    CL_CREATED,
     CL_DONE,
     CL_EMPTY,
     DatacenterState,
     INF,
     VM_EMPTY,
+    VM_PENDING,
 )
 
 __all__ = ["pad_scenario", "stack_scenarios", "run_batch", "run_grid",
@@ -158,15 +161,15 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
 # ---------------------------------------------------------------------------
 # Batched runners
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked"))
 def _run_batch(batch: DatacenterState, *, max_steps: int,
                provision_policy: int, dynamic: bool,
                networked: bool) -> DatacenterState:
-    f = partial(engine.run, max_steps=max_steps,
-                provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked)
-    return jax.vmap(f)(batch)
+    # engine.batched_run == vmap(engine.run) lane for lane (bitwise), plus
+    # the dead-lane early-exit: the dynamic/networked passes switch off the
+    # moment no live lane needs them (tests/test_leap_parity.py).
+    return engine.batched_run(batch, max_steps=max_steps,
+                              provision_policy=provision_policy,
+                              dynamic=dynamic, networked=networked)
 
 
 def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
@@ -309,14 +312,77 @@ def _lane_axis(mesh) -> str:
     return mesh.axis_names[0]
 
 
-def _resolve_partitioner(partitioner: str) -> str:
+def _resolve_partitioner(partitioner: str, *, n_dev: int = 1,
+                         dispatch_ok: bool = False) -> str:
     """Validate/expand a partitioner choice (the CPU backend defaults
-    away from shard_map — see ``_sharded_runner``)."""
+    away from shard_map — see ``_sharded_runner``).  ``dispatch_ok``
+    admits the host-side chunked dispatcher (``run_sharded``), which
+    ``"auto"`` prefers on CPU whenever the mesh actually has more than
+    one device — single-device meshes keep the plain fused program."""
     if partitioner == "auto":
-        return "gspmd" if jax.default_backend() == "cpu" else "shard_map"
-    if partitioner not in ("gspmd", "shard_map"):
+        if jax.default_backend() != "cpu":
+            return "shard_map"
+        return "dispatch" if dispatch_ok and n_dev > 1 else "gspmd"
+    allowed = ("gspmd", "shard_map") + (("dispatch",) if dispatch_ok
+                                        else ())
+    if partitioner not in allowed:
         raise ValueError(f"unknown partitioner: {partitioner!r}")
     return partitioner
+
+
+def _dispatch_cost(batch: DatacenterState) -> np.ndarray:
+    """Host-side per-lane step-count estimate for the chunked dispatcher.
+
+    Ordering heuristic only — any estimate is bitwise-safe (per-lane math
+    never depends on co-scheduled lanes); a better estimate just packs
+    slow lanes together so short chunks retire early.  Events and a live
+    migration policy multiply a lane's event count well beyond its
+    cloudlet count, hence the weights."""
+    est = np.asarray(batch.cloudlets.state == CL_CREATED).sum(-1)
+    est = est.astype(np.float64)
+    est += 2.0 * np.asarray(batch.vms.state == VM_PENDING).sum(-1)
+    if batch.events.shape[-2]:
+        kinds = np.asarray(batch.events[..., 1]).astype(np.int32)
+        fired = np.asarray(batch.event_fired)
+        est += 4.0 * ((~fired) & (kinds != 0)).sum(-1)
+    est *= np.where(np.asarray(batch.mig_policy) != 0, 4.0, 1.0)
+    return est
+
+
+def _dispatch_run(batch: DatacenterState, mesh, *, max_steps: int,
+                  provision_policy: int, dynamic: bool, networked: bool,
+                  chunk: int = 4) -> DatacenterState:
+    """Sorted-chunk dispatch: per-call sharding without SPMD.
+
+    Lanes are sorted by estimated cost (descending) and cut into
+    contiguous chunks of ``chunk`` lanes; chunks round-robin over the mesh
+    devices as *separate* ``batched_run`` dispatches (async — XLA queues
+    them per device).  Each chunk's while_loop retires when its own
+    slowest lane quiesces, so a heavy-tailed sweep stops paying the fused
+    program's cost of dragging every quiesced lane along to the global
+    maximum step count — the win scales with max/mean of the per-lane
+    step counts even on one physical core.  No SPMD program is built, so
+    neither CPU-partitioner landmine (vmapped-step crash, loop-variant
+    sort rendezvous) is reachable.  Results are reassembled in original
+    lane order; per-lane bitwise equality to the fused path follows from
+    ``batched_run`` == ``vmap(run)``.
+    """
+    devs = list(mesh.devices.flat)
+    order = np.argsort(-_dispatch_cost(batch), kind="stable")
+    outs = []
+    for i in range(0, order.size, chunk):
+        idx = jnp.asarray(order[i:i + chunk])
+        dev = devs[(i // chunk) % len(devs)]
+        sub = jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.take(x, idx, axis=0), dev), batch)
+        outs.append(engine.batched_run(
+            sub, max_steps=max_steps, provision_policy=provision_policy,
+            dynamic=dynamic, networked=networked))
+    cat = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate([jax.device_put(x, devs[0])
+                                     for x in xs]), *outs)
+    inv = jnp.asarray(np.argsort(order, kind="stable"))
+    return jax.tree_util.tree_map(lambda x: jnp.take(x, inv, axis=0), cat)
 
 
 def _default_inner() -> str:
@@ -399,7 +465,13 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
     * ``"gspmd"`` — ``jit`` with lane-axis ``in_shardings``; XLA's
       automatic partitioner splits the ordinary ``run_batch`` program,
       keeping wide vmap vectorization on every backend.
-    * ``"auto"`` (default) — ``"gspmd"`` on CPU, ``"shard_map"`` on
+    * ``"dispatch"`` — host-side sorted-chunk dispatcher
+      (``_dispatch_run``): no SPMD program at all; lanes are grouped by
+      estimated cost into small chunks issued round-robin to the
+      devices, so short lanes retire without dragging to the slowest
+      lane's step count (``docs/performance.md``).
+    * ``"auto"`` (default) — ``"dispatch"`` on CPU meshes with more than
+      one device, ``"gspmd"`` on single-device CPU, ``"shard_map"`` on
       accelerator backends.
 
     All spellings are bit-for-bit equal (``tests/test_sweep_sharded.py``).
@@ -412,8 +484,14 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
-    partitioner = _resolve_partitioner(partitioner)
     n_dev = mesh.shape[axis]
+    partitioner = _resolve_partitioner(partitioner, n_dev=n_dev,
+                                       dispatch_ok=True)
+    if partitioner == "dispatch":
+        # chunks need no divisibility padding — any lane count dispatches
+        return _dispatch_run(batch, mesh, max_steps=max_steps,
+                             provision_policy=provision_policy,
+                             dynamic=dynamic, networked=networked)
     have = batch.time.shape[0]
     lanes = -(-have // n_dev) * n_dev
     padded = pad_batch(batch, lanes)
@@ -450,7 +528,9 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
         n_scen = batch.time.shape[0]
         fused = fuse_grid(batch, vm_policies, task_policies)
         if mesh is None:
-            out = jax.vmap(run_lane)(fused)
+            out = engine.batched_run(fused, max_steps=max_steps,
+                                     provision_policy=provision_policy,
+                                     dynamic=dynamic, networked=networked)
         else:
             axis = _lane_axis(mesh)
             n_dev = mesh.shape[axis]
@@ -512,8 +592,20 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
-    return _grid_runner(mesh, max_steps, provision_policy,
-                        _resolve_partitioner(partitioner),
+    n_dev = mesh.shape[_lane_axis(mesh)] if mesh is not None else 1
+    resolved = _resolve_partitioner(partitioner, n_dev=n_dev,
+                                    dispatch_ok=mesh is not None)
+    if resolved == "dispatch":
+        # host-side path: materialize the fused grid once, dispatch
+        # sorted chunks, reshape back — same [P, B] layout as _grid_runner
+        n_pol, n_scen = int(vm_policies.shape[0]), int(batch.time.shape[0])
+        fused = fuse_grid(batch, vm_policies, task_policies)
+        out = _dispatch_run(fused, mesh, max_steps=max_steps,
+                            provision_policy=provision_policy,
+                            dynamic=dynamic, networked=networked)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n_pol, n_scen) + x.shape[1:]), out)
+    return _grid_runner(mesh, max_steps, provision_policy, resolved,
                         _default_inner(), dynamic,
                         networked)(batch, vm_policies, task_policies)
 

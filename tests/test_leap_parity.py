@@ -1,0 +1,178 @@
+"""Event-horizon leaping: bitwise parity and effectiveness.
+
+``engine.run`` leaps by default (``leap=True``): one ``while_loop``
+iteration may commit a whole run of queued completions when no
+provisioning/migration/network decision can intervene
+(``engine._leap_window``).  The contract is *bit-for-bit invisibility*:
+every result leaf — times, remaining work, energy joules, market costs,
+migration stats, transferred MB, fired-event masks — must equal the
+leap-disabled program's exactly, because the leap replays the step
+commit's own f32 arithmetic on frozen rates and refuses any window where
+rates could reshuffle (``engine._drain_safe``).
+
+Coverage here:
+
+  * the full golden corpus (50 payloads x the stored policy pair grid)
+    replayed ``leap=True`` vs ``leap=False`` through ``engine.run``,
+  * a live conformance subset across the static/dynamic/networked
+    program variants,
+  * ``engine.batched_run`` (the dead-lane early-exit runner) vs
+    ``vmap(engine.run)``, mixed static + dynamic lanes,
+  * an effectiveness probe: on a drain-safe staggered workload the leap
+    must actually batch events (``StepRecord.n_events > 1``).
+"""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_conformance import (DYN_SEEDS, NET_SEEDS, POLICY_GRID, SEEDS,
+                              make_dynamic_scenario,
+                              make_networked_scenario, make_scenario)
+from test_golden_corpus import CORPUS, rebuild
+
+from repro.core import broker as B
+from repro.core import engine
+from repro.core import state as S
+from repro.core import sweep
+
+
+def _assert_trees_bitwise(a, b, ctx):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=ctx)
+
+
+def _run_both(dc, *, dynamic, networked, max_steps=2048):
+    off = engine.run(dc, max_steps=max_steps, dynamic=dynamic,
+                     networked=networked, leap=False)
+    on = engine.run(dc, max_steps=max_steps, dynamic=dynamic,
+                    networked=networked, leap=True)
+    return off, on
+
+
+@pytest.mark.parametrize("vp,tp", POLICY_GRID)
+def test_conformance_subset_leap_bitwise(vp, tp):
+    """Leap on == leap off across all three program variants (live
+    generators, every policy pair, a seed slice of each kind)."""
+    for seed in list(SEEDS)[:6]:
+        off, on = _run_both(make_scenario(seed, vp, tp),
+                            dynamic=False, networked=False)
+        _assert_trees_bitwise(off, on, f"static seed {seed} ({vp},{tp})")
+    for seed in list(DYN_SEEDS)[:4]:
+        off, on = _run_both(make_dynamic_scenario(seed, vp, tp),
+                            dynamic=True, networked=False)
+        _assert_trees_bitwise(off, on, f"dynamic seed {seed} ({vp},{tp})")
+    for seed in list(NET_SEEDS)[:2]:
+        off, on = _run_both(make_networked_scenario(seed, vp, tp),
+                            dynamic=True, networked=True)
+        _assert_trees_bitwise(off, on, f"networked seed {seed} ({vp},{tp})")
+
+
+@pytest.mark.slow
+def test_golden_corpus_leap_bitwise():
+    """Every stored corpus payload replays leap-on == leap-off exactly —
+    including the exact event totals the oracle pins (migration counts,
+    fired events, transferred MB)."""
+    import json
+
+    with open(CORPUS) as f:
+        corpus = json.load(f)
+    kinds = (("static", dict(dynamic=False, networked=False)),
+             ("dynamic", dict(dynamic=True, networked=False)),
+             ("networked", dict(dynamic=True, networked=True)))
+    for kind, kw in kinds:
+        for seed, stored in corpus["scenarios"][kind].items():
+            vp, tp = POLICY_GRID[int(seed) % len(POLICY_GRID)]
+            dc = rebuild(stored, vp, tp)
+            off, on = _run_both(dc, max_steps=1024, **kw)
+            _assert_trees_bitwise(off, on, f"{kind} seed {seed}")
+            assert int(np.asarray(off.mig_count)) == int(
+                np.asarray(on.mig_count))
+            np.testing.assert_array_equal(np.asarray(off.event_fired),
+                                          np.asarray(on.event_fired))
+            np.testing.assert_array_equal(
+                np.asarray(off.net_transferred_mb),
+                np.asarray(on.net_transferred_mb))
+
+
+def _staggered_scenario(seed=0, n_hosts=64, n_vms=32, waves=3):
+    """Reserved PEs + per-cloudlet staggered lengths: the drain-safe
+    regime where completion runs are leapable."""
+    rng = np.random.default_rng(seed)
+    hosts = S.make_uniform_hosts(n_hosts, pes=2, ram=2048.0)
+    vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                  ram=512.0, bw=10.0, size=1000.0)])
+    cl = B.build_waves(n_vms, B.WaveSpec(waves=waves, length_mi=600_000.0,
+                                         period=300.0))
+    jit = (1.0 + 0.4 * rng.random(np.asarray(cl.length).shape)
+           ).astype(np.float32)
+    cl = dataclasses.replace(
+        cl, length=jnp.asarray(np.asarray(cl.length) * jit),
+        remaining=jnp.asarray(np.asarray(cl.remaining) * jit))
+    return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                             task_policy=S.TIME_SHARED, reserve_pes=True)
+
+
+def test_leap_actually_fires_and_stays_bitwise():
+    """On a drain-safe staggered workload the leap must batch events
+    (n_events > 1 on some step) and still finish bit-identical."""
+    dc = _staggered_scenario()
+    f = jax.jit(lambda d: engine.step(
+        d, dynamic=False, networked=False, leap=True,
+        leap_budget=jnp.int32(10_000), leap_horizon=jnp.float32(S.INF)))
+    g = jax.jit(partial(engine.step, dynamic=False, networked=False,
+                        leap=False))
+    d_on, max_leap, outer_on = dc, 0, 0
+    while True:
+        nxt, rec = f(d_on)
+        if not bool(rec.active):
+            break
+        d_on = nxt
+        outer_on += 1
+        max_leap = max(max_leap, int(rec.n_events))
+    d_off, outer_off = dc, 0
+    while True:
+        d_off, rec = g(d_off)
+        if not bool(rec.active):
+            break
+        outer_off += 1
+    assert max_leap > 1, "horizon leap never batched more than one event"
+    assert outer_on < outer_off, (outer_on, outer_off)
+    _assert_trees_bitwise(d_off, d_on, "staggered leap parity")
+
+
+def test_batched_run_matches_vmap_run_mixed_lanes():
+    """batched_run (engine-level loop + dead-lane early-exit) == vmap(run)
+    bitwise on a batch mixing dynamic and never-dynamic lanes."""
+    scs = ([make_dynamic_scenario(s, *POLICY_GRID[s % 4]) for s in (0, 1)]
+           + [make_scenario(s, *POLICY_GRID[s % 4]) for s in (2, 3)])
+    batch = sweep.stack_scenarios(scs)
+    ref = jax.vmap(lambda d: engine._run(
+        d, max_steps=512, horizon=float("inf"), provision_policy=0,
+        dynamic=True, networked=False, leap=True))(batch)
+    out = engine.batched_run(batch, max_steps=512, dynamic=True,
+                             networked=False, leap=True)
+    _assert_trees_bitwise(ref, out, "batched_run vs vmap(run)")
+    lanes = np.asarray(engine._lane_dynamic(batch))
+    assert lanes.any() and not lanes.all(), lanes
+
+
+def test_dispatch_partitioner_single_device_bitwise():
+    """The sorted-chunk dispatch spelling is bitwise on a trivial 1-device
+    mesh (multi-device coverage lives in the forced-2-device subprocess
+    check)."""
+    from repro import compat
+
+    scs = [make_scenario(s, *POLICY_GRID[s % 4]) for s in range(5)]
+    batch = sweep.stack_scenarios(scs)
+    mesh = compat.make_mesh("sweep", jax.devices()[:1])
+    ref = sweep.run_batch(batch, max_steps=256)
+    out = sweep.run_sharded(batch, mesh=mesh, max_steps=256,
+                            partitioner="dispatch")
+    _assert_trees_bitwise(ref, out, "dispatch vs run_batch")

@@ -137,7 +137,10 @@ _TWO_DEVICE_DYNAMIC_CHECK = textwrap.dedent("""
     dbatch = sweep.stack_scenarios(dyn)
     dsingle = sweep.run_grid(dbatch, vm_p, task_p, max_steps=384,
                              sharded=False)
-    for part in ("gspmd", "shard_map"):
+    # "dispatch" is the host-side chunked spelling — dynamic lanes land
+    # round-robin on both forced devices, so this also covers its
+    # cost-sorted permutation + inverse reassembly
+    for part in ("gspmd", "shard_map", "dispatch"):
         dshard = sweep.run_grid(dbatch, vm_p, task_p, max_steps=384,
                                 partitioner=part)
         for name in ("finish_time", "state"):
@@ -158,6 +161,17 @@ _TWO_DEVICE_DYNAMIC_CHECK = textwrap.dedent("""
                                       np.asarray(dsingle.event_fired),
                                       err_msg=f"dynamic {part} event_fired")
     assert int(np.asarray(dsingle.mig_count).sum()) > 0
+    # horizon-leap ground truth: a leap-disabled plain run must equal the
+    # grid lane (the sharded runners leap by default)
+    from repro.core.engine import run
+    for i, (s, dc) in enumerate(zip((0, 2), dyn)):
+        ref = run(dc, max_steps=384, leap=False)
+        np.testing.assert_array_equal(
+            np.asarray(ref.cloudlets.finish_time),
+            np.asarray(dsingle.cloudlets.finish_time)[s % 4, i],
+            err_msg=f"leap-off lane {i}")
+        assert int(np.asarray(ref.mig_count)) == int(
+            np.asarray(dsingle.mig_count)[s % 4, i])
     print("SHARDED_DYNAMIC_OK")
 """)
 

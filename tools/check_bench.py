@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Validate the committed BENCH_policies.json against schema + invariants.
+
+``benchmarks/bench_policies.py`` regenerates the artifact; this tool keeps
+the committed copy honest without re-running the (minutes-long, forced
+2-device) benchmark in CI:
+
+  * every section/key the bench emits must be present (stale artifacts
+    from an older bench schema fail loudly),
+  * every ``*_overhead`` ratio must be >= 1.0 — the bench floors them
+    after min-of-k timing, so a value below 1.0 means someone committed
+    numbers from the old noisy single-shot methodology (the
+    ``networked_idle_overhead = 0.90`` bug),
+  * raw (unfloored) overheads and speedups must be positive,
+  * the fig9 time-shared row must be internally consistent:
+    ``exec_vs_resp_max_diff == 0.0`` (the analysis runs in float64 so the
+    two reductions agree exactly; the space-shared diff is genuinely
+    nonzero — response includes queue wait),
+  * all policy-sweep lanes ran to completion (``all_done``) and each
+    migration/network case finished the same amount of work.
+
+Used by the CI docs job; run locally with:
+
+    python tools/check_bench.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+ARTIFACT = ROOT / "BENCH_policies.json"
+
+# Keys bench_policies.py emits today.  Update in lockstep with the bench:
+# a key added there but not here is invisible to CI; a key listed here
+# but no longer emitted fails the next regeneration's check.
+SCHEMA = {
+    "fig8_fig9": {
+        "space": ["wall_s", "exec_min", "exec_max", "resp_by_wave",
+                  "resp_max", "exec_vs_resp_max_diff", "makespan"],
+        "time": ["wall_s", "exec_min", "exec_max", "resp_by_wave",
+                 "resp_max", "exec_vs_resp_max_diff", "makespan"],
+    },
+    "sweep": ["cells", "compile_and_run_s", "batched_s",
+              "sequential_est_s", "speedup", "all_done"],
+    "energy": {
+        "specpower": ["energy_mj", "wall_s"],
+        "zero_watt": ["energy_mj", "wall_s"],
+    },
+    "migration": {
+        "static": ["wall_s", "migrations", "downtime_s", "done"],
+        "dynamic_idle": ["wall_s", "migrations", "downtime_s", "done"],
+        "threshold": ["wall_s", "migrations", "downtime_s", "done"],
+        "dynamic_idle_overhead": None, "dynamic_idle_overhead_raw": None,
+        "threshold_overhead": None, "threshold_overhead_raw": None,
+    },
+    "network": {
+        "static": ["wall_s", "transferred_mb", "done"],
+        "networked_idle": ["wall_s", "transferred_mb", "done"],
+        "staging": ["wall_s", "transferred_mb", "done"],
+        "networked_idle_overhead": None, "networked_idle_overhead_raw": None,
+        "staging_overhead": None, "staging_overhead_raw": None,
+    },
+    "sharded": ["devices", "cells", "single_device_s", "gspmd_s",
+                "shard_map_s", "dispatch_s", "single_cells_per_s",
+                "gspmd_cells_per_s", "shard_map_cells_per_s",
+                "dispatch_cells_per_s", "speedup"],
+}
+
+
+def _missing(have: dict, want, prefix: str):
+    if want is None:
+        return
+    if isinstance(want, dict):
+        for k, sub in want.items():
+            if k not in have:
+                yield f"{prefix}{k}"
+            elif isinstance(sub, (dict, list)):
+                yield from _missing(have[k], sub, f"{prefix}{k}.")
+    else:  # list of leaf keys
+        for k in want:
+            if k not in have:
+                yield f"{prefix}{k}"
+
+
+def _walk(node, prefix=""):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, f"{prefix}{k}.")
+    else:
+        yield prefix[:-1], node
+
+
+def main() -> int:
+    errors = []
+    try:
+        bench = json.loads(ARTIFACT.read_text())
+    except (OSError, ValueError) as e:
+        print(f"cannot read {ARTIFACT.name}: {e}")
+        return 1
+
+    errors += [f"missing key: {k}" for k in _missing(bench, SCHEMA, "")]
+
+    for path, val in _walk(bench):
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf.endswith("_overhead") and val < 1.0:
+            errors.append(f"{path} = {val} < 1.0 (floored overheads "
+                          "can never dip below 1.0 — stale timing?)")
+        if leaf.endswith("_overhead_raw") and val <= 0.0:
+            errors.append(f"{path} = {val} <= 0")
+        if leaf in ("speedup", "wall_s") and val <= 0.0:
+            errors.append(f"{path} = {val} <= 0")
+
+    if bench.get("sweep", {}).get("all_done") is not True:
+        errors.append("sweep.all_done is not true")
+
+    diff = bench.get("fig8_fig9", {}).get("time", {}).get(
+        "exec_vs_resp_max_diff")
+    if diff != 0.0:
+        errors.append(f"fig8_fig9.time.exec_vs_resp_max_diff = {diff} "
+                      "(time-shared exec/response reductions disagree)")
+
+    for section in ("migration", "network"):
+        done = {k: v["done"] for k, v in bench.get(section, {}).items()
+                if isinstance(v, dict) and "done" in v}
+        if done and len(set(done.values())) != 1:
+            errors.append(f"{section} cases finished unequal work: {done}")
+        if done and min(done.values()) <= 0:
+            errors.append(f"{section} finished no cloudlets: {done}")
+
+    if errors:
+        print(f"{ARTIFACT.name} failed validation:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"bench check OK: {ARTIFACT.name} "
+          f"({sum(1 for _ in _walk(bench))} leaves)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
