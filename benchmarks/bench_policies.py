@@ -23,6 +23,11 @@ pre-network program vs the networked program idling (disabled topology)
 vs actually staging every cloudlet's data through a contended WAN
 gateway (``networked=True`` + an enabled two-tier topology).
 
+``bench_streaming`` measures the windowed arrival engine
+(``engine.run_stream``): cloudlets/s and peak RSS at 10k/100k/1M-cloudlet
+traces against the same workload as a resident dense table, each cell in
+its own subprocess so ``ru_maxrss`` is per-case.
+
 Besides the CSV-ish stdout lines, ``main`` writes every measurement to
 ``BENCH_policies.json`` at the repo root so the perf trajectory is
 recorded run-over-run (cells/s for single vs gspmd vs shard_map, energy
@@ -348,6 +353,120 @@ def bench_network(n_hosts=256, n_vms=96, waves=4, max_steps=4096):
     return out
 
 
+def _streaming_scenario(n, n_vms=32, n_hosts=8):
+    """One Poisson-ish lane: n arrivals over an n/40 s horizon, uniform
+    VM targets and lengths — the same workload materialized either as a
+    chunked arrival stream or as a resident cloudlet table."""
+    rng = np.random.default_rng(0)
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    sub = np.sort(rng.uniform(0, n / 40.0, n)).astype(np.float32)
+    length = rng.uniform(100.0, 2000.0, n).astype(np.float32)
+    from repro.core import state as S
+
+    hosts = S.make_uniform_hosts(n_hosts, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6,
+                                 idle_w=100.0, peak_w=250.0)
+    vms = S.make_vms([1] * n_vms, [500.0] * n_vms, [512.0] * n_vms,
+                     [100.0] * n_vms, [1000.0] * n_vms)
+    return hosts, vms, vm, length, sub
+
+
+def _streaming_worker(n, mode, window, chunk):
+    """Child process for one ``bench_streaming`` cell: run (or, for the
+    resident table at infeasible sizes, materialize + a few steps), then
+    report wall time and this process's own peak RSS."""
+    import resource
+
+    import jax
+
+    from repro.core import state as S
+    from repro.core.engine import run, run_stream
+
+    hosts, vms, vm, length, sub = _streaming_scenario(n)
+    res = {"n": n, "mode": mode, "wall_s": None, "retired": None,
+           "failed": None}
+    if mode == "streamed":
+        stream = S.make_stream(vm, length, sub, chunk=chunk)
+        dc = S.make_datacenter(hosts, vms, S.make_window(window),
+                               vm_policy=S.SPACE_SHARED,
+                               task_policy=S.SPACE_SHARED)
+        box = {}
+
+        def go():
+            out, st, _ = run_stream(dc, stream,
+                                    max_steps_per_chunk=4 * chunk)
+            jax.block_until_ready(out.time)
+            box["st"] = st
+
+        res["wall_s"] = _timeit(go, repeats=3 if n <= 10_000 else 1)
+        st = box["st"]
+        res["retired"] = int(np.asarray(st.stats.n_retired))
+        res["failed"] = int(np.asarray(st.stats.n_failed))
+    else:
+        # resident: the whole trace as one dense cloudlet table.  The
+        # dense program revisits every slot per event (O(n) work x O(n)
+        # events), so full runs are only timed at the smallest tier;
+        # larger tiers materialize the table and take a few steps so the
+        # peak-RSS comparison still includes the per-step buffers.
+        order = np.lexsort((sub, vm))   # state.py invariant: grouped FCFS
+        cl = S.make_cloudlets(vm[order], length[order], sub[order])
+        dc = S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                               task_policy=S.SPACE_SHARED)
+        if n <= 10_000:
+            box = {}
+
+            def go():
+                box["fin"] = run(dc, max_steps=65_536)
+                jax.block_until_ready(box["fin"].time)
+
+            res["wall_s"] = _timeit(go, repeats=1)
+            state = np.asarray(box["fin"].cloudlets.state)
+            res["retired"] = int((state == 2).sum())
+            res["failed"] = int((state == 3).sum())
+        else:
+            jax.block_until_ready(
+                run(dc, max_steps=64, leap=False).time)
+    res["peak_rss_mb"] = (resource.getrusage(resource.RUSAGE_SELF)
+                          .ru_maxrss / 1024.0)
+    print("STREAM_WORKER_JSON:" + json.dumps(res))
+
+
+def bench_streaming(tiers=(10_000, 100_000, 1_000_000), window=64,
+                    chunk=4096):
+    """Windowed arrival streaming (engine.run_stream) vs the resident
+    table, per trace size: cloudlets/s plus peak RSS.  Every cell runs in
+    a fresh subprocess so ``ru_maxrss`` is that cell's own high-water
+    mark, not the accumulated parent's.  The streamed lane's active state
+    is the W-slot window whatever the trace length; the resident lane
+    materializes (and, feasibly only at the smallest tier, runs) all n
+    cloudlets at once."""
+    out = {}
+    for n in tiers:
+        tier = {}
+        for mode in ("streamed", "resident"):
+            proc = subprocess.run(
+                [sys.executable, os.path.abspath(__file__),
+                 "--streaming-worker", str(n), mode, str(window),
+                 str(chunk)],
+                capture_output=True, text=True, timeout=1800)
+            if proc.returncode != 0:
+                tier[mode] = {"error": f"rc={proc.returncode}"}
+                sys.stderr.write(proc.stderr[-2000:])
+                continue
+            for line in proc.stdout.splitlines():
+                if line.startswith("STREAM_WORKER_JSON:"):
+                    tier[mode] = json.loads(line.split(":", 1)[1])
+        sm = tier.get("streamed", {})
+        if sm.get("wall_s"):
+            sm["cloudlets_per_s"] = n / sm["wall_s"]
+        if sm.get("peak_rss_mb") and tier.get("resident",
+                                              {}).get("peak_rss_mb"):
+            tier["rss_ratio"] = (tier["resident"]["peak_rss_mb"]
+                                 / sm["peak_rss_mb"])
+        out[str(n)] = tier
+    return out
+
+
 def bench_sharded(batch=16, n_hosts=256, n_vms=32, max_steps=8192):
     """Fused grid on one device vs sharded over every visible device.
 
@@ -468,6 +587,19 @@ def main():
           f"_staging_overhead={bn['staging_overhead']:.2f}x"
           f"_staged={bn['staging']['transferred_mb']:.0f}MB"
           f"_done={bn['staging']['done']}")
+    bs = bench_streaming()
+    results["streaming"] = bs
+    for n, tier in bs.items():
+        sm, rs = tier.get("streamed", {}), tier.get("resident", {})
+        wall, rwall = sm.get("wall_s"), rs.get("wall_s")
+        us = f"{wall * 1e6:.0f}" if wall else "error"
+        rw = f"{rwall:.1f}s" if rwall else "not_timed"
+        print(f"bench_streaming_{n},{us},"
+              f"cloudlets_per_s={sm.get('cloudlets_per_s', 0):.0f}"
+              f"_retired={sm.get('retired')}"
+              f"_rss={sm.get('peak_rss_mb', 0):.0f}MB"
+              f"_resident_rss={rs.get('peak_rss_mb', 0):.0f}MB"
+              f"_resident_wall={rw}")
     # the sharded measurement needs a multi-device backend, which must be
     # forced before jax initializes -> fresh subprocess
     env = dict(
@@ -508,5 +640,9 @@ def _write_json(results):
 if __name__ == "__main__":
     if "--sharded-worker" in sys.argv:
         _sharded_worker()
+    elif "--streaming-worker" in sys.argv:
+        i = sys.argv.index("--streaming-worker")
+        _streaming_worker(int(sys.argv[i + 1]), sys.argv[i + 2],
+                          int(sys.argv[i + 3]), int(sys.argv[i + 4]))
     else:
         main()

@@ -57,19 +57,25 @@ from repro.core.state import (
     EV_NONE,
     EV_VM_CREATE,
     EV_VM_DESTROY,
+    ArrivalStream,
     DatacenterState,
     INF,
     MIG_OFF,
     MIG_THRESHOLD,
+    NET_PRE,
     NET_STAGE_OUT,
+    StreamState,
     VM_ACTIVE,
     VM_DESTROYED,
     VM_EMPTY,
+    VM_FAILED,
     VM_PENDING,
+    make_stream_state,
 )
 
-__all__ = ["step", "run", "run_trace", "batched_run", "StepRecord",
-           "apply_due_events", "wants_dynamic", "wants_network"]
+__all__ = ["step", "run", "run_trace", "batched_run", "run_stream",
+           "StepRecord", "StreamChunkRecord", "apply_due_events",
+           "wants_dynamic", "wants_network"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
 
@@ -302,8 +308,9 @@ def _drain_safe(pre: DatacenterState, post: DatacenterState,
 
 def _leap_window(pre: DatacenterState, new: DatacenterState,
                  rates: jnp.ndarray, active, dt_arr, dt_other, arrive,
-                 trig_next, mig_done, budget, horizon, *,
-                 dynamic: bool, networked: bool
+                 trig_next, mig_done, budget, horizon,
+                 next_arrival=None, *,
+                 dynamic: bool, networked: bool, streaming: bool = False
                  ) -> tuple[DatacenterState, jnp.ndarray]:
     """Commit further queued events cheaply while no decision can intervene.
 
@@ -334,6 +341,12 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
     occ = _occupancy(new)
     gate = active & (dt_arr > dt_other) & (arrive > new.time)
     gate &= _drain_safe(pre, new, occ, networked=networked)
+    if streaming:
+        # a backlogged arrival (submit in the past, capacity-blocked) is
+        # invisible to ``arrive`` — but any completion in the window
+        # frees a slot and makes its admission due, so the window must
+        # not open at all while a backlog exists
+        gate &= next_arrival > new.time
     if dynamic:
         gate &= ~trig_next & ~jnp.any(mig_done)
         cl1 = new.cloudlets
@@ -368,6 +381,13 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
             dt_dyn, arr_ev = _dynamic_deltas(state, jnp.bool_(False))
             dt_o = jnp.minimum(dt_o, dt_dyn)
             arr = jnp.minimum(arr, arr_ev)
+        if streaming:
+            # the stream's next unadmitted arrival is an event too: the
+            # window closes before it (a backlogged arrival — submit in
+            # the past, capacity-blocked — creates no event; completions
+            # wake the admission pass in the driver instead)
+            arr = jnp.minimum(arr, jnp.where(next_arrival > state.time,
+                                             next_arrival, INF))
         d_arr = jnp.where(arr < INF, arr - state.time, INF)
         dt = jnp.minimum(dt_o, d_arr)
         act = dt < INF
@@ -427,7 +447,8 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
 
 def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
          dynamic: bool = True, networked: bool = False, leap: bool = False,
-         leap_budget=None, leap_horizon=None
+         leap_budget=None, leap_horizon=None,
+         streaming: bool = False, next_arrival=None
          ) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
@@ -459,6 +480,15 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     pre-dynamic / pre-network program for scenarios that carry neither —
     the public runners auto-detect via ``wants_dynamic`` /
     ``wants_network``.
+
+    ``streaming`` (static, ``run_stream`` lanes only): the cloudlet axis
+    is a recycled active-slot *window*, so (a) the space-shared FCFS rank
+    switches to the admission-counter form (scheduling.vm_level_rates)
+    and (b) ``next_arrival`` — the submit time of the stream's next
+    unadmitted arrival, or INF — joins the event queue as an absolute
+    arrival so the clock lands exactly on it (admission itself happens in
+    the driver, between steps).  ``streaming=False`` compiles today's
+    resident program bit-for-bit.
     """
     # Every pass below is a bit-exact identity when its trigger predicate
     # is False (verified pass by pass; the quiescence fixed point depends
@@ -481,14 +511,16 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     if networked:
         dc = jax.lax.cond(dc.net.enabled == 1, network.advance_phases,
                           lambda d: d, dc)
-    rates = scheduling.cloudlet_rates(dc, networked=networked)
+    rates = scheduling.cloudlet_rates(dc, networked=networked,
+                                      streaming=streaming)
     if dynamic:
         mig0 = migration.select_migration(dc, rates, networked=networked)
 
         def _mig_apply(op):
             d, r = op
             d2 = migration.apply_selected(d, mig0)
-            r2 = scheduling.cloudlet_rates(d2, networked=networked)
+            r2 = scheduling.cloudlet_rates(d2, networked=networked,
+                                           streaming=streaming)
             t2 = migration.select_migration(
                 d2, r2, networked=networked).trigger
             return d2, r2, t2
@@ -523,6 +555,12 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         arrive = jnp.minimum(arrive, arr_ev)
     if networked:
         dt_other = jnp.minimum(dt_other, dt_net)
+    if streaming:
+        # pending stream arrival — absolute, exact; a backlogged one
+        # (submit <= now, window full) is no event: a completion frees a
+        # slot first and the driver's admission pass picks it up
+        arrive = jnp.minimum(arrive, jnp.where(next_arrival > dc.time,
+                                               next_arrival, INF))
     dt_arr = jnp.where(arrive < INF, arrive - dc.time, INF)
     dt = jnp.minimum(dt_other, dt_arr)
     active = dt < INF
@@ -640,7 +678,8 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
             trig_next if dynamic else None,
             mig_done if dynamic else None,
             leap_budget, leap_horizon,
-            dynamic=dynamic, networked=networked)
+            next_arrival if streaming else None,
+            dynamic=dynamic, networked=networked, streaming=streaming)
         n_events = n_events + extra
 
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
@@ -864,3 +903,281 @@ def batched_run(batch: DatacenterState, *, max_steps: int,
         cond, body, (batch, jnp.zeros((lanes,), jnp.int32),
                      jnp.ones((lanes,), bool)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming arrivals (docs/streaming.md): bounded active-slot window +
+# chunked arrival queue.  The cloudlet axis of a streamed lane is the
+# *window* size W, not the trace length — a lax.scan over arrival chunks
+# admits due arrivals into recycled slots and retires DONE/FAILED ones
+# into StreamStats running aggregates + a strided reservoir, so memory is
+# O(W + chunk) regardless of how many cloudlets flow through.
+# ---------------------------------------------------------------------------
+class StreamChunkRecord(NamedTuple):
+    """Telemetry emitted once per arrival chunk (``run_stream`` scan ys)."""
+    time: jnp.ndarray            # f32[] clock after the chunk drained/handed off
+    occupancy: jnp.ndarray       # i32[] in-flight (CL_CREATED) slots now
+    peak_occupancy: jnp.ndarray  # i32[] running max occupancy (whole run)
+    max_backlog: jnp.ndarray     # i32[] running max due-but-unadmitted rows
+    n_retired: jnp.ndarray       # i32[] cumulative DONE cloudlets folded out
+    n_failed: jnp.ndarray        # i32[] cumulative FAILED cloudlets folded out
+    n_events: jnp.ndarray        # i32[] engine events committed this chunk
+
+
+def _retire_slot(stats, cl, sid, slot, nv: int):
+    """Fold one slot's occupant (if any) into the running aggregates.
+
+    ``sid`` is the arrival id occupying ``slot`` (-1 = never used).  Only
+    DONE occupants contribute to the time/work sums; FAILED ones are
+    counted.  The reservoir samples arrival ids divisible by the
+    build-time stride into row ``sid // stride`` (scatter-dropped when
+    out of range) — the f64 oracle reproduces the identical subset.
+    """
+    done = (sid >= 0) & (cl.state[slot] == CL_DONE)
+    failed = (sid >= 0) & (cl.state[slot] == CL_FAILED)
+    fin, sta = cl.finish_time[slot], cl.start_time[slot]
+    vm = jnp.clip(cl.vm[slot], 0, nv - 1)
+    r = stats.res_sid.shape[0]
+    sample = (done | failed) & (sid % stats.stride == 0)
+    ridx = jnp.where(sample, sid // stats.stride, r)
+    return dataclasses.replace(
+        stats,
+        n_retired=stats.n_retired + done.astype(jnp.int32),
+        n_failed=stats.n_failed + failed.astype(jnp.int32),
+        makespan=jnp.where(done, jnp.maximum(stats.makespan, fin),
+                           stats.makespan),
+        sum_exec=stats.sum_exec + jnp.where(done, fin - sta, 0.0),
+        sum_response=stats.sum_response
+        + jnp.where(done, fin - cl.submit_time[slot], 0.0),
+        sum_len=stats.sum_len + jnp.where(done, cl.length[slot], 0.0),
+        per_vm_done=stats.per_vm_done.at[vm].add(done.astype(jnp.int32)),
+        res_sid=stats.res_sid.at[ridx].set(sid, mode="drop"),
+        res_start=stats.res_start.at[ridx].set(sta, mode="drop"),
+        res_finish=stats.res_finish.at[ridx].set(fin, mode="drop"))
+
+
+def _retire_remaining(dc: DatacenterState, st: StreamState) -> StreamState:
+    """Fold every still-resident occupant after the last chunk drains.
+
+    One vectorized pass — by quiescence the residents are terminal
+    (DONE/FAILED) or permanently stuck, and across different chunk sizes
+    the same slots remain resident (the event trajectory is chunking-
+    invariant), so this fold is bitwise chunking-invariant too."""
+    cl = dc.cloudlets
+    stats = st.stats
+    nv = stats.per_vm_done.shape[0]
+    sid = st.slot_sid
+    done = (sid >= 0) & (cl.state == CL_DONE)
+    failed = (sid >= 0) & (cl.state == CL_FAILED)
+    r = stats.res_sid.shape[0]
+    sample = (done | failed) & (sid % stats.stride == 0)
+    ridx = jnp.where(sample, sid // stats.stride, r)
+    vm = jnp.clip(cl.vm, 0, nv - 1)
+    stats = dataclasses.replace(
+        stats,
+        n_retired=stats.n_retired + jnp.sum(done.astype(jnp.int32)),
+        n_failed=stats.n_failed + jnp.sum(failed.astype(jnp.int32)),
+        makespan=jnp.maximum(
+            stats.makespan,
+            jnp.max(jnp.where(done, cl.finish_time, 0.0), initial=0.0)),
+        sum_exec=stats.sum_exec + jnp.sum(
+            jnp.where(done, cl.finish_time - cl.start_time, 0.0)),
+        sum_response=stats.sum_response + jnp.sum(
+            jnp.where(done, cl.finish_time - cl.submit_time, 0.0)),
+        sum_len=stats.sum_len + jnp.sum(jnp.where(done, cl.length, 0.0)),
+        per_vm_done=stats.per_vm_done.at[vm].add(done.astype(jnp.int32)),
+        res_sid=stats.res_sid.at[ridx].set(sid, mode="drop"),
+        res_start=stats.res_start.at[ridx].set(cl.start_time, mode="drop"),
+        res_finish=stats.res_finish.at[ridx].set(cl.finish_time,
+                                                 mode="drop"))
+    return dataclasses.replace(st, stats=stats)
+
+
+def _admit_due(dc: DatacenterState, st: StreamState, chunk
+               ) -> tuple[DatacenterState, StreamState]:
+    """Admit due arrivals from ``chunk`` into free window slots, in order.
+
+    One arrival per iteration of a bounded while_loop; admission is
+    strictly by global arrival index (the stream is sorted by submit time
+    at build time), so the (arrival, slot) sequence — and with it every
+    downstream f32 value — is invariant to how the stream is chunked.
+    A slot is claimable when it does not hold an in-flight (CL_CREATED)
+    cloudlet; claiming retires the previous occupant into the aggregates.
+    An arrival naming a FAILED/DESTROYED VM is written already-FAILED
+    (mirroring the provisioning-failure rule, which only marks cloudlets
+    at provisioning instants) so it cannot clog the window.
+    """
+    m = chunk.vm.shape[0]
+    w = dc.cloudlets.vm.shape[0]
+    nv = dc.vms.req_pes.shape[0]
+
+    def cond(c):
+        d, s = c
+        cur = jnp.minimum(s.cursor, m - 1)
+        row = (s.cursor < m) & (chunk.vm[cur] >= 0)
+        due = chunk.submit[cur] <= d.time
+        free = jnp.sum((d.cloudlets.state == CL_CREATED
+                        ).astype(jnp.int32)) < w
+        return row & due & free
+
+    def body(c):
+        d, s = c
+        cur = jnp.minimum(s.cursor, m - 1)
+        vm_raw = chunk.vm[cur]
+        vm = jnp.clip(vm_raw, 0, nv - 1)
+        cl = d.cloudlets
+        slot = jnp.argmax(cl.state != CL_CREATED)     # lowest free slot
+        stats = _retire_slot(s.stats, cl, s.slot_sid[slot], slot, nv)
+        vdead = ((d.vms.state[vm] == VM_FAILED)
+                 | (d.vms.state[vm] == VM_DESTROYED))
+        length = chunk.length[cur]
+        cl2 = dataclasses.replace(
+            cl,
+            vm=cl.vm.at[slot].set(vm_raw),
+            length=cl.length.at[slot].set(length),
+            remaining=cl.remaining.at[slot].set(length),
+            file_size=cl.file_size.at[slot].set(chunk.file_size[cur]),
+            output_size=cl.output_size.at[slot].set(chunk.output_size[cur]),
+            submit_time=cl.submit_time.at[slot].set(chunk.submit[cur]),
+            start_time=cl.start_time.at[slot].set(-1.0),
+            finish_time=cl.finish_time.at[slot].set(INF),
+            rank_in_vm=cl.rank_in_vm.at[slot].set(s.vm_rank[vm]),
+            state=cl.state.at[slot].set(
+                jnp.where(vdead, CL_FAILED, CL_CREATED)),
+            net_phase=cl.net_phase.at[slot].set(NET_PRE),
+            net_remaining=cl.net_remaining.at[slot].set(0.0),
+            net_lat=cl.net_lat.at[slot].set(0.0))
+        occ = jnp.sum((cl2.state == CL_CREATED).astype(jnp.int32))
+        s2 = dataclasses.replace(
+            s, cursor=s.cursor + 1, next_sid=s.next_sid + 1,
+            vm_rank=s.vm_rank.at[vm].add(1),
+            slot_sid=s.slot_sid.at[slot].set(s.next_sid),
+            peak_occupancy=jnp.maximum(s.peak_occupancy, occ),
+            stats=stats)
+        return dataclasses.replace(d, cloudlets=cl2), s2
+
+    return jax.lax.while_loop(cond, body, (dc, st))
+
+
+def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
+                 *, provision_policy: int, dynamic: bool, networked: bool,
+                 leap: bool, max_steps_per_chunk: int
+                 ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
+    """lax.scan over arrival chunks: admit -> step until the chunk drains.
+
+    The inner loop interleaves the admission pass with ``step(streaming=
+    True)``; ``next_arrival`` is the submit time of the next unadmitted
+    row of the *current* chunk, or — once the chunk is exhausted — the
+    head of the *next* chunk (precomputed host-side), so the clock can
+    never jump past an arrival still sitting in a later chunk.  A chunk's
+    loop exits once its rows are admitted and the clock has reached the
+    next chunk's head (or, for the last chunk, at full quiescence — the
+    final scan iteration doubles as the drain phase)."""
+    m = stream.vm.shape[1]
+    head = jnp.where(stream.vm[:, 0] >= 0, stream.submit[:, 0], INF)
+    next_head = jnp.concatenate([head[1:], jnp.full((1,), INF, jnp.float32)])
+
+    def chunk_body(carry, xs):
+        dc, st = carry
+        chunk, hnext = xs
+        st = dataclasses.replace(st, cursor=jnp.int32(0))
+
+        def pending(s):
+            cur = jnp.minimum(s.cursor, m - 1)
+            return (s.cursor < m) & (chunk.vm[cur] >= 0)
+
+        def cond(c):
+            d, s, n, alive = c
+            return (alive & (n < max_steps_per_chunk)
+                    & (pending(s) | (d.time < hnext)))
+
+        def body(c):
+            d, s, n, alive = c
+            d, s = _admit_due(d, s, chunk)
+            backlog = jnp.sum(((jnp.arange(m) >= s.cursor)
+                               & (chunk.vm >= 0)
+                               & (chunk.submit <= d.time)).astype(jnp.int32))
+            s = dataclasses.replace(
+                s, max_backlog=jnp.maximum(s.max_backlog, backlog))
+            cur = jnp.minimum(s.cursor, m - 1)
+            nxt = jnp.where(pending(s), chunk.submit[cur], hnext)
+            # the admission above may have finished the chunk's job (all
+            # rows admitted, next chunk's head already due) — stepping
+            # then would commit an event *before* the next chunk's due
+            # arrivals are admitted, so hand off to the next chunk instead
+            go = pending(s) | (d.time < hnext)
+
+            def _step(d_):
+                return step(d_, provision_policy=provision_policy,
+                            dynamic=dynamic, networked=networked, leap=leap,
+                            leap_budget=(jnp.int32(max_steps_per_chunk)
+                                         - n - 1),
+                            streaming=True, next_arrival=nxt)
+
+            def _handoff(d_):
+                z = jnp.int32(0)
+                rec = StepRecord(
+                    time=d_.time, n_running=z, n_done=z,
+                    utilization=jnp.float32(0.0), watts=jnp.float32(0.0),
+                    active=jnp.bool_(False), n_migrating=z, migrations=z,
+                    hosts_down=z, transferred_mb=jnp.float32(0.0),
+                    n_flows=z, n_events=z)
+                return d_, rec
+
+            new, rec = jax.lax.cond(go, _step, _handoff, d)
+            return new, s, n + rec.n_events, rec.active
+
+        dc, st, n, _ = jax.lax.while_loop(
+            cond, body, (dc, st, jnp.int32(0), jnp.bool_(True)))
+        rec = StreamChunkRecord(
+            time=dc.time,
+            occupancy=jnp.sum((dc.cloudlets.state == CL_CREATED
+                               ).astype(jnp.int32)),
+            peak_occupancy=st.peak_occupancy,
+            max_backlog=st.max_backlog,
+            n_retired=st.stats.n_retired,
+            n_failed=st.stats.n_failed,
+            n_events=n)
+        return (dc, st), rec
+
+    (dc, st), recs = jax.lax.scan(chunk_body, (dc, st), (stream, next_head))
+    return dc, _retire_remaining(dc, st), recs
+
+
+_run_stream = jax.jit(_stream_core, static_argnames=(
+    "provision_policy", "dynamic", "networked", "leap",
+    "max_steps_per_chunk"))
+
+
+def run_stream(dc: DatacenterState, stream: ArrivalStream, *,
+               reservoir: int = 64, provision_policy: int = FIRST_FIT,
+               dynamic: bool | None = None, networked: bool | None = None,
+               leap: bool | None = None, max_steps_per_chunk: int = 4096
+               ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
+    """Run a streamed-arrival scenario to quiescence (docs/streaming.md).
+
+    ``dc`` carries the infrastructure plus an *empty* cloudlet window
+    (``state.make_window(W)``); ``stream`` carries the actual workload as
+    chunked arrivals (``state.make_stream``).  W bounds how many
+    cloudlets may be in flight (admission-order FCFS overflow queueing —
+    a semantic knob); the chunk size only tiles the arrival table in
+    memory (a pure memory knob: all aggregates are bitwise invariant to
+    it).  Every stream VM id must name a real (non-EMPTY) VM slot or the
+    target of an EV_VM_CREATE row.
+
+    Returns ``(final state, StreamState, per-chunk StreamChunkRecord)``;
+    the workload answers (makespan, exec/response sums, per-VM counts,
+    sampled per-cloudlet times) live in ``StreamState.stats``, while
+    energy/cost/transfer totals stay on the ``DatacenterState`` as usual.
+    """
+    if dynamic is None:
+        dynamic = wants_dynamic(dc)
+    if networked is None:
+        networked = wants_network(dc)
+    if leap is None:
+        leap = _LEAP_DEFAULT
+    st = make_stream_state(stream, dc.vms.req_pes.shape[0],
+                           dc.cloudlets.vm.shape[0], reservoir=reservoir)
+    return _run_stream(dc, st, stream, provision_policy=provision_policy,
+                       dynamic=dynamic, networked=networked, leap=leap,
+                       max_steps_per_chunk=max_steps_per_chunk)

@@ -152,7 +152,8 @@ def host_level_shares(dc: DatacenterState, eligible: jnp.ndarray
 # Level 2: VM -> cloudlet  (CloudletScheduler)
 # ---------------------------------------------------------------------------
 def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
-                   runnable: jnp.ndarray) -> jnp.ndarray:
+                   runnable: jnp.ndarray, *,
+                   streaming: bool = False) -> jnp.ndarray:
     """f32[C] MIPS given to each cloudlet from its VM's granted capacity.
 
     SPACE_SHARED: the first ``req_pes`` runnable cloudlets (by submission
@@ -160,6 +161,13 @@ def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
     fluid share  capacity / max(n_runnable, req_pes)  — with fewer tasks
     than PEs a task still gets at most one PE's worth (a task unit is
     single-threaded, per the paper's model).
+
+    ``streaming`` (engine.run_stream): slot recycling breaks the
+    grouped-by-VM invariant the segmented cumsum relies on, so the FCFS
+    rank is instead counted pairwise over the (small, bounded) window
+    using the per-VM admission counter ``rank_in_vm`` as the key — the
+    counter is strictly increasing per VM, so there are no ties, and no
+    in-loop sort is introduced (ROADMAP landmine #2).
     """
     cl, vms = dc.cloudlets, dc.vms
     nv = vms.req_pes.shape[0]
@@ -169,9 +177,16 @@ def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
     cap = vm_capacity[vm_idx]                              # f32[C]
     per_pe = cap / req_pes
 
-    # rank among *runnable* cloudlets of the same VM (grouped invariant)
-    rank_run = segment_cumsum_grouped(
-        runnable.astype(jnp.int32), vm_idx, exclusive=True)
+    if streaming:
+        # rank among runnable of the same VM, O(W^2) over the window
+        same_vm = vm_idx[None, :] == vm_idx[:, None]
+        ahead = (same_vm & runnable[None, :]
+                 & (cl.rank_in_vm[None, :] < cl.rank_in_vm[:, None]))
+        rank_run = jnp.sum(ahead.astype(jnp.int32), axis=1)
+    else:
+        # rank among *runnable* cloudlets of the same VM (grouped invariant)
+        rank_run = segment_cumsum_grouped(
+            runnable.astype(jnp.int32), vm_idx, exclusive=True)
     space_rate = jnp.where(rank_run < req_pes.astype(jnp.int32), per_pe, 0.0)
 
     n_run = jax.ops.segment_sum(
@@ -186,13 +201,15 @@ def vm_level_rates(dc: DatacenterState, vm_capacity: jnp.ndarray,
 # Full two-level pass (the tensorized ``updateVMsProcessing``)
 # ---------------------------------------------------------------------------
 def cloudlet_rates(dc: DatacenterState, *,
-                   networked: bool = False) -> jnp.ndarray:
+                   networked: bool = False,
+                   streaming: bool = False) -> jnp.ndarray:
     """f32[C] — execution rate (MIPS) of every cloudlet at ``dc.time``.
 
     One fused pass over all hosts x VMs x cloudlets; the vectorized
     equivalent of CloudSim's per-entity ``updateVMsProcessing`` /
     ``updateGridletsProcessing`` cascade (§4.1).  ``networked`` forwards
-    to ``cloudlet_runnable`` (data must be staged in before CPU).
+    to ``cloudlet_runnable`` (data must be staged in before CPU);
+    ``streaming`` forwards to ``vm_level_rates`` (recycled-slot rank).
     """
     runnable = cloudlet_runnable(dc, networked=networked)
     active = dc.vms.state == VM_ACTIVE
@@ -202,4 +219,4 @@ def cloudlet_rates(dc: DatacenterState, *,
                          active,
                          active & vm_has_work(dc, runnable))
     vm_cap = host_level_shares(dc, eligible)
-    return vm_level_rates(dc, vm_cap, runnable)
+    return vm_level_rates(dc, vm_cap, runnable, streaming=streaming)

@@ -353,6 +353,139 @@ def make_cloudlets(vm, length, submit_time=0.0, file_size=0.0,
     )
 
 
+# ---------------------------------------------------------------------------
+# Streaming arrivals (engine.run_stream) — a bounded active-slot window plus
+# a chunked arrival queue, so a lane's cloudlet axis is the *window* size W,
+# not the trace length.  Arrivals are sorted by submit time at build time in
+# NumPy (loop-invariant — no in-loop sort, ROADMAP landmine #2 safe), padded
+# with vm = -1 / submit = INF rows in the final chunk only, and admitted into
+# recycled window slots by ``engine._admit_due``.  Retired (DONE/FAILED)
+# slots fold into ``StreamStats`` running aggregates plus a deterministic
+# strided reservoir of per-cloudlet times for conformance pinning
+# (docs/streaming.md).
+# ---------------------------------------------------------------------------
+@pytree_dataclass
+class ArrivalStream:
+    """Chunked arrival queue: K chunks of M rows each (f32/i32[K, M]).
+
+    Rows are globally sorted by (submit_time, original index); padding
+    rows (``vm == -1``, ``submit == INF``) appear only in the final
+    chunk, so a chunk's first row tells whether it carries any arrivals.
+    Every ``vm`` id must name a non-EMPTY VM slot (or a slot brought to
+    life by an EV_VM_CREATE row before the arrival) — the admission pass
+    marks arrivals for FAILED/DESTROYED VMs failed on entry.
+    """
+    vm: jnp.ndarray             # i32[K, M]  owning VM slot (-1 = padding)
+    length: jnp.ndarray         # f32[K, M]  MI
+    file_size: jnp.ndarray      # f32[K, M]  MB staged in (networked lanes)
+    output_size: jnp.ndarray    # f32[K, M]  MB staged out
+    submit: jnp.ndarray         # f32[K, M]  seconds (INF = padding)
+
+
+@pytree_dataclass
+class StreamStats:
+    """Running aggregates over *retired* cloudlets (engine._retire math).
+
+    Retirement order is the slot-claim order, which is invariant to the
+    chunk size M (admission is by global arrival index and the clock is
+    clamped to the next arrival), so the f32 sums are bitwise identical
+    across chunkings of the same trace.  The reservoir samples arrival
+    ``sid`` where ``sid % stride == 0`` into row ``sid // stride`` — a
+    deterministic, order-independent subset the f64 oracle reproduces
+    exactly for per-cloudlet time pinning.
+    """
+    n_retired: jnp.ndarray      # i32[]  DONE cloudlets folded out
+    n_failed: jnp.ndarray      # i32[]  FAILED cloudlets folded out
+    makespan: jnp.ndarray       # f32[]  max finish time over retired DONE
+    sum_exec: jnp.ndarray       # f32[]  sum of finish - start (DONE)
+    sum_response: jnp.ndarray   # f32[]  sum of finish - submit (DONE)
+    sum_len: jnp.ndarray        # f32[]  MI completed (work conservation)
+    per_vm_done: jnp.ndarray    # i32[V] completed cloudlets per VM
+    stride: jnp.ndarray         # i32[]  reservoir stride (build-time)
+    res_sid: jnp.ndarray        # i32[R] sampled arrival ids (-1 = unfilled)
+    res_start: jnp.ndarray      # f32[R] sampled start times
+    res_finish: jnp.ndarray     # f32[R] sampled finish times
+
+
+@pytree_dataclass
+class StreamState:
+    """Carry of the windowed driver (engine.run_stream)."""
+    cursor: jnp.ndarray         # i32[]  next unadmitted row of the chunk
+    next_sid: jnp.ndarray       # i32[]  global arrival counter (admitted)
+    vm_rank: jnp.ndarray        # i32[V] per-VM admission counter (FCFS rank)
+    slot_sid: jnp.ndarray       # i32[W] arrival id occupying each slot (-1)
+    peak_occupancy: jnp.ndarray  # i32[] max in-flight CREATED cloudlets seen
+    max_backlog: jnp.ndarray    # i32[] max due-but-unadmitted arrivals seen
+    stats: StreamStats
+
+
+def make_stream(vm, length, submit_time, *, file_size=0.0, output_size=0.0,
+                chunk: int = 64) -> ArrivalStream:
+    """Build a chunked arrival stream (NumPy, at scenario build time).
+
+    Sorts rows by (submit_time, index) — a *stable* host-side sort, so
+    the in-loop state never re-sorts anything — and pads the final chunk
+    with inert ``vm = -1 / submit = INF`` rows.
+    """
+    vm = np.asarray(vm, np.int32).reshape(-1)
+    n = vm.shape[0]
+    f = lambda x: np.broadcast_to(
+        np.asarray(x, np.float32), (n,)).astype(np.float32)
+    length, submit = f(length), f(submit_time)
+    fs, os_ = f(file_size), f(output_size)
+    order = np.lexsort((np.arange(n), submit))
+    k = max(1, -(-n // chunk))          # ceil; at least one (possibly empty)
+    pad = k * chunk - n
+    pad_i = lambda a, v: np.concatenate(
+        [a[order], np.full(pad, v, a.dtype)]).reshape(k, chunk)
+    return ArrivalStream(
+        vm=jnp.asarray(pad_i(vm, -1)),
+        length=jnp.asarray(pad_i(length, 0.0)),
+        file_size=jnp.asarray(pad_i(fs, 0.0)),
+        output_size=jnp.asarray(pad_i(os_, 0.0)),
+        submit=jnp.asarray(pad_i(submit, np.float32(1e30))))
+
+
+def make_window(n_slots: int) -> CloudletState:
+    """W empty cloudlet slots — the active-slot table of a streamed lane."""
+    z = jnp.zeros((n_slots,), jnp.float32)
+    return CloudletState(
+        vm=jnp.full((n_slots,), -1, jnp.int32),
+        length=z, remaining=z, file_size=z, output_size=z, submit_time=z,
+        start_time=jnp.full((n_slots,), -1.0, jnp.float32),
+        finish_time=jnp.full((n_slots,), INF),
+        rank_in_vm=jnp.zeros((n_slots,), jnp.int32),
+        state=jnp.full((n_slots,), CL_EMPTY, jnp.int32),
+        net_phase=jnp.full((n_slots,), NET_PRE, jnp.int32),
+        net_remaining=z, net_lat=z)
+
+
+def make_stream_state(stream: ArrivalStream, n_vms: int, n_slots: int, *,
+                      reservoir: int = 64) -> StreamState:
+    """Initial driver carry for ``engine.run_stream``.
+
+    The reservoir stride is fixed host-side from the real arrival count
+    (``ceil(n_total / reservoir)``) so the sampled subset is a pure
+    function of the trace, not of the execution."""
+    n_total = int(np.sum(np.asarray(stream.vm) >= 0))
+    stride = max(1, -(-n_total // max(reservoir, 1)))
+    stats = StreamStats(
+        n_retired=jnp.int32(0), n_failed=jnp.int32(0),
+        makespan=jnp.float32(0.0), sum_exec=jnp.float32(0.0),
+        sum_response=jnp.float32(0.0), sum_len=jnp.float32(0.0),
+        per_vm_done=jnp.zeros((n_vms,), jnp.int32),
+        stride=jnp.int32(stride),
+        res_sid=jnp.full((reservoir,), -1, jnp.int32),
+        res_start=jnp.full((reservoir,), -1.0, jnp.float32),
+        res_finish=jnp.full((reservoir,), INF))
+    return StreamState(
+        cursor=jnp.int32(0), next_sid=jnp.int32(0),
+        vm_rank=jnp.zeros((n_vms,), jnp.int32),
+        slot_sid=jnp.full((n_slots,), -1, jnp.int32),
+        peak_occupancy=jnp.int32(0), max_backlog=jnp.int32(0),
+        stats=stats)
+
+
 def validate_cloudlet_order(vm_ids) -> bool:
     """Host-side invariant check: cloudlet slots grouped by vm id runs."""
     arr = np.asarray(vm_ids)

@@ -49,15 +49,20 @@ from repro.core.state import (
     CL_CREATED,
     CL_DONE,
     CL_EMPTY,
+    ArrivalStream,
     DatacenterState,
     INF,
+    StreamState,
     VM_EMPTY,
     VM_PENDING,
+    make_stream_state,
 )
 
 __all__ = ["pad_scenario", "stack_scenarios", "run_batch", "run_grid",
            "run_grid_nested", "fuse_grid", "inert_lane", "pad_batch",
-           "run_sharded", "policy_grid", "SweepSummary", "summarize_batch"]
+           "run_sharded", "policy_grid", "SweepSummary", "summarize_batch",
+           "stack_streams", "run_stream_batch", "run_stream_grid",
+           "StreamSweepSummary", "summarize_stream"]
 
 
 # ---------------------------------------------------------------------------
@@ -615,6 +620,227 @@ def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
     vm_p = jnp.array([0, 0, 1, 1], jnp.int32)
     task_p = jnp.array([0, 1, 0, 1], jnp.int32)
     return vm_p, task_p
+
+
+# ---------------------------------------------------------------------------
+# Streamed (windowed) lanes — engine.run_stream over a batch axis
+# ---------------------------------------------------------------------------
+def stack_streams(streams: Sequence[ArrivalStream]) -> ArrivalStream:
+    """Stack per-lane arrival streams into one [B, K, M] chunk table.
+
+    Every stream must share the chunk width M (``make_stream(chunk=...)``);
+    ragged chunk *counts* are padded with inert all-padding chunks
+    (``vm = -1 / submit = INF``), which the chunk scan drains in one
+    inactive step each — the streamed analogue of ``pad_scenario``.
+    """
+    if not streams:
+        raise ValueError("empty stream list")
+    ms = {s.vm.shape[1] for s in streams}
+    if len(ms) != 1:
+        raise ValueError(f"streams must share a chunk width; got {ms}")
+    kmax = max(s.vm.shape[0] for s in streams)
+
+    def grow(s: ArrivalStream) -> ArrivalStream:
+        extra = kmax - s.vm.shape[0]
+        if extra == 0:
+            return s
+        m = s.vm.shape[1]
+        pad_i = jnp.full((extra, m), -1, jnp.int32)
+        pad_f = jnp.zeros((extra, m), jnp.float32)
+        return ArrivalStream(
+            vm=jnp.concatenate([s.vm, pad_i]),
+            length=jnp.concatenate([s.length, pad_f]),
+            file_size=jnp.concatenate([s.file_size, pad_f]),
+            output_size=jnp.concatenate([s.output_size, pad_f]),
+            submit=jnp.concatenate([s.submit,
+                                    jnp.full((extra, m), INF, jnp.float32)]))
+
+    padded = [grow(s) for s in streams]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def _stack_stream_states(streams: ArrivalStream, n_vms: int, n_slots: int,
+                         reservoir: int) -> StreamState:
+    """Per-lane initial ``StreamState`` carries, stacked to the lane axis.
+
+    The reservoir stride is a host-side per-lane constant (a pure
+    function of each lane's arrival count), so states are built eagerly
+    lane by lane and stacked — they are tiny (O(V + W + R) per lane).
+    """
+    n_lanes = streams.vm.shape[0]
+    per_lane = [
+        make_stream_state(
+            jax.tree_util.tree_map(lambda x, b=b: x[b], streams),
+            n_vms, n_slots, reservoir=reservoir)
+        for b in range(n_lanes)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_lane)
+
+
+@lru_cache(maxsize=None)
+def _stream_batch_runner(provision_policy: int, dynamic: bool,
+                         networked: bool, leap: bool,
+                         max_steps_per_chunk: int, mesh=None,
+                         axis: str | None = None):
+    """jit(vmap(engine._stream_core)) for one static config.
+
+    ``mesh`` adds GSPMD lane-axis in/out shardings (the only sharded
+    spelling offered for streams: the pinned jaxlib's CPU manual-sharding
+    partitioner cannot compile a vmapped engine step under ``shard_map``
+    — ROADMAP landmine #1 — and GSPMD keeps the wide-vmap program
+    identical on every backend)."""
+    f = partial(engine._stream_core, provision_policy=provision_policy,
+                dynamic=dynamic, networked=networked, leap=leap,
+                max_steps_per_chunk=max_steps_per_chunk)
+    vf = jax.vmap(f)
+    if mesh is None:
+        return jax.jit(vf)
+    shd = NamedSharding(mesh, P(axis))
+    return jax.jit(vf, in_shardings=(shd, shd, shd),
+                   out_shardings=(shd, shd, shd))
+
+
+def _inert_stream_lane(streams: ArrivalStream, st: StreamState
+                       ) -> tuple[ArrivalStream, StreamState]:
+    """One unbatched (stream, state) pair that drains in K inactive steps."""
+    lane = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x[0]), streams)
+    lane = dataclasses.replace(
+        lane, vm=jnp.full_like(lane.vm, -1),
+        submit=jnp.full_like(lane.submit, INF))
+    s0 = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x[0]), st)
+    s0 = dataclasses.replace(
+        s0, slot_sid=jnp.full_like(s0.slot_sid, -1),
+        stats=dataclasses.replace(
+            s0.stats, stride=jnp.int32(1),
+            res_sid=jnp.full_like(s0.stats.res_sid, -1),
+            res_start=jnp.full_like(s0.stats.res_start, -1.0),
+            res_finish=jnp.full_like(s0.stats.res_finish, INF)))
+    return lane, s0
+
+
+def run_stream_batch(batch: DatacenterState,
+                     streams: ArrivalStream | Sequence[ArrivalStream], *,
+                     reservoir: int = 64,
+                     provision_policy: int = FIRST_FIT,
+                     dynamic: bool | None = None,
+                     networked: bool | None = None,
+                     leap: bool | None = None,
+                     max_steps_per_chunk: int = 4096,
+                     mesh=None, axis: str = "sweep"
+                     ) -> tuple[DatacenterState, StreamState,
+                                engine.StreamChunkRecord]:
+    """vmap ``engine.run_stream`` over stacked windowed lanes.
+
+    ``batch`` is a stacked scenario batch whose cloudlet block is the
+    *active window* (``state.make_window``); ``streams`` is a stacked
+    ``[B, K, M]`` arrival table (or a sequence, stacked via
+    ``stack_streams``).  Each lane admits/retires independently; lanes
+    whose stream drains early take inert steps until the whole batch
+    quiesces, exactly as in ``run_batch``.  Pass ``mesh`` (1-D) to shard
+    the lane axis with GSPMD in/out shardings — lane counts that do not
+    divide the device count are padded with inert stream lanes and
+    unpadded on return.  Per-lane results are bitwise identical to
+    ``engine.run_stream`` on the unstacked lane.
+    """
+    if not isinstance(streams, ArrivalStream):
+        streams = stack_streams(list(streams))
+    if dynamic is None:
+        dynamic = engine.wants_dynamic(batch)
+    if networked is None:
+        networked = engine.wants_network(batch)
+    if leap is None:
+        leap = engine._LEAP_DEFAULT
+    sts = _stack_stream_states(streams, batch.vms.req_pes.shape[-1],
+                               batch.cloudlets.vm.shape[-1], reservoir)
+    if mesh is None:
+        runner = _stream_batch_runner(provision_policy, dynamic, networked,
+                                      leap, max_steps_per_chunk)
+        return runner(batch, sts, streams)
+    axis = _lane_axis(mesh)
+    n_dev = mesh.shape[axis]
+    have = batch.time.shape[0]
+    lanes = -(-have // n_dev) * n_dev
+    if lanes != have:
+        pad_s, pad_st = _inert_stream_lane(streams, sts)
+        grow = lambda x, p: jnp.concatenate(
+            [x, jnp.broadcast_to(p[None], (lanes - have,) + p.shape)])
+        batch = pad_batch(batch, lanes)
+        streams = jax.tree_util.tree_map(grow, streams, pad_s)
+        sts = jax.tree_util.tree_map(grow, sts, pad_st)
+    runner = _stream_batch_runner(provision_policy, dynamic, networked,
+                                  leap, max_steps_per_chunk, mesh, axis)
+    out = runner(batch, sts, streams)
+    if lanes == have:
+        return out
+    return tuple(jax.tree_util.tree_map(lambda x: x[:have], o) for o in out)
+
+
+def run_stream_grid(batch: DatacenterState,
+                    streams: ArrivalStream | Sequence[ArrivalStream],
+                    vm_policies: jnp.ndarray, task_policies: jnp.ndarray, *,
+                    reservoir: int = 64, provision_policy: int = FIRST_FIT,
+                    dynamic: bool | None = None,
+                    networked: bool | None = None,
+                    leap: bool | None = None,
+                    max_steps_per_chunk: int = 4096,
+                    mesh=None, axis: str = "sweep"
+                    ) -> tuple[DatacenterState, StreamState,
+                               engine.StreamChunkRecord]:
+    """Streamed scenarios x policy grid, fused into one [P*B] lane axis.
+
+    The windowed analogue of ``run_grid``: each of the P policy pairs is
+    broadcast over the B streamed lanes (``fuse_grid`` for the scenario
+    state; a plain tile for the stream table, which carries no policy),
+    run as one flat ``run_stream_batch``, and reshaped to [P, B, ...].
+    """
+    if not isinstance(streams, ArrivalStream):
+        streams = stack_streams(list(streams))
+    vm_policies = jnp.asarray(vm_policies, jnp.int32)
+    task_policies = jnp.asarray(task_policies, jnp.int32)
+    n_pol = vm_policies.shape[0]
+    n_scen = batch.time.shape[0]
+    fused = fuse_grid(batch, vm_policies, task_policies)
+    tile = lambda x: jnp.broadcast_to(
+        x[None], (n_pol,) + x.shape).reshape((n_pol * x.shape[0],)
+                                             + x.shape[1:])
+    fused_streams = jax.tree_util.tree_map(tile, streams)
+    out = run_stream_batch(fused, fused_streams, reservoir=reservoir,
+                           provision_policy=provision_policy,
+                           dynamic=dynamic, networked=networked, leap=leap,
+                           max_steps_per_chunk=max_steps_per_chunk,
+                           mesh=mesh, axis=axis)
+    reshape = lambda x: x.reshape((n_pol, n_scen) + x.shape[1:])
+    return tuple(jax.tree_util.tree_map(reshape, o) for o in out)
+
+
+class StreamSweepSummary(NamedTuple):
+    """Per-lane scalars for streamed sweeps (from ``StreamStats``)."""
+    n_retired: jnp.ndarray       # i32[...]  cloudlets folded out DONE
+    n_failed: jnp.ndarray        # i32[...]  dead-VM / failed arrivals
+    makespan: jnp.ndarray        # f32[...]  latest completion, s
+    mean_response: jnp.ndarray   # f32[...]  mean finish - submit over done
+    sum_len: jnp.ndarray         # f32[...]  MI completed (work conservation)
+    peak_occupancy: jnp.ndarray  # i32[...]  max cloudlets in flight
+    max_backlog: jnp.ndarray     # i32[...]  max due-but-unadmitted arrivals
+    energy_j: jnp.ndarray        # f32[...]  total joules over valid hosts
+    transferred_mb: jnp.ndarray  # f32[...]  MB staged by completed transfers
+
+
+def summarize_stream(final: DatacenterState, st: StreamState
+                     ) -> StreamSweepSummary:
+    """Reduce streamed-lane results (any leading batch dims) to summaries."""
+    stats = st.stats
+    denom = jnp.maximum(stats.n_retired.astype(jnp.float32), 1.0)
+    return StreamSweepSummary(
+        n_retired=stats.n_retired,
+        n_failed=stats.n_failed,
+        makespan=stats.makespan,
+        mean_response=stats.sum_response / denom,
+        sum_len=stats.sum_len,
+        peak_occupancy=st.peak_occupancy,
+        max_backlog=st.max_backlog,
+        energy_j=energy_total_j(final),
+        transferred_mb=final.net_transferred_mb,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,8 @@ from repro.core.engine import StepRecord
 __all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
            "trace_energy_j", "migration_timeline", "failure_timeline",
            "transfer_timeline", "link_utilization_timeline",
-           "gantt", "summarize_trace"]
+           "gantt", "summarize_trace", "stream_timeline",
+           "summarize_stream_trace"]
 
 
 def completion_curve(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
@@ -108,6 +109,45 @@ def link_utilization_timeline(trace: StepRecord, wan_bw_mbps: float
     dmb = np.diff(np.concatenate([[0.0], mb]))
     util = np.where(dt > 0, dmb / np.maximum(dt, 1e-12), 0.0)
     return t, np.clip(util / max(float(wan_bw_mbps), 1e-12), 0.0, 1.0)
+
+
+def stream_timeline(recs) -> Dict[str, np.ndarray]:
+    """Per-chunk streaming timelines from ``engine.run_stream``'s records.
+
+    One row per arrival chunk (the ``lax.scan`` ys): the clock when the
+    chunk drained, active-slot occupancy at that instant, the running
+    peak occupancy / admission backlog, cumulative retired + failed
+    counts, and the events spent in the chunk.  The occupancy series is
+    the direct view of the window contract — it never exceeds W — and
+    ``max_backlog`` shows how far the overflow queue grew while the
+    window was full (docs/streaming.md).
+    """
+    return {
+        "time": np.asarray(recs.time),
+        "occupancy": np.asarray(recs.occupancy),
+        "peak_occupancy": np.asarray(recs.peak_occupancy),
+        "max_backlog": np.asarray(recs.max_backlog),
+        "n_retired": np.asarray(recs.n_retired),
+        "n_failed": np.asarray(recs.n_failed),
+        "n_events": np.asarray(recs.n_events),
+    }
+
+
+def summarize_stream_trace(recs) -> Dict[str, float]:
+    """Scalar roll-up of a streamed lane's per-chunk records."""
+    tl = stream_timeline(recs)
+    if tl["time"].size == 0:
+        return {"chunks": 0, "makespan": 0.0, "peak_occupancy": 0,
+                "max_backlog": 0, "retired": 0, "failed": 0, "events": 0}
+    return {
+        "chunks": int(tl["time"].size),
+        "makespan": float(tl["time"][-1]),
+        "peak_occupancy": int(tl["peak_occupancy"][-1]),
+        "max_backlog": int(tl["max_backlog"][-1]),
+        "retired": int(tl["n_retired"][-1]),
+        "failed": int(tl["n_failed"][-1]),
+        "events": int(tl["n_events"].sum()),
+    }
 
 
 def gantt(dc: S.DatacenterState) -> Dict[int, list]:

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core import state as S
 
-__all__ = ["poisson_arrivals", "bursty_arrivals", "LmWorkloadProfile",
+__all__ = ["poisson_arrivals", "bursty_arrivals", "diurnal_rate",
+           "diurnal_stream", "mmpp_stream", "LmWorkloadProfile",
            "profile_from_roofline", "cloudlets_from_profile",
            "TPU_V5E_MIPS", "make_tpu_hosts"]
 
@@ -68,6 +69,77 @@ def bursty_arrivals(key, n_vms: int, *, burst_every: float, burst_size: int,
     submit = (base[None, :] + noise).reshape(-1)
     vm_ids = jnp.repeat(jnp.arange(n_vms, dtype=jnp.int32), per_vm)
     return S.make_cloudlets(vm_ids, length_mi, submit)
+
+
+# ---------------------------------------------------------------------------
+# Streamed arrival processes (engine.run_stream lanes — docs/streaming.md)
+# ---------------------------------------------------------------------------
+def diurnal_rate(t, *, base: float, peak: float, period: float,
+                 phase: float = 0.0):
+    """Sinusoidal day/night request rate: ``base`` at the trough,
+    ``peak`` mid-period (the classic diurnal datacenter load shape)."""
+    t = np.asarray(t, np.float64)
+    return base + (peak - base) * 0.5 * (
+        1.0 - np.cos(2.0 * np.pi * (t - phase) / period))
+
+
+def diurnal_stream(seed: int, n_vms: int, *, base_rate: float,
+                   peak_rate: float, period: float, horizon: float,
+                   length_mi=(100.0, 2000.0), file_size: float = 0.0,
+                   output_size: float = 0.0, chunk: int = 256
+                   ) -> S.ArrivalStream:
+    """Chunked arrival stream with a diurnal (sinusoidal) aggregate rate.
+
+    Arrival times are sampled by thinning against the ``peak_rate``
+    envelope (``data.synthetic.thinned_arrivals``), VM targets uniformly,
+    lengths uniformly over ``length_mi`` — all host-side NumPy, so the
+    compiled engine sees only the pre-sorted chunk table.
+    """
+    from repro.data.synthetic import thinned_arrivals
+    rng = np.random.default_rng(seed)
+    rate = lambda t: diurnal_rate(t, base=base_rate, peak=peak_rate,
+                                  period=period)
+    times = thinned_arrivals(rng, rate, horizon, peak_rate)
+    n = times.shape[0]
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    lo, hi = length_mi
+    lens = rng.uniform(lo, hi, n).astype(np.float32)
+    return S.make_stream(vm, lens, times.astype(np.float32),
+                         file_size=file_size, output_size=output_size,
+                         chunk=chunk)
+
+
+def mmpp_stream(seed: int, n_vms: int, *, rate_low: float, rate_high: float,
+                mean_dwell_low: float, mean_dwell_high: float,
+                horizon: float, length_mi=(100.0, 2000.0),
+                file_size: float = 0.0, output_size: float = 0.0,
+                chunk: int = 256) -> S.ArrivalStream:
+    """Bursty MMPP-style arrival stream (2-state Markov-modulated Poisson).
+
+    The modulating chain's LOW/HIGH dwell segments come from
+    ``data.synthetic.mmpp_segments``; within each segment arrivals are
+    homogeneous Poisson at the segment's rate.  Flash-crowd admission
+    studies: the HIGH bursts overflow the active window and exercise the
+    backlog queueing path.
+    """
+    from repro.data.synthetic import mmpp_segments
+    rng = np.random.default_rng(seed)
+    segs = mmpp_segments(rng, horizon, rate_low=rate_low,
+                         rate_high=rate_high,
+                         mean_dwell_low=mean_dwell_low,
+                         mean_dwell_high=mean_dwell_high)
+    times = []
+    for t0, t1, rate in segs:
+        n_seg = rng.poisson(rate * (t1 - t0))
+        times.append(rng.uniform(t0, t1, n_seg))
+    times = np.sort(np.concatenate(times)) if times else np.zeros((0,))
+    n = times.shape[0]
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    lo, hi = length_mi
+    lens = rng.uniform(lo, hi, n).astype(np.float32)
+    return S.make_stream(vm, lens, times.astype(np.float32),
+                         file_size=file_size, output_size=output_size,
+                         chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

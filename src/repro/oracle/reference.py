@@ -758,8 +758,17 @@ class ReferenceSimulator:
                     vm.mig_remaining = max(vm.mig_remaining - dt, 0.0)
         self.time = t_next
 
+    def _admit_stream(self):
+        """Streamed-arrival admission hook — no-op in the base replay.
+
+        Runs at the top of every event iteration, *before* dynamic
+        events, mirroring the engine driver's admit-then-step order
+        (``engine._stream_core``).  ``StreamingReferenceSimulator``
+        overrides it."""
+
     def run(self, max_events: int = 100_000) -> OracleResult:
         while self.n_events < max_events:
+            self._admit_stream()
             self._apply_events()
             self._provision()
             self._advance_phases()
@@ -811,3 +820,182 @@ def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:
     batch)``.  Returns an ``OracleResult`` aligned with ``dc``'s slots.
     """
     return ReferenceSimulator.from_dense(dc).run(max_events=max_events)
+
+
+# ---------------------------------------------------------------------------
+# Streaming arrivals (engine.run_stream mirror, docs/streaming.md):
+# the oracle replays the identical arrival stream in f64, admitting due
+# arrivals into the same bounded in-flight budget before each event, and
+# reduces the full per-cloudlet outcome to the aggregates + strided
+# reservoir the engine's StreamStats carries.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StreamOracleResult:
+    """f64 aggregates over the streamed workload (StreamStats mirror)."""
+    n_retired: int                  # DONE cloudlets
+    n_failed: int                   # FAILED cloudlets
+    makespan: float                 # max finish time over DONE (s)
+    sum_exec: float                 # sum of finish - start over DONE (s)
+    sum_response: float             # sum of finish - submit over DONE (s)
+    sum_len: float                  # MI completed
+    per_vm_done: np.ndarray         # i64[V] completed per VM slot
+    stride: int                     # reservoir stride (= engine's)
+    res_sid: np.ndarray             # i64[R] sampled arrival ids (-1 unfilled)
+    res_start: np.ndarray           # f64[R] sampled start times
+    res_finish: np.ndarray          # f64[R] sampled finish times
+    vm_state: np.ndarray            # i32[V] final VM_* codes
+    vm_host: np.ndarray             # i32[V] final placements (-1 unplaced)
+    energy_j: np.ndarray            # f64[H] joules per host slot
+    time: float                     # clock at quiescence (s)
+    n_events: int
+    n_migrations: int
+    mig_downtime: float
+    transferred_mb: float
+
+
+class StreamingReferenceSimulator(ReferenceSimulator):
+    """Replay a chunked arrival stream against the bounded window.
+
+    Construct via ``from_dense`` on the streamed scenario's dense state
+    (whose cloudlet table is the *empty* window — ``n_cl_slots`` is the
+    window size W), then ``attach_stream``.  Admission mirrors
+    ``engine._admit_due``: strictly by arrival order, one whenever fewer
+    than W cloudlets are in flight (CL_CREATED), an arrival naming a
+    FAILED/DESTROYED (or missing) VM failing on entry.  The unadmitted
+    head joins the event queue as an absolute arrival whenever it lies in
+    the future; a backlogged head (submit in the past, window full) is no
+    event — the completion that frees a slot wakes the admission pass.
+    """
+
+    def attach_stream(self, arrivals, *, reservoir: int = 64):
+        """``arrivals``: iterable of (vm, length, file_size, output_size,
+        submit) rows, already sorted by (submit, original index)."""
+        self._arrivals = [tuple(map(float, row)) for row in arrivals]
+        self._scur = 0
+        self._reservoir = int(reservoir)
+        total = len(self._arrivals)
+        self._stride = max(1, -(-total // max(self._reservoir, 1)))
+        # Running fold of retired cloudlets (the engine's StreamStats
+        # mirror): retired rows are pruned from the live lists every
+        # iteration, keeping each event O(window) rather than O(trace).
+        self._f_done = 0
+        self._f_failed = 0
+        self._f_makespan = 0.0
+        self._f_exec = 0.0
+        self._f_resp = 0.0
+        self._f_len = 0.0
+        self._f_per_vm = np.zeros(self.n_vm_slots, np.int64)
+        r = self._reservoir
+        self._res_sid = np.full(r, -1, np.int64)
+        self._res_start = np.full(r, -1.0, np.float64)
+        self._res_finish = np.full(r, INF, np.float64)
+
+    def _fold_retired(self):
+        """Fold DONE/FAILED cloudlets into the running aggregates and
+        drop them from the live lists (``self.cloudlets`` and their VM's
+        queue) — the slot-recycling mirror of ``engine._retire``."""
+        live = []
+        for cl in self.cloudlets:
+            if cl.state == CL_DONE:
+                self._f_done += 1
+                self._f_makespan = max(self._f_makespan, cl.finish_time)
+                self._f_exec += cl.finish_time - cl.start_time
+                self._f_resp += cl.finish_time - cl.submit_time
+                self._f_len += cl.length
+                if 0 <= cl.vm < self.n_vm_slots:
+                    self._f_per_vm[cl.vm] += 1
+            elif cl.state == CL_FAILED:
+                self._f_failed += 1
+            else:
+                live.append(cl)
+                continue
+            sid = cl.index
+            if sid % self._stride == 0 and sid // self._stride < self._reservoir:
+                row = sid // self._stride
+                self._res_sid[row] = sid
+                self._res_start[row] = cl.start_time
+                self._res_finish[row] = cl.finish_time
+            owner = self._vm_by_index.get(cl.vm)
+            if owner is not None and cl in owner.cloudlets:
+                owner.cloudlets.remove(cl)
+        self.cloudlets = live
+
+    def _admit_stream(self):
+        self._fold_retired()
+        in_flight = len(self.cloudlets)   # post-fold: all live are CREATED
+        while self._scur < len(self._arrivals):
+            vm_id, length, fsz, osz, submit = self._arrivals[self._scur]
+            if submit > self.time:
+                break
+            if in_flight >= self.n_cl_slots:
+                break
+            cl = Cloudlet(index=self._scur, vm=int(vm_id), length=length,
+                          submit_time=submit, remaining=length,
+                          file_size=fsz, output_size=osz)
+            owner = self._vm_by_index.get(int(vm_id))
+            if owner is None:
+                cl.state = CL_FAILED
+            else:
+                owner.cloudlets.append(cl)
+                if owner.state in (VM_FAILED, VM_DESTROYED):
+                    cl.state = CL_FAILED
+            self.cloudlets.append(cl)
+            if cl.state == CL_CREATED:
+                in_flight += 1
+            self._scur += 1
+
+    def _next_dt(self) -> tuple:
+        dt, arrive = super()._next_dt()
+        if self._scur < len(self._arrivals):
+            head = self._arrivals[self._scur][4]
+            if head > self.time:
+                arrive = min(arrive, head)
+        return dt, arrive
+
+    def _result(self) -> StreamOracleResult:
+        self._fold_retired()    # the final event's retirements
+        vs = np.zeros(self.n_vm_slots, np.int32)
+        vh = np.full(self.n_vm_slots, -1, np.int32)
+        for vm in self.vms:
+            vs[vm.index] = vm.state
+            vh[vm.index] = vm.host.index if vm.host is not None else -1
+        en = np.zeros(self.n_host_slots, np.float64)
+        for h in self.hosts:
+            en[h.index] = h.energy_j
+        return StreamOracleResult(
+            n_retired=self._f_done, n_failed=self._f_failed,
+            makespan=self._f_makespan, sum_exec=self._f_exec,
+            sum_response=self._f_resp, sum_len=self._f_len,
+            per_vm_done=self._f_per_vm, stride=self._stride,
+            res_sid=self._res_sid, res_start=self._res_start,
+            res_finish=self._res_finish, vm_state=vs,
+            vm_host=vh, energy_j=en, time=self.time,
+            n_events=self.n_events, n_migrations=self.n_migrations,
+            mig_downtime=self.mig_downtime,
+            transferred_mb=self.transferred_mb)
+
+
+def _stream_rows(stream) -> list:
+    """Flatten an ``ArrivalStream`` pytree into admission-order rows."""
+    g = lambda x: np.asarray(x, np.float64).reshape(-1)
+    vm = np.asarray(stream.vm).reshape(-1)
+    keep = vm >= 0
+    cols = (vm[keep].astype(np.float64), g(stream.length)[keep],
+            g(stream.file_size)[keep], g(stream.output_size)[keep],
+            g(stream.submit)[keep])
+    return list(zip(*cols)) if keep.any() else []
+
+
+def simulate_stream(dc, stream, *, reservoir: int = 64,
+                    max_events: int = 1_000_000) -> StreamOracleResult:
+    """One-call f64 oracle replay of a streamed scenario.
+
+    ``dc`` is the dense state whose cloudlet table is the empty window
+    (``state.make_window``); ``stream`` the ``state.make_stream`` arrival
+    table the engine ran.  Returns aggregates + the strided reservoir,
+    directly comparable with ``engine.run_stream``'s ``StreamState.stats``
+    (same stride, same sampled arrival ids).
+    """
+    sim = StreamingReferenceSimulator.from_dense(dc)
+    sim.attach_stream(_stream_rows(stream), reservoir=reservoir)
+    return sim.run(max_events=max_events)

@@ -30,7 +30,8 @@ POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
                for tp in (S.SPACE_SHARED, S.TIME_SHARED)]
 SEEDS = list(range(26))                 # 26 seeds x 4 combos = 104 scenarios
 DYN_SEEDS = list(range(16))             # +16 x 4 = 64 dynamic scenarios
-NET_SEEDS = list(range(8))              # +8 x 4 = 32 networked -> 200 total
+NET_SEEDS = list(range(8))              # +8 x 4 = 32 networked
+STREAM_SEEDS = list(range(8))           # +8 x 4 = 32 streamed -> 232 total
 
 
 def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
@@ -206,6 +207,79 @@ def make_networked_scenario(seed, vm_policy, task_policy, *, n_hosts=4,
         reserve_pes=bool(seed % 2), net=net, **kw)
 
 
+def make_streamed_scenario(seed, vm_policy, task_policy, *, n_hosts=3,
+                           n_vms=5):
+    """Randomized *streamed* scenario: a bounded window + arrival stream.
+
+    The infrastructure mirrors ``make_scenario`` (heterogeneous hosts,
+    random power curves); the cloudlet block is an empty ``make_window``
+    whose size W (4-12 slots) is far below the 40-80-arrival trace, so
+    slot recycling and admission backlog are always exercised.  Submit
+    times are 2-decimal values (the engine's f32 clock lands exactly on
+    them).  Odd seeds compose with the dynamic + network subsystems: a
+    host fail/recover pair, a mid-trace VM destroy (arrivals naming it
+    afterwards must fail identically on both sides), a migration policy,
+    a random two-tier topology, and per-arrival staged transfer sizes
+    with a sprinkle of zeros.  Returns ``(dc, stream)``.
+    """
+    rng = np.random.default_rng(30_000 + seed)
+    idle = rng.uniform(0.05, 0.2, n_hosts)
+    g4 = np.asarray(energy.normalize_watts(energy.SPEC_G4_WATTS)[2])
+    lin = np.asarray(energy.linear_curve())
+    curves = np.where(rng.integers(0, 2, n_hosts)[:, None] == 1,
+                      g4[None], lin[None])
+    hosts = S.make_hosts(rng.integers(2, 5, n_hosts),
+                         rng.choice([250.0, 500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6,
+                         idle_w=idle,
+                         peak_w=idle + rng.uniform(0.2, 0.8, n_hosts),
+                         power_curve=curves)
+    vms = S.make_vms(
+        rng.integers(1, 3, n_vms),
+        rng.choice([250.0, 500.0, 1000.0], n_vms),
+        64.0, 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 3, n_vms), 2).astype(np.float32))
+    n_slots = int(rng.integers(4, 13))
+    n = int(rng.integers(40, 81))
+    vm_ids = rng.integers(0, n_vms, n).astype(np.int32)
+    submit = np.sort(np.round(rng.uniform(0, 30, n), 2)).astype(np.float32)
+    lengths = np.round(rng.uniform(300, 4000, n)).astype(np.float32)
+    kw = {}
+    file_mb = out_mb = 0.0
+    if seed % 2 == 1:                   # compose dynamic + network staging
+        fail_t = round(float(rng.uniform(5, 15)), 2)
+        destroy_t = round(float(rng.uniform(18, 28)), 2)
+        kw["events"] = S.make_events(
+            [fail_t, round(fail_t + float(rng.uniform(4, 10)), 2),
+             destroy_t],
+            [S.EV_HOST_FAIL, S.EV_HOST_RECOVER, S.EV_VM_DESTROY],
+            [int(rng.integers(0, n_hosts))] * 2
+            + [int(rng.integers(0, n_vms))])
+        kw["mig_policy"] = (S.MIG_THRESHOLD, S.MIG_DRAIN)[seed % 4 == 1]
+        kw["mig_threshold"] = 0.7 if kw["mig_policy"] == S.MIG_THRESHOLD \
+            else 0.45
+        kw["mig_energy_per_mb"] = 0.001
+        kw["net"] = S.make_topology(
+            rng.integers(0, 2, n_hosts),
+            bw_intra=float(rng.choice([50.0, 100.0])),
+            bw_inter=float(rng.choice([20.0, 50.0])),
+            bw_wan=float(rng.choice([10.0, 25.0])),
+            lat_intra=round(float(rng.uniform(0.0, 0.1)), 2),
+            lat_inter=round(float(rng.uniform(0.0, 0.2)), 2),
+            lat_wan=round(float(rng.uniform(0.0, 0.4)), 2),
+            energy_per_mb=0.001)
+        file_mb = np.round(rng.uniform(0, 20, n), 1).astype(np.float32)
+        out_mb = np.round(rng.uniform(0, 10, n), 1).astype(np.float32)
+        file_mb[rng.uniform(size=n) < 0.2] = 0.0
+        out_mb[rng.uniform(size=n) < 0.2] = 0.0
+    dc = S.make_datacenter(hosts, vms, S.make_window(n_slots),
+                           vm_policy=vm_policy, task_policy=task_policy,
+                           reserve_pes=bool(seed % 2), **kw)
+    stream = S.make_stream(vm_ids, lengths, submit, file_size=file_mb,
+                           output_size=out_mb, chunk=16)
+    return dc, stream
+
+
 # ---------------------------------------------------------------------------
 # Engine vs oracle
 # ---------------------------------------------------------------------------
@@ -331,6 +405,72 @@ def test_engine_matches_oracle_networked(vm_policy, task_policy):
         total_mb += res.transferred_mb
     # the generator must actually move bytes on this policy row
     assert total_mb > 0.0
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle_streamed(vm_policy, task_policy):
+    """32 streamed scenarios (8 seeds x 2x2 policies): bounded windows 5-10x
+    smaller than the arrival trace, odd seeds composed with host failures,
+    a mid-trace VM destroy, migration, and staged transfers — the f32
+    windowed engine vs the f64 streaming oracle on every aggregate
+    (makespan / exec / response sums at 1e-3 relative, energy and clock at
+    1e-3 absolute), exact retirement/failure accounting, exact per-VM
+    completion counts, and the deterministic strided reservoir of
+    per-cloudlet (start, finish) samples at 1e-3.  Total conformance
+    coverage: 104 static + 64 dynamic + 32 networked + 32 streamed = 232
+    scenarios."""
+    from repro.core.engine import run_stream
+    from repro.oracle.reference import simulate_stream
+
+    for seed in STREAM_SEEDS:
+        dc, stream = make_streamed_scenario(seed, vm_policy, task_policy)
+        out, st, _ = run_stream(dc, stream, reservoir=32)
+        res = simulate_stream(dc, stream, reservoir=32)
+        ctx = (seed, vm_policy, task_policy)
+
+        # exact integer accounting
+        assert int(st.stats.n_retired) == res.n_retired, ctx
+        assert int(st.stats.n_failed) == res.n_failed, ctx
+        np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done),
+                                      res.per_vm_done, err_msg=str(ctx))
+        assert int(st.stats.stride) == res.stride, ctx
+        np.testing.assert_array_equal(np.asarray(st.stats.res_sid),
+                                      res.res_sid, err_msg=str(ctx))
+        # f32 vs f64 aggregates
+        np.testing.assert_allclose(float(st.stats.makespan), res.makespan,
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(float(st.stats.sum_exec), res.sum_exec,
+                                   rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(float(st.stats.sum_response),
+                                   res.sum_response, rtol=1e-3, atol=1e-3,
+                                   err_msg=str(ctx))
+        np.testing.assert_allclose(float(np.asarray(out.time)), res.time,
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+        # sampled per-cloudlet completion times (failed samples carry the
+        # INF sentinel, identical in kind on both sides but f32 vs f64)
+        filled = res.res_sid >= 0
+        fin = filled & (res.res_finish < 1e29)
+        np.testing.assert_array_equal(
+            np.asarray(st.stats.res_finish)[filled] >= np.float32(1e29),
+            res.res_finish[filled] >= 1e29, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(st.stats.res_start, np.float64)[fin],
+            res.res_start[fin], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(st.stats.res_finish, np.float64)[fin],
+            res.res_finish[fin], rtol=0, atol=1e-3, err_msg=str(ctx))
+        # final placements + composed-subsystem accounting
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+        assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx
+        np.testing.assert_allclose(
+            float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
+            rtol=1e-3, atol=1e-3, err_msg=str(ctx))
 
 
 def test_oracle_matches_fig3_exactly():

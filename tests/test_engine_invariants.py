@@ -226,6 +226,95 @@ def _net_scenario(seed, *, lat_scale=1.0, bw=None, enabled=True):
                              reserve_pes=bool(seed % 2), net=net)
 
 
+# ---------------------------------------------------------------------------
+# Streaming invariants (engine.run_stream — docs/streaming.md)
+# ---------------------------------------------------------------------------
+def _stream_setup(seed, *, n_vms=6, n_slots=8, n=70, chunk=16,
+                  vm_policy=S.SPACE_SHARED, task_policy=S.SPACE_SHARED):
+    rng = np.random.default_rng(seed)
+    hosts = S.make_uniform_hosts(3, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6, idle_w=100.0,
+                                 peak_w=250.0)
+    vms = S.make_vms([1] * n_vms, [500.0] * n_vms, [512.0] * n_vms,
+                     [100.0] * n_vms, [1000.0] * n_vms)
+    dc = S.make_datacenter(hosts, vms, S.make_window(n_slots),
+                           vm_policy=vm_policy, task_policy=task_policy)
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    lens = rng.uniform(100.0, 2000.0, n).astype(np.float32)
+    sub = np.sort(rng.uniform(0.0, 25.0, n)).astype(np.float32)
+    return dc, vm, lens, sub, chunk
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_stream_work_conservation_across_windows(seed):
+    """Every MI of the trace is executed exactly once, no matter how many
+    window generations the workload spans: Σ retired lengths == Σ trace
+    lengths, and per-VM completion counts partition the trace."""
+    from repro.core.engine import run_stream
+
+    dc, vm, lens, sub, chunk = _stream_setup(seed)
+    stream = S.make_stream(vm, lens, sub, chunk=chunk)
+    _, st, _ = run_stream(dc, stream)
+    assert int(st.stats.n_retired) == vm.shape[0]
+    assert int(st.stats.n_failed) == 0
+    np.testing.assert_allclose(float(st.stats.sum_len),
+                               float(lens.astype(np.float64).sum()),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done),
+                                  np.bincount(vm, minlength=6))
+    # response >= exec: queueing delay is never negative in aggregate
+    assert float(st.stats.sum_response) >= float(st.stats.sum_exec) - 1e-3
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("task_policy", [S.SPACE_SHARED, S.TIME_SHARED])
+def test_stream_aggregates_invariant_to_chunk_size(seed, task_policy):
+    """The chunk size M tiles the arrival table in memory and nothing
+    else: chunk 1, 4, and 64 yield bitwise-identical stream stats and
+    energy (the admission sequence is pinned by global arrival order and
+    the clock clamp, not by chunk boundaries)."""
+    import jax
+    from repro.core.engine import run_stream
+
+    dc, vm, lens, sub, _ = _stream_setup(seed, task_policy=task_policy)
+    outs = []
+    for chunk in (1, 4, 64):
+        stream = S.make_stream(vm, lens, sub, chunk=chunk)
+        fdc, st, _ = run_stream(dc, stream)
+        outs.append((fdc, st))
+    ref_dc, ref_st = outs[0]
+    for (fdc, st), chunk in zip(outs[1:], (4, 64)):
+        for x, y in zip(jax.tree_util.tree_leaves(ref_st.stats),
+                        jax.tree_util.tree_leaves(st.stats)):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"chunk {chunk} seed {seed}")
+        np.testing.assert_array_equal(np.asarray(ref_dc.hosts.energy_j),
+                                      np.asarray(fdc.hosts.energy_j),
+                                      err_msg=f"chunk {chunk} energy")
+        np.testing.assert_array_equal(np.asarray(ref_dc.time),
+                                      np.asarray(fdc.time))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_stream_retired_count_monotone(seed):
+    """The cumulative retired/failed counters and the clock are monotone
+    over the chunk sequence (retirement only ever folds slots out)."""
+    from repro.core.engine import run_stream
+
+    dc, vm, lens, sub, _ = _stream_setup(seed, n=60)
+    stream = S.make_stream(vm, lens, sub, chunk=8)
+    _, st, recs = run_stream(dc, stream)
+    retired = np.asarray(recs.n_retired)
+    failed = np.asarray(recs.n_failed)
+    t = np.asarray(recs.time)
+    assert np.all(np.diff(retired) >= 0)
+    assert np.all(np.diff(failed) >= 0)
+    assert np.all(np.diff(t) >= 0.0)
+    # the final fold can only add to the last per-chunk count
+    assert int(st.stats.n_retired) >= int(retired[-1])
+
+
 @pytest.mark.parametrize("seed", SEEDS)
 def test_byte_conservation(seed):
     """Total transferred MB == Σ(file_size + output_size) over finished

@@ -1,9 +1,9 @@
 """Golden-scenario corpus: digest, generator-drift, and replay checks.
 
 ``tests/data/golden_scenarios.json`` freezes every conformance scenario
-payload (26 static + 16 dynamic + 8 networked seeds; the 2x2 policy
-matrix expands at replay, so 50 payloads cover the 200 conformance
-scenarios).  Three contracts:
+payload (26 static + 16 dynamic + 8 networked + 8 streamed seeds; the
+2x2 policy matrix expands at replay, so 58 payloads cover the 232
+conformance scenarios).  Three contracts:
 
   1. the file's sha256 digest matches its payload (integrity),
   2. the live generators in ``test_conformance.py`` still reproduce the
@@ -25,12 +25,14 @@ import numpy as np
 import pytest
 
 from test_conformance import (DYN_SEEDS, NET_SEEDS, POLICY_GRID, SEEDS,
-                              make_dynamic_scenario,
-                              make_networked_scenario, make_scenario)
+                              STREAM_SEEDS, make_dynamic_scenario,
+                              make_networked_scenario, make_scenario,
+                              make_streamed_scenario)
 
 from repro.core import state as S
-from repro.core.engine import run_trace
+from repro.core.engine import run_stream, run_trace
 from repro.oracle import simulate_dense
+from repro.oracle.reference import simulate_stream
 
 CORPUS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
                       "golden_scenarios.json")
@@ -106,6 +108,16 @@ def test_generators_reproduce_corpus(corpus):
         _assert_matches(make_networked_scenario(s, 0, 0),
                         corpus["scenarios"]["networked"][str(s)],
                         f"networked seed {s}")
+    for s in STREAM_SEEDS:
+        stored = corpus["scenarios"]["streamed"][str(s)]
+        dc, stream = make_streamed_scenario(s, 0, 0)
+        _assert_matches(dc, stored, f"streamed seed {s}")
+        for name in ("vm", "length", "file_size", "output_size", "submit"):
+            a = np.asarray(getattr(stream, name)).reshape(-1)
+            np.testing.assert_array_equal(
+                a, np.asarray(stored["stream"][name], a.dtype),
+                err_msg=f"streamed seed {s} stream.{name}")
+        assert np.asarray(stream.vm).shape[1] == stored["stream"]["chunk"]
 
 
 def rebuild(stored, vm_policy, task_policy) -> S.DatacenterState:
@@ -169,3 +181,50 @@ def test_corpus_replays_engine_vs_oracle(corpus, kind, seed):
         np.testing.assert_allclose(
             float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
             rtol=0, atol=1e-3, err_msg=str(ctx))
+
+
+def rebuild_stream(stored) -> S.ArrivalStream:
+    """The chunked arrival table from the JSON payload alone."""
+    s = stored["stream"]
+    m = s["chunk"]
+    import jax.numpy as jnp
+    as_f = lambda name: jnp.asarray(
+        np.asarray(s[name], np.float32).reshape(-1, m))
+    return S.ArrivalStream(
+        vm=jnp.asarray(np.asarray(s["vm"], np.int32).reshape(-1, m)),
+        length=as_f("length"), file_size=as_f("file_size"),
+        output_size=as_f("output_size"), submit=as_f("submit"))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_corpus_replays_streamed_engine_vs_oracle(corpus, seed):
+    """Frozen streamed payloads replay the windowed engine against the
+    f64 streaming oracle across the policy matrix — exact retirement
+    accounting and reservoir subset, 1e-3 aggregates."""
+    stored = corpus["scenarios"]["streamed"][str(seed)]
+    stream = rebuild_stream(stored)
+    for vp, tp in POLICY_GRID:
+        dc = rebuild(stored, vp, tp)
+        # The serialized cloudlet block is the *window* (all slots vm = -1);
+        # rebuild() routes it through make_cloudlets, which marks slots
+        # CREATED — restore the EMPTY active-slot table the engine admits
+        # into.
+        dc = dataclasses.replace(
+            dc, cloudlets=S.make_window(len(stored["cloudlets"]["vm"])))
+        out, st, _ = run_stream(dc, stream, reservoir=32)
+        res = simulate_stream(dc, stream, reservoir=32)
+        ctx = ("streamed", seed, vp, tp)
+        assert int(st.stats.n_retired) == res.n_retired, ctx
+        assert int(st.stats.n_failed) == res.n_failed, ctx
+        np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done),
+                                      res.per_vm_done, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(st.stats.res_sid),
+                                      res.res_sid, err_msg=str(ctx))
+        np.testing.assert_allclose(float(st.stats.makespan), res.makespan,
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(float(st.stats.sum_exec), res.sum_exec,
+                                   rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+        assert int(np.asarray(out.mig_count)) == res.n_migrations, ctx

@@ -1,0 +1,314 @@
+"""Streamed-arrival engine: window contract, recycling, equivalences.
+
+``engine.run_stream`` (docs/streaming.md) drives a bounded active-slot
+window over a chunked arrival stream.  Pinned here:
+
+  * slot recycling — occupancy never exceeds W, retired slots are
+    reclaimed, and every arrival is accounted (retired + failed == n),
+  * admission-order determinism — identical runs are bitwise identical,
+    and the reservoir sample is a pure function of the trace,
+  * stream == resident bitwise — any workload that fits in one window
+    (W = N, no recycling) reproduces the resident program's per-cloudlet
+    results leaf-for-leaf,
+  * leap-on == leap-off bitwise on streamed lanes (the streamed
+    extension of tests/test_leap_parity.py),
+  * the sweep spellings (``run_stream_batch`` / ``run_stream_grid`` /
+    GSPMD-sharded) are lane-for-lane bitwise with single runs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, state as S, sweep, workloads
+from repro.core.telemetry import stream_timeline, summarize_stream_trace
+
+
+def _assert_trees_bitwise(a, b, ctx):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=ctx)
+
+
+def _infra(n_slots, *, n_hosts=3, n_vms=6, vp=S.SPACE_SHARED,
+           tp=S.SPACE_SHARED):
+    hosts = S.make_uniform_hosts(n_hosts, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6, idle_w=100.0,
+                                 peak_w=250.0)
+    vms = S.make_vms([1] * n_vms, [500.0] * n_vms, [512.0] * n_vms,
+                     [100.0] * n_vms, [1000.0] * n_vms)
+    return S.make_datacenter(hosts, vms, S.make_window(n_slots),
+                             vm_policy=vp, task_policy=tp)
+
+
+def _random_stream(seed, n=60, n_vms=6, chunk=16, horizon=20.0):
+    rng = np.random.default_rng(seed)
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    lens = rng.uniform(100.0, 2000.0, n).astype(np.float32)
+    sub = np.sort(rng.uniform(0.0, horizon, n)).astype(np.float32)
+    return S.make_stream(vm, lens, sub, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# Window contract + slot recycling
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_slots", [4, 10, 32])
+def test_window_bounds_occupancy_and_recycles(n_slots):
+    """Occupancy never exceeds W; a window much smaller than the trace
+    still completes every arrival by recycling retired slots."""
+    dc = _infra(n_slots)
+    stream = _random_stream(0, n=60)
+    out, st, recs = engine.run_stream(dc, stream)
+    n = int((np.asarray(stream.vm) >= 0).sum())
+    assert int(st.stats.n_retired) + int(st.stats.n_failed) == n
+    assert int(st.peak_occupancy) <= n_slots
+    tl = stream_timeline(recs)
+    assert np.all(tl["occupancy"] <= n_slots)
+    # per-chunk cumulative retire counter is monotone
+    assert np.all(np.diff(tl["n_retired"]) >= 0)
+    # the window drained: no live occupant remains
+    assert not np.any(np.asarray(out.cloudlets.state) == S.CL_CREATED)
+    # work conservation across recycling: retired MI == trace MI
+    expect = float(np.asarray(stream.length, np.float64)[
+        np.asarray(stream.vm) >= 0].sum())
+    np.testing.assert_allclose(float(st.stats.sum_len), expect, rtol=1e-5)
+
+
+def test_tight_window_queues_instead_of_dropping():
+    """W=1 fully serializes: every arrival still completes, backlog is
+    observed, and the per-VM completion counts match the trace."""
+    dc = _infra(1)
+    stream = _random_stream(3, n=25)
+    _, st, recs = engine.run_stream(dc, stream)
+    assert int(st.stats.n_retired) == 25
+    assert int(st.peak_occupancy) == 1
+    assert int(st.max_backlog) > 0
+    vm = np.asarray(stream.vm).reshape(-1)
+    counts = np.bincount(vm[vm >= 0], minlength=6)
+    np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done), counts)
+
+
+def test_admission_is_deterministic_and_reservoir_is_trace_pure():
+    """Two identical runs are bitwise identical end-to-end, and the
+    sampled reservoir rows are the deterministic strided subset."""
+    dc = _infra(8)
+    stream = _random_stream(7, n=90)
+    a = engine.run_stream(dc, stream, reservoir=16)
+    b = engine.run_stream(dc, stream, reservoir=16)
+    _assert_trees_bitwise(a, b, "identical streamed runs")
+    st = a[1]
+    stride = int(st.stats.stride)
+    sid = np.asarray(st.stats.res_sid)
+    filled = sid >= 0
+    np.testing.assert_array_equal(sid[filled] % stride, 0)
+    np.testing.assert_array_equal(sid[filled] // stride,
+                                  np.nonzero(filled)[0])
+
+
+def test_dead_vm_arrivals_fail_immediately():
+    """Arrivals naming a destroyed VM are retired CL_FAILED without ever
+    occupying execution time."""
+    import jax.numpy as jnp
+
+    dc = _infra(6, n_vms=4)
+    ev = S.make_events([1.0], [S.EV_VM_DESTROY], [0])
+    dc = dataclasses.replace(dc, events=ev,
+                             event_fired=jnp.zeros(1, bool))
+    vm = np.array([0, 1, 0, 2, 0, 3], np.int32)
+    sub = np.array([0.5, 2.0, 3.0, 4.0, 5.0, 6.0], np.float32)
+    # 200 MI at 500 granted MIPS = 0.4 s: the t=0.5 arrival on VM 0
+    # finishes (t=0.9) before the t=1.0 destroy
+    stream = S.make_stream(vm, np.full(6, 200.0, np.float32), sub, chunk=4)
+    _, st, _ = engine.run_stream(dc, stream, dynamic=True)
+    # the t=3.0 and t=5.0 arrivals name the destroyed VM 0 -> CL_FAILED
+    assert int(st.stats.n_failed) == 2
+    assert int(st.stats.n_retired) == 4
+
+
+# ---------------------------------------------------------------------------
+# Stream == resident bitwise (one-window workloads)
+# ---------------------------------------------------------------------------
+def _band_workload(seed, n_vms=6, per_vm=3):
+    """Per-VM contiguous submit bands: sorted-by-submit == grouped-by-VM
+    (the resident layout invariant), with lengths long enough that no
+    completion precedes the last arrival — so admission never recycles
+    and slot k holds exactly resident cloudlet k."""
+    rng = np.random.default_rng(seed)
+    vm = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    sub = (vm * 0.1 + np.tile(np.sort(rng.uniform(0.0, 0.09, per_vm)),
+                              n_vms)).astype(np.float32)
+    lens = rng.uniform(500.0, 3000.0, n_vms * per_vm).astype(np.float32)
+    return vm, lens, sub
+
+
+@pytest.mark.parametrize("vp,tp", [(0, 0), (0, 1), (1, 0), (1, 1)])
+def test_stream_matches_resident_bitwise_one_window(vp, tp):
+    """W = N, no recycling: the streamed program must reproduce the
+    resident program's per-cloudlet leaves bit-for-bit, on every policy
+    pair of the Figure-3 matrix."""
+    vm, lens, sub = _band_workload(11)
+    n = vm.shape[0]
+    resident = S.make_datacenter(
+        S.make_uniform_hosts(3, pes=4, mips=1000.0, ram=8192.0, bw=1000.0,
+                             storage=1e6, idle_w=100.0, peak_w=250.0),
+        S.make_vms([1] * 6, [500.0] * 6, [512.0] * 6, [100.0] * 6,
+                   [1000.0] * 6),
+        S.make_cloudlets(vm, lens, sub), vm_policy=vp, task_policy=tp)
+    ref = engine.run(resident, max_steps=4096)
+
+    dc = _infra(n, vp=vp, tp=tp)
+    stream = S.make_stream(vm, lens, sub, chunk=8)
+    out, st, _ = engine.run_stream(dc, stream)
+    for name in ("finish_time", "start_time", "state", "remaining",
+                 "rank_in_vm", "vm"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out.cloudlets, name)),
+            np.asarray(getattr(ref.cloudlets, name)),
+            err_msg=f"{name} ({vp},{tp})")
+    np.testing.assert_array_equal(np.asarray(out.time), np.asarray(ref.time))
+    np.testing.assert_array_equal(np.asarray(out.hosts.energy_j),
+                                  np.asarray(ref.hosts.energy_j))
+    done = np.asarray(ref.cloudlets.state) == S.CL_DONE
+    assert int(st.stats.n_retired) == int(done.sum())
+
+
+# ---------------------------------------------------------------------------
+# Leap parity on streamed lanes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 3, 7])
+@pytest.mark.parametrize("tp", [S.SPACE_SHARED, S.TIME_SHARED])
+def test_stream_leap_parity_bitwise(seed, tp):
+    """leap=True == leap=False on streamed lanes, bit-for-bit across the
+    final state, the stream stats, and the reservoir — including deep-
+    backlog regimes where completions wake admissions."""
+    dc = _infra(6, tp=tp)
+    stream = _random_stream(seed, n=70, chunk=16)
+    off = engine.run_stream(dc, stream, leap=False)
+    on = engine.run_stream(dc, stream, leap=True)
+    _assert_trees_bitwise(off[0], on[0], f"state seed {seed} tp {tp}")
+    _assert_trees_bitwise(off[1], on[1], f"stats seed {seed} tp {tp}")
+
+
+# ---------------------------------------------------------------------------
+# Sweep spellings
+# ---------------------------------------------------------------------------
+def test_stream_batch_matches_single_runs_bitwise():
+    """run_stream_batch == per-lane engine.run_stream, including ragged
+    chunk counts padded by stack_streams."""
+    dcs = [_infra(8), _infra(8, tp=S.TIME_SHARED), _infra(8)]
+    streams = [_random_stream(s, n=30 + 10 * s, chunk=16) for s in range(3)]
+    batch = sweep.stack_scenarios(dcs)
+    fdc, fst, _ = sweep.run_stream_batch(batch, streams)
+    for b in range(3):
+        _, st1, _ = engine.run_stream(dcs[b], streams[b])
+        _assert_trees_bitwise(
+            st1.stats, jax.tree_util.tree_map(lambda x: x[b], fst.stats),
+            f"lane {b} stats")
+
+
+def test_stream_grid_shapes_and_row_equivalence():
+    """run_stream_grid reshapes to [P, B] and its (0,0)-policy row equals
+    the flat batch run bitwise."""
+    dcs = [_infra(8), _infra(8)]
+    streams = [_random_stream(s, n=40, chunk=16) for s in (5, 6)]
+    batch = sweep.stack_scenarios(dcs)
+    vp, tp = sweep.policy_grid()
+    gdc, gst, _ = sweep.run_stream_grid(batch, streams, vp, tp)
+    summ = sweep.summarize_stream(gdc, gst)
+    assert summ.makespan.shape == (4, 2)
+    fdc, fst, _ = sweep.run_stream_batch(batch, streams)
+    _assert_trees_bitwise(
+        jax.tree_util.tree_map(lambda x: x[0], gst), fst, "policy row 0")
+
+
+def test_stream_sharded_gspmd_bitwise():
+    """The GSPMD-sharded spelling is bitwise with the plain batch on a
+    1-device mesh (the only CPU-safe streamed sharding — landmine #1)."""
+    from repro import compat
+
+    dcs = [_infra(8) for _ in range(3)]
+    streams = [_random_stream(s, n=30, chunk=16) for s in range(3)]
+    batch = sweep.stack_scenarios(dcs)
+    mesh = compat.make_mesh("sweep", jax.devices()[:1])
+    a = sweep.run_stream_batch(batch, streams)
+    b = sweep.run_stream_batch(batch, streams, mesh=mesh)
+    _assert_trees_bitwise(a, b, "gspmd streamed lanes")
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+def test_arrival_generators_feed_streams():
+    """diurnal/MMPP builders produce sorted, schedulable chunk tables
+    that run to full retirement."""
+    for stream in (
+            workloads.diurnal_stream(0, 6, base_rate=0.5, peak_rate=8.0,
+                                     period=30.0, horizon=30.0, chunk=32),
+            workloads.mmpp_stream(1, 6, rate_low=0.5, rate_high=12.0,
+                                  mean_dwell_low=6.0, mean_dwell_high=2.0,
+                                  horizon=30.0, chunk=32)):
+        sub = np.asarray(stream.submit).reshape(-1)
+        real = np.asarray(stream.vm).reshape(-1) >= 0
+        assert np.all(np.diff(sub[real]) >= 0.0)
+        _, st, recs = engine.run_stream(_infra(10), stream)
+        n = int(real.sum())
+        assert int(st.stats.n_retired) == n > 0
+        # the per-chunk timeline precedes the final window fold, so its
+        # last cumulative count can only undershoot the total
+        assert summarize_stream_trace(recs)["retired"] <= n
+
+
+# ---------------------------------------------------------------------------
+# Scale acceptance: a 100k-arrival lane, memory bounded by the window,
+# matches the f64 oracle on aggregates + sampled per-cloudlet times
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_100k_lane_matches_oracle():
+    """The windowed engine at production scale: 100 000 arrivals through
+    a W=64 window, aggregates + strided-reservoir times vs the f64
+    oracle at 1e-3, exact retirement accounting.  Times compare at
+    rtol=1e-3: over ~200k committed events the engine's f32 clock
+    accumulates ~1e-5 relative drift, so an absolute band sized for the
+    short conformance scenarios would reject pure rounding noise."""
+    from repro.oracle.reference import simulate_stream
+
+    n, n_vms = 100_000, 32
+    rng = np.random.default_rng(0)
+    vm = rng.integers(0, n_vms, n).astype(np.int32)
+    sub = np.sort(rng.uniform(0, n / 40.0, n)).astype(np.float32)
+    length = rng.uniform(100.0, 2000.0, n).astype(np.float32)
+    stream = S.make_stream(vm, length, sub, chunk=4096)
+    hosts = S.make_uniform_hosts(8, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6,
+                                 idle_w=100.0, peak_w=250.0)
+    vms = S.make_vms([1] * n_vms, [500.0] * n_vms, [512.0] * n_vms,
+                     [100.0] * n_vms, [1000.0] * n_vms)
+    dc = S.make_datacenter(hosts, vms, S.make_window(64),
+                           vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED)
+    out, st, _ = engine.run_stream(dc, stream, reservoir=64,
+                                   max_steps_per_chunk=16384)
+    res = simulate_stream(dc, stream, reservoir=64)
+    assert int(st.stats.n_retired) == res.n_retired == n
+    assert int(st.stats.n_failed) == res.n_failed == 0
+    np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done),
+                                  res.per_vm_done)
+    np.testing.assert_allclose(float(st.stats.makespan), res.makespan,
+                               rtol=1e-3, atol=0)
+    np.testing.assert_allclose(float(st.stats.sum_exec), res.sum_exec,
+                               rtol=1e-3, atol=0)
+    np.testing.assert_allclose(float(st.stats.sum_response),
+                               res.sum_response, rtol=1e-3, atol=0)
+    np.testing.assert_array_equal(np.asarray(st.stats.res_sid),
+                                  res.res_sid)
+    filled = np.asarray(st.stats.res_sid) >= 0
+    assert filled.all()          # stride covers exactly the reservoir
+    np.testing.assert_allclose(
+        np.asarray(st.stats.res_start, np.float64)[filled],
+        res.res_start[filled], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(st.stats.res_finish, np.float64)[filled],
+        res.res_finish[filled], rtol=1e-3, atol=1e-3)

@@ -17,7 +17,10 @@ the committed copy honest without re-running the (minutes-long, forced
     two reductions agree exactly; the space-shared diff is genuinely
     nonzero — response includes queue wait),
   * all policy-sweep lanes ran to completion (``all_done``) and each
-    migration/network case finished the same amount of work.
+    migration/network case finished the same amount of work,
+  * every streamed lane accounts for all n arrivals
+    (``retired + failed == n``) and, at the largest tier, the windowed
+    engine's peak RSS stays below the resident table's.
 
 Used by the CI docs job; run locally with:
 
@@ -66,6 +69,18 @@ SCHEMA = {
                 "shard_map_s", "dispatch_s", "single_cells_per_s",
                 "gspmd_cells_per_s", "shard_map_cells_per_s",
                 "dispatch_cells_per_s", "speedup"],
+    "streaming": {
+        "10000": {"streamed": ["wall_s", "retired", "failed",
+                               "peak_rss_mb", "cloudlets_per_s"],
+                  "resident": ["wall_s", "retired", "failed",
+                               "peak_rss_mb"]},
+        "100000": {"streamed": ["wall_s", "retired", "failed",
+                                "peak_rss_mb", "cloudlets_per_s"],
+                   "resident": ["peak_rss_mb"]},
+        "1000000": {"streamed": ["wall_s", "retired", "failed",
+                                 "peak_rss_mb", "cloudlets_per_s"],
+                    "resident": ["peak_rss_mb"]},
+    },
 }
 
 
@@ -104,6 +119,8 @@ def main() -> int:
 
     for path, val in _walk(bench):
         leaf = path.rsplit(".", 1)[-1]
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            continue        # untimed streaming cells carry wall_s = null
         if leaf.endswith("_overhead") and val < 1.0:
             errors.append(f"{path} = {val} < 1.0 (floored overheads "
                           "can never dip below 1.0 — stale timing?)")
@@ -120,6 +137,28 @@ def main() -> int:
     if diff != 0.0:
         errors.append(f"fig8_fig9.time.exec_vs_resp_max_diff = {diff} "
                       "(time-shared exec/response reductions disagree)")
+
+    streaming = bench.get("streaming", {})
+    for n, tier in streaming.items():
+        sm = tier.get("streamed", {})
+        if (sm.get("retired") is not None
+                and sm["retired"] + (sm.get("failed") or 0) != int(n)):
+            errors.append(
+                f"streaming.{n}: retired {sm['retired']} + failed "
+                f"{sm.get('failed')} != {n} (lost arrivals)")
+        if sm.get("cloudlets_per_s") is not None \
+                and sm["cloudlets_per_s"] <= 0:
+            errors.append(f"streaming.{n}.streamed.cloudlets_per_s <= 0")
+    if streaming:
+        # memory boundedness shows at the largest tier: the W-slot window
+        # must beat materializing the million-row resident table
+        top = str(max(int(k) for k in streaming))
+        sm = streaming[top].get("streamed", {}).get("peak_rss_mb")
+        rs = streaming[top].get("resident", {}).get("peak_rss_mb")
+        if sm is not None and rs is not None and sm >= rs:
+            errors.append(
+                f"streaming.{top}: streamed peak RSS {sm:.0f}MB >= "
+                f"resident {rs:.0f}MB (window no longer memory-bounded?)")
 
     for section in ("migration", "network"):
         done = {k: v["done"] for k, v in bench.get(section, {}).items()

@@ -2,12 +2,15 @@
 """Regenerate the golden conformance-scenario corpus.
 
 Serializes every scenario the conformance suite generates — the 26
-static, 16 dynamic, and 8 networked seeds of
+static, 16 dynamic, 8 networked, and 8 streamed seeds of
 ``tests/test_conformance.py`` — to ``tests/data/golden_scenarios.json``
 together with a sha256 digest of the canonical payload.  Policies are
 *not* baked in: each stored seed expands to the full 2x2 policy matrix
-at replay time, exactly like the generators, so the file freezes 50
-payloads for 200 scenarios.
+at replay time, exactly like the generators, so the file freezes 58
+payloads for 232 scenarios.  Streamed payloads store the window
+infrastructure in the common layout plus a ``stream`` block (the
+chunked arrival table, flattened) — adding them left every pre-existing
+payload's bytes untouched; only the digest covers the new section.
 
 The committed corpus makes the conformance scenarios reproducible even
 if a future NumPy changes ``default_rng`` streams:
@@ -81,6 +84,19 @@ def serialize(dc) -> dict:
     }
 
 
+def serialize_streamed(dc, stream) -> dict:
+    """Window scenario + chunked arrival table (``make_streamed_scenario``)."""
+    out = serialize(dc)
+    out["stream"] = {
+        "chunk": int(np.asarray(stream.vm).shape[1]),
+        "vm": _arr(stream.vm), "length": _arr(stream.length),
+        "file_size": _arr(stream.file_size),
+        "output_size": _arr(stream.output_size),
+        "submit": _arr(stream.submit),
+    }
+    return out
+
+
 def canonical(payload: dict) -> str:
     return json.dumps(payload, sort_keys=True, separators=(",", ":"))
 
@@ -90,9 +106,10 @@ def digest(payload: dict) -> str:
 
 
 def main() -> int:
-    from test_conformance import (DYN_SEEDS, NET_SEEDS, SEEDS,
+    from test_conformance import (DYN_SEEDS, NET_SEEDS, SEEDS, STREAM_SEEDS,
                                   make_dynamic_scenario,
-                                  make_networked_scenario, make_scenario)
+                                  make_networked_scenario, make_scenario,
+                                  make_streamed_scenario)
 
     payload = {
         "static": {str(s): serialize(make_scenario(s, 0, 0))
@@ -101,14 +118,17 @@ def main() -> int:
                     for s in DYN_SEEDS},
         "networked": {str(s): serialize(make_networked_scenario(s, 0, 0))
                       for s in NET_SEEDS},
+        "streamed": {str(s): serialize_streamed(
+                         *make_streamed_scenario(s, 0, 0))
+                     for s in STREAM_SEEDS},
     }
-    out = {"format": 2, "digest": digest(payload), "scenarios": payload}
+    out = {"format": 3, "digest": digest(payload), "scenarios": payload}
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
         f.write("\n")
     n = (len(payload["static"]) + len(payload["dynamic"])
-         + len(payload["networked"]))
+         + len(payload["networked"]) + len(payload["streamed"]))
     print(f"wrote {OUT}: {n} scenario payloads, digest {out['digest'][:16]}…")
     return 0
 
