@@ -23,6 +23,12 @@ pre-network program vs the networked program idling (disabled topology)
 vs actually staging every cloudlet's data through a contended WAN
 gateway (``networked=True`` + an enabled two-tier topology).
 
+``bench_elasticity`` measures the closed-loop autoscaling subsystem:
+the pre-elastic program vs the elastic program with a disabled scaler
+(the loop idling) vs an enabled watermark scaler + spot track actually
+scaling a headroom fleet, plus policy-search throughput — P autoscaler
+points x B scenarios fused into one compiled sweep, in lane-cells/s.
+
 ``bench_streaming`` measures the windowed arrival engine
 (``engine.run_stream``): cloudlets/s and peak RSS at 10k/100k/1M-cloudlet
 traces against the same workload as a resident dense table, each cell in
@@ -353,6 +359,133 @@ def bench_network(n_hosts=256, n_vms=96, waves=4, max_steps=4096):
     return out
 
 
+def bench_elasticity(batch=8, n_hosts=64, n_vms=24, waves=4,
+                     max_steps=4096):
+    """Closed-loop elasticity: overhead + policy-search throughput.
+
+      * ``static``       — ``elastic=False``: the pre-elastic program,
+      * ``elastic_idle`` — ``elastic=True`` with the default *disabled*
+        scaler: pays the autoscale pass (util ratio, masked action
+        buffers, spot accrual) but performs nothing — the bitwise-
+        identity case ``tests/test_autoscaling.py`` pins,
+      * ``autoscaled``   — an enabled watermark scaler + spot track on a
+        headroom fleet (most slots latent ``VM_EMPTY``) actually scaling
+        up into the backlog and back down as it drains,
+      * ``policy_search`` — ``sweep.run_policy_search``: P autoscaler
+        points x B scenarios fused into one compiled elastic sweep,
+        reported in lane-cells/s.
+
+    ``static`` and ``elastic_idle`` share one workload, so their ratio
+    is the pure closed-loop overhead on a non-elastic workload (floored
+    at 1.0 like every other subsystem overhead).  ``autoscaled`` runs a
+    different, scaler-shaped scenario — its wall time is reported for
+    the trajectory but never ratioed against ``static``.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import broker as B, state as S, sweep
+    from repro.core.engine import run
+
+    def plain():
+        rng = np.random.default_rng(11)
+        hosts = S.make_uniform_hosts(n_hosts, pes=2, ram=2048.0)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = _stagger(B.build_waves(n_vms, B.WaveSpec(waves=waves,
+                                                      length_mi=600_000.0,
+                                                      period=300.0)), rng)
+        return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                                 task_policy=S.TIME_SHARED,
+                                 reserve_pes=True)
+
+    def elastic_scenario(seed, per_slot=6, alive=4):
+        # headroom lane: `alive` of n_vms slots start alive, the rest
+        # are latent VM_EMPTY capacity only the scaler can bring up
+        rng = np.random.default_rng(seed)
+        hosts = S.make_uniform_hosts(16, pes=4, mips=1000.0, ram=8192.0,
+                                     bw=1000.0, storage=1e6)
+        vms = S.make_vms([1] * n_vms, [1000.0] * n_vms, [512.0] * n_vms,
+                         [100.0] * n_vms, [1000.0] * n_vms)
+        st = np.full(n_vms, S.VM_EMPTY, np.int32)
+        st[:alive] = S.VM_PENDING
+        vms = dataclasses.replace(vms, state=jnp.asarray(st))
+        vm = np.repeat(np.arange(n_vms, dtype=np.int32), per_slot)
+        sub = np.tile(np.sort(rng.uniform(0.0, 10.0, per_slot))
+                      .astype(np.float32), n_vms)
+        lens = rng.uniform(400.0, 1600.0,
+                           n_vms * per_slot).astype(np.float32)
+        scaler = S.make_autoscaler(util_high=0.7, util_low=0.25,
+                                   cooldown=2.0, min_fleet=alive,
+                                   max_fleet=n_vms, scale_step=2,
+                                   spot_t=[0.0, 60.0, 180.0],
+                                   spot_price=[0.05, 0.4, 0.08])
+        return S.make_datacenter(hosts, vms,
+                                 S.make_cloudlets(vm, lens, sub),
+                                 vm_policy=S.SPACE_SHARED,
+                                 task_policy=S.SPACE_SHARED,
+                                 scaler=scaler)
+
+    base = plain()
+    out = {}
+    for name, elastic in (("static", False), ("elastic_idle", True)):
+        wall = _timeit(lambda: jax.block_until_ready(
+            run(base, max_steps=max_steps, elastic=elastic).time))
+        final = run(base, max_steps=max_steps, elastic=elastic)
+        out[name] = {
+            "wall_s": wall,
+            "done": int((np.asarray(final.cloudlets.state) == 2).sum()),
+        }
+    raw = out["elastic_idle"]["wall_s"] / max(out["static"]["wall_s"],
+                                              1e-9)
+    out["elastic_idle_overhead_raw"] = raw
+    out["elastic_idle_overhead"] = max(raw, 1.0)
+
+    edc = elastic_scenario(11)
+    wall = _timeit(lambda: jax.block_until_ready(
+        run(edc, max_steps=max_steps, elastic=True).time))
+    final = run(edc, max_steps=max_steps, elastic=True)
+    out["autoscaled"] = {
+        "wall_s": wall,
+        "ups": int(np.asarray(final.scaler.up_count)),
+        "downs": int(np.asarray(final.scaler.down_count)),
+        "spot_cost": float(np.asarray(final.scaler.spot_cost)),
+        "done": int((np.asarray(final.cloudlets.state) == 2).sum()),
+    }
+
+    stacked = sweep.stack_scenarios(
+        [elastic_scenario(100 + s) for s in range(batch)])
+    grid = sweep.policy_points(util_highs=(0.6, 0.75, 0.9),
+                               util_lows=(0.2, 0.35),
+                               cooldowns=(1.0, 4.0),
+                               price_sensitivities=(0.0, 0.3))
+    box = {}
+
+    def go():
+        res = sweep.run_policy_search(stacked, grid, max_steps=max_steps)
+        jax.block_until_ready(res.time)
+        box["res"] = res
+
+    wall = _timeit(go)
+    n_pol = int(grid.util_high.shape[0])
+    cells = n_pol * batch
+    state = np.asarray(box["res"].cloudlets.state)
+    out["policy_search"] = {
+        "policies": n_pol,
+        "scenarios": batch,
+        "cells": cells,
+        "wall_s": wall,
+        "cells_per_s": cells / max(wall, 1e-9),
+        # timid points legitimately strand work (no cooldown-expiry
+        # wakeup) — count fully-finished cells rather than assert all
+        "done_cells": int((state == 2).all(axis=-1).sum()),
+        "done_total": int((state == 2).sum()),
+    }
+    return out
+
+
 def _streaming_scenario(n, n_vms=32, n_hosts=8):
     """One Poisson-ish lane: n arrivals over an n/40 s horizon, uniform
     VM targets and lengths — the same workload materialized either as a
@@ -587,6 +720,16 @@ def main():
           f"_staging_overhead={bn['staging_overhead']:.2f}x"
           f"_staged={bn['staging']['transferred_mb']:.0f}MB"
           f"_done={bn['staging']['done']}")
+    bel = bench_elasticity()
+    results["elasticity"] = bel
+    ps = bel["policy_search"]
+    print(f"bench_elasticity,{ps['wall_s']*1e6:.0f},"
+          f"cells={ps['cells']}"
+          f"_cells_per_s={ps['cells_per_s']:.1f}"
+          f"_idle_overhead={bel['elastic_idle_overhead']:.2f}x"
+          f"_ups={bel['autoscaled']['ups']}"
+          f"_downs={bel['autoscaled']['downs']}"
+          f"_spot=${bel['autoscaled']['spot_cost']:.2f}")
     bs = bench_streaming()
     results["streaming"] = bs
     for n, tier in bs.items():

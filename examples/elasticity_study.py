@@ -1,0 +1,179 @@
+"""Elasticity study: SLA-driven autoscaling vs. a static fleet on diurnal load.
+
+The closed control loop (docs/elasticity.md) answers the operator's
+capacity question the window sweep in ``streaming_study.py`` only
+gestures at: instead of picking one fleet size for the whole day, a
+watermark autoscaler grows the fleet into the morning peak and drains
+it overnight, paying the spot market only for alive VM-seconds.
+
+  1. *Policy search*: one diurnal day (inhomogeneous Poisson arrivals,
+     the PR-7 thinned generator) is swept through a watermark x cooldown
+     x price-sensitivity grid in a single fused elastic batch
+     (``sweep.run_policy_search``), then reduced to a cost / SLA /
+     energy Pareto front against a peak-provisioned static fleet
+     (``experiments.run_elasticity_study``).
+  2. *Scale profile*: the best dominating policy replayed with a trace
+     (``engine.run_trace``) — ``telemetry.fleet_timeline`` shows the
+     scale-out stairs at the peak and the drain back to ``min_fleet``.
+  3. *Streamed lane*: the same control loop on a windowed arrival lane
+     (``engine.run_stream``), PR-7's streaming engine with the scaler on.
+
+    PYTHONPATH=src python examples/elasticity_study.py
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import experiments as X
+from repro.core import state as S
+from repro.core import engine, sweep, telemetry, workloads
+
+DAY = 120.0          # one compressed "day" (seconds)
+N_VMS = 12           # VM slots = the scale-out ceiling
+ALIVE0 = 3           # overnight fleet the autoscaler starts from
+SLA_FACTOR = 30.0    # allowed response stretch over dedicated service time
+
+
+def diurnal_scenario(seed, *, alive, spot=True):
+    """One diurnal day as a dense elastic lane.
+
+    Arrivals are sampled from the PR-7 diurnal generator and pre-routed
+    round-robin across all N_VMS slots (grouped by VM, FCFS submits —
+    the ``make_cloudlets`` invariant); only ``alive`` slots start
+    submitted, the rest are latent EMPTY capacity the autoscaler turns
+    on.  The spot track peaks mid-day, so scale-outs buy the expensive
+    hours and the overnight drain is what saves money.
+    """
+    from repro.data.synthetic import thinned_arrivals
+    rng = np.random.default_rng(seed)
+    rate = lambda t: workloads.diurnal_rate(t, base=0.4, peak=6.0,
+                                            period=DAY)
+    times = thinned_arrivals(rng, rate, DAY, 6.0).astype(np.float32)
+    n = times.shape[0]
+    # load-balanced routing: spread each arrival round-robin over only as
+    # many slots as the *current* rate warrants (rate x mean service /
+    # 60% target utilization), the way a front-end balancer tracks the
+    # fleet it expects to have — low slots overnight, all slots at peak.
+    # Then a *stable* group-by-vm so each cloudlet keeps its own arrival
+    # time and per-VM submits stay ascending (the make_cloudlets invariant).
+    svc = 0.9                       # mean service seconds at 1000 MIPS
+    target = np.clip(np.ceil(rate(times) * svc / 0.6),
+                     alive, N_VMS).astype(np.int64)
+    vm_rr = (np.arange(n) % target).astype(np.int32)
+    order = np.argsort(vm_rr, kind="stable")
+    vm, sub = vm_rr[order], times[order]
+    lens = rng.uniform(300.0, 1500.0, n).astype(np.float32)
+
+    hosts = S.make_uniform_hosts(4, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6,
+                                 idle_w=93.7, peak_w=135.0)
+    vms = S.make_vms([1] * N_VMS, [1000.0] * N_VMS, [512.0] * N_VMS,
+                     [100.0] * N_VMS, [1000.0] * N_VMS)
+    st = np.full(N_VMS, S.VM_EMPTY, np.int32)
+    st[:alive] = S.VM_PENDING
+    vms = dataclasses.replace(vms, state=jnp.asarray(st))
+    kw = {}
+    if spot:
+        kw = dict(spot_t=[0.0, 0.25 * DAY, 0.5 * DAY, 0.75 * DAY],
+                  spot_price=[0.010, 0.025, 0.040, 0.015])
+    scaler = S.make_autoscaler(util_high=0.75, util_low=0.25, cooldown=2.0,
+                               min_fleet=ALIVE0, max_fleet=N_VMS,
+                               scale_step=2, **kw)
+    return S.make_datacenter(hosts, vms, S.make_cloudlets(vm, lens, sub),
+                             vm_policy=S.SPACE_SHARED,
+                             task_policy=S.SPACE_SHARED, scaler=scaler)
+
+
+# ---------------------------------------------------------------------------
+# 1. Policy search -> Pareto front vs. the peak-provisioned static fleet
+# ---------------------------------------------------------------------------
+SEEDS = (7, 11, 13)
+batch = sweep.stack_scenarios([diurnal_scenario(s, alive=ALIVE0)
+                               for s in SEEDS])
+static = sweep.stack_scenarios([
+    dataclasses.replace(
+        d, vms=dataclasses.replace(
+            d.vms, state=jnp.full((N_VMS,), S.VM_PENDING, jnp.int32)),
+        scaler=dataclasses.replace(d.scaler, enabled=jnp.int32(0)))
+    for d in (diurnal_scenario(s, alive=ALIVE0) for s in SEEDS)])
+
+grid = sweep.policy_points(util_highs=(0.6, 0.75, 0.9),
+                           util_lows=(0.2, 0.35),
+                           cooldowns=(1.0, 4.0),
+                           price_sensitivities=(0.0, 0.03))
+study = X.run_elasticity_study(batch, grid, static_batch=static,
+                               sla_factor=SLA_FACTOR, max_steps=65_536)
+
+P = study.cost.shape[0]
+s_cost = float(jnp.sum(study.static_cost))
+s_sla = int(jnp.sum(study.static_sla))
+s_energy = float(jnp.sum(study.static_energy_j))
+print(f"# policy search: {P} autoscaler points x {len(SEEDS)} diurnal days"
+      f" in one fused elastic batch")
+print(f"# static fleet ({N_VMS} VMs all day): cost=${s_cost:.2f}"
+      f" sla_violations={s_sla} energy={s_energy / 1e3:.1f}kJ")
+print("util_high,util_low,cooldown_s,price_sens,cost_$,sla,energy_kJ,"
+      "scale_ups,scale_downs,pareto,beats_static")
+dominating = []
+for p in range(P):
+    cost = float(study.cost[p])
+    sla = int(study.sla[p])
+    ups = int(jnp.sum(study.summary.n_scale_up[p]))
+    downs = int(jnp.sum(study.summary.n_scale_down[p]))
+    beats = cost < s_cost and sla <= s_sla
+    if beats:
+        dominating.append(p)
+    print(f"{float(grid.util_high[p]):.2f},{float(grid.util_low[p]):.2f},"
+          f"{float(grid.cooldown[p]):.0f},"
+          f"{float(grid.price_sensitivity[p]):.3f},"
+          f"{cost:.2f},{sla},{float(study.energy_j[p]) / 1e3:.1f},"
+          f"{ups},{downs},{bool(study.pareto[p])},{beats}")
+
+assert dominating, "no autoscaling policy dominated the static fleet"
+best = min(dominating, key=lambda p: float(study.cost[p]))
+print(f"\n# {len(dominating)}/{P} policies strictly beat the static fleet on"
+      f" cost at equal-or-better SLA; best: util_high="
+      f"{float(grid.util_high[best]):.2f} util_low="
+      f"{float(grid.util_low[best]):.2f} cooldown="
+      f"{float(grid.cooldown[best]):.0f}s -> ${float(study.cost[best]):.2f}"
+      f" ({(1.0 - float(study.cost[best]) / s_cost) * 100.0:.0f}% saved)")
+
+# ---------------------------------------------------------------------------
+# 2. The best policy's scale profile (fleet + spot-spend timelines)
+# ---------------------------------------------------------------------------
+dc = diurnal_scenario(SEEDS[0], alive=ALIVE0)
+dc = dataclasses.replace(dc, scaler=dataclasses.replace(
+    dc.scaler,
+    util_high=jnp.float32(grid.util_high[best]),
+    util_low=jnp.float32(grid.util_low[best]),
+    cooldown=jnp.float32(grid.cooldown[best]),
+    scale_step=jnp.int32(grid.scale_step[best]),
+    price_sensitivity=jnp.float32(grid.price_sensitivity[best])))
+out, trace = engine.run_trace(dc, num_steps=4096)
+t, fleet = telemetry.fleet_timeline(trace)
+_, spend = telemetry.spot_cost_timeline(trace)
+print(f"\n# scale profile, day seed {SEEDS[0]} (fleet over the day;"
+      f" {int(out.scaler.up_count)} ups, {int(out.scaler.down_count)} downs):")
+marks = np.linspace(0.0, float(t[-1]), 13)[1:]
+for m in marks:
+    i = int(np.searchsorted(t, m, side="right")) - 1
+    if i < 0:
+        continue
+    print(f"  t={m:5.1f}s  fleet={int(fleet[i]):2d} "
+          f"{'#' * int(fleet[i])}  spot=${float(spend[i]):.2f}")
+
+# ---------------------------------------------------------------------------
+# 3. The same loop on a streamed (windowed) lane
+# ---------------------------------------------------------------------------
+stream = workloads.diurnal_stream(21, ALIVE0, base_rate=0.4, peak_rate=4.0,
+                                  period=DAY, horizon=DAY,
+                                  length_mi=(300.0, 1500.0), chunk=64)
+base = diurnal_scenario(23, alive=ALIVE0)
+sdc = dataclasses.replace(base, cloudlets=S.make_window(16))
+s_out, s_stats, _ = engine.run_stream(sdc, stream)
+print(f"\n# streamed lane (window 16, scaler on): "
+      f"retired={int(s_stats.stats.n_retired)} "
+      f"ups={int(s_out.scaler.up_count)} downs={int(s_out.scaler.down_count)}"
+      f" spot=${float(s_out.scaler.spot_cost):.2f}"
+      f" makespan={float(s_stats.stats.makespan):.0f}s")

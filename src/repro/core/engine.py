@@ -45,9 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, migration, network, scheduling
+from repro.core import energy, market, migration, network, scheduling
 from repro.core.network import wants_network
-from repro.core.provisioning import FIRST_FIT, provision_pending
+from repro.core.provisioning import (FIRST_FIT, alive_fleet, alive_mask,
+                                     provision_pending)
 from repro.core.state import (
     CL_CREATED,
     CL_DONE,
@@ -75,7 +76,8 @@ from repro.core.state import (
 
 __all__ = ["step", "run", "run_trace", "batched_run", "run_stream",
            "StepRecord", "StreamChunkRecord", "apply_due_events",
-           "wants_dynamic", "wants_network"]
+           "apply_autoscaler", "wants_dynamic", "wants_network",
+           "wants_elastic"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
 
@@ -101,6 +103,8 @@ class StepRecord(NamedTuple):
     n_flows: jnp.ndarray       # i32[] transfers drawing bandwidth during step
     n_events: jnp.ndarray      # i32[] events committed by this step (>= 1;
     #                                  > 1 when the horizon leap fired)
+    fleet: jnp.ndarray         # i32[] alive (PENDING|ACTIVE) VMs *after* step
+    spot_cost: jnp.ndarray     # f32[] cumulative spot spend *after* the step
 
 
 def _hit(n: int, idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -149,7 +153,7 @@ def apply_due_events(dc: DatacenterState) -> DatacenterState:
 
     # ---- 1. VM destroys ---------------------------------------------------
     destroy = (_hit(nv, tv, due_v & (ev_k == EV_VM_DESTROY))
-               & ((vms.state == VM_PENDING) | (vms.state == VM_ACTIVE)))
+               & alive_mask(vms))
     returning = destroy & (vms.state == VM_ACTIVE) & (vms.host >= 0)
     hclip = jnp.clip(vms.host, 0, nh - 1)
     w = returning.astype(jnp.float32)
@@ -210,6 +214,103 @@ def apply_due_events(dc: DatacenterState) -> DatacenterState:
             create_time=vm_create_t, mig_remaining=mig_rem),
         cloudlets=dataclasses.replace(cl, state=cl_state),
         event_fired=dc.event_fired | due,
+    )
+
+
+def apply_autoscaler(dc: DatacenterState) -> DatacenterState:
+    """One closed-loop evaluation of the autoscaler (docs/elasticity.md).
+
+    Runs between the dynamic-event pass and provisioning, mirroring the
+    oracle's loop position.  Fleet utilization is the integer ratio of
+    busy ACTIVE VMs (>= 1 runnable-now cloudlet) over alive (PENDING |
+    ACTIVE) VMs; outside the cooldown window, ``util > util_high`` flips
+    up to ``scale_step`` lowest-index ``VM_EMPTY`` slots to
+    ``VM_PENDING`` (their build-time ``submit_time`` is left untouched —
+    the provisioner's lexsort keys stay loop-invariant, ROADMAP landmine
+    #2) and ``util < util_low`` destroys up to ``scale_step``
+    highest-index *drained* VMs (alive, no unfinished cloudlet assigned,
+    not mid-migration) with exact ``EV_VM_DESTROY`` semantics.  A spot
+    track with ``price_sensitivity > 0`` vetoes scale-ups while the
+    current price exceeds the sensitivity.  Actions fire only while any
+    ``CL_CREATED`` cloudlet exists, so a quiesced lane is a bit-exact
+    fixed point (post-quiescence scan steps stay no-ops).  With no
+    action due this whole pass is a bit-exact identity.
+    """
+    hosts, vms, cl = dc.hosts, dc.vms, dc.cloudlets
+    sc = dc.scaler
+    nv = vms.req_pes.shape[0]
+    nh = hosts.num_pes.shape[0]
+
+    alive = alive_mask(vms)
+    fleet = alive_fleet(vms)
+    owner = jnp.clip(cl.vm, 0, nv - 1)
+    assigned = (cl.state == CL_CREATED) & (cl.vm >= 0)
+    n_assigned = jax.ops.segment_sum(assigned.astype(jnp.int32), owner,
+                                     num_segments=nv)
+    current = assigned & (cl.submit_time <= dc.time) & (cl.remaining > 0.0)
+    n_current = jax.ops.segment_sum(current.astype(jnp.int32), owner,
+                                    num_segments=nv)
+    busy = (vms.state == VM_ACTIVE) & (n_current > 0)
+    # integer ratio — engine f32 and oracle f64 round the same small-int
+    # quotients identically for watermark comparisons on coarse grids
+    util = (jnp.sum(busy.astype(jnp.int32)).astype(jnp.float32)
+            / jnp.maximum(fleet, 1).astype(jnp.float32))
+    work_exists = jnp.any(cl.state == CL_CREATED)
+    ready = (dc.time - sc.last_action) >= sc.cooldown
+    price = market.spot_price_at(sc, dc.time)
+    price_ok = ((sc.spot_enabled == 0) | (sc.price_sensitivity <= 0.0)
+                | (price <= sc.price_sensitivity))
+    want_up = (work_exists & ready & (util > sc.util_high)
+               & (fleet < sc.max_fleet) & price_ok)
+    want_down = (~want_up & work_exists & ready & (util < sc.util_low)
+                 & (fleet > sc.min_fleet))
+
+    # ---- scale-up: lowest-index EMPTY slots -> PENDING --------------------
+    empty = vms.state == VM_EMPTY
+    up_quota = jnp.minimum(sc.scale_step, sc.max_fleet - fleet)
+    create = (want_up & empty
+              & (jnp.cumsum(empty.astype(jnp.int32)) <= up_quota))
+    n_up = jnp.sum(create.astype(jnp.int32))
+
+    # ---- scale-down: highest-index drained VMs, EV_VM_DESTROY semantics ---
+    drained = alive & (n_assigned == 0) & (vms.mig_remaining <= 0.0)
+    down_quota = jnp.minimum(sc.scale_step, fleet - sc.min_fleet)
+    rank_hi = jnp.cumsum(drained.astype(jnp.int32)[::-1])[::-1]
+    destroy = want_down & drained & (rank_hi <= down_quota)
+    n_down = jnp.sum(destroy.astype(jnp.int32))
+
+    returning = destroy & (vms.state == VM_ACTIVE) & (vms.host >= 0)
+    hclip = jnp.clip(vms.host, 0, nh - 1)
+    w = returning.astype(jnp.float32)
+    give = lambda pool, x: pool.at[hclip].add(w * x)
+    reserve = jnp.where(dc.reserve_pes == 1,
+                        vms.req_pes.astype(jnp.float32), 0.0)
+    vm_state = jnp.where(destroy, VM_DESTROYED,
+                         jnp.where(create, VM_PENDING, vms.state))
+    vm_host = jnp.where(destroy, -1, vms.host)
+    mig_rem = jnp.where(destroy, 0.0, vms.mig_remaining)
+    # drained VMs carry no unfinished cloudlets, so this cancel is a
+    # no-op — kept verbatim from apply_due_events for exact mirroring
+    cancel = (cl.state == CL_CREATED) & (cl.vm >= 0) & destroy[owner]
+    cl_state = jnp.where(cancel, CL_FAILED, cl.state)
+
+    acted = (n_up + n_down) > 0
+    return dataclasses.replace(
+        dc,
+        hosts=dataclasses.replace(
+            hosts,
+            free_ram=give(hosts.free_ram, vms.ram),
+            free_bw=give(hosts.free_bw, vms.bw),
+            free_storage=give(hosts.free_storage, vms.size),
+            free_pes=give(hosts.free_pes, reserve)),
+        vms=dataclasses.replace(vms, state=vm_state, host=vm_host,
+                                mig_remaining=mig_rem),
+        cloudlets=dataclasses.replace(cl, state=cl_state),
+        scaler=dataclasses.replace(
+            sc,
+            last_action=jnp.where(acted, dc.time, sc.last_action),
+            up_count=sc.up_count + n_up,
+            down_count=sc.down_count + n_down),
     )
 
 
@@ -310,7 +411,8 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
                  rates: jnp.ndarray, active, dt_arr, dt_other, arrive,
                  trig_next, mig_done, budget, horizon,
                  next_arrival=None, *,
-                 dynamic: bool, networked: bool, streaming: bool = False
+                 dynamic: bool, networked: bool, streaming: bool = False,
+                 elastic: bool = False
                  ) -> tuple[DatacenterState, jnp.ndarray]:
     """Commit further queued events cheaply while no decision can intervene.
 
@@ -359,6 +461,11 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
                     & ~jnp.any(loaded & (util > new.mig_threshold))))
     if networked:
         gate &= new.net.enabled == 0
+    if elastic:
+        # the autoscaler evaluates at every event and spot boundaries are
+        # events of their own — both are decision points, so enabled
+        # elastic lanes never leap (disabled ones still do)
+        gate &= (new.scaler.enabled == 0) & (new.scaler.spot_enabled == 0)
     budget = (jnp.int32(2 ** 30) if budget is None
               else jnp.asarray(budget, jnp.int32))
     horizon = (jnp.float32(INF) if horizon is None
@@ -446,7 +553,8 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
 
 
 def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
-         dynamic: bool = True, networked: bool = False, leap: bool = False,
+         dynamic: bool = True, networked: bool = False,
+         elastic: bool = False, leap: bool = False,
          leap_budget=None, leap_horizon=None,
          streaming: bool = False, next_arrival=None
          ) -> tuple[DatacenterState, StepRecord]:
@@ -476,10 +584,14 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     committed; compute-finished cloudlets under an enabled topology arm
     their output transfer instead of completing.
 
-    ``dynamic`` and ``networked`` are *static* flags: False compiles the
-    pre-dynamic / pre-network program for scenarios that carry neither —
-    the public runners auto-detect via ``wants_dynamic`` /
-    ``wants_network``.
+    ``dynamic``, ``networked``, and ``elastic`` are *static* flags: False
+    compiles the pre-dynamic / pre-network / pre-elastic program for
+    scenarios that carry none of them — the public runners auto-detect
+    via ``wants_dynamic`` / ``wants_network`` / ``wants_elastic``.
+    ``elastic`` adds the closed-loop pass (``apply_autoscaler``, between
+    the event pass and provisioning so scale-ups provision in the same
+    instant), spot-segment boundaries as absolute arrival events, and
+    the exact spot accrual ``spot_cost += price(t) * fleet * dt``.
 
     ``streaming`` (static, ``run_stream`` lanes only): the cloudlet axis
     is a recycled active-slot *window*, so (a) the space-shared FCFS rank
@@ -503,6 +615,9 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         due_any = jnp.any((~dc.event_fired) & (ev_k != EV_NONE)
                           & (dc.events[:, 0] <= dc.time))
         dc = jax.lax.cond(due_any, apply_due_events, lambda d: d, dc)
+    if elastic:
+        dc = jax.lax.cond(dc.scaler.enabled == 1, apply_autoscaler,
+                          lambda d: d, dc)
     pending_due = jnp.any((dc.vms.state == VM_PENDING)
                           & (dc.vms.submit_time <= dc.time))
     dc = jax.lax.cond(pending_due,
@@ -561,6 +676,12 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         # slot first and the driver's admission pass picks it up
         arrive = jnp.minimum(arrive, jnp.where(next_arrival > dc.time,
                                                next_arrival, INF))
+    if elastic:
+        # spot-segment boundaries are absolute arrivals (exact f32 table
+        # values), so the piecewise-constant accrual below is exact;
+        # INF while the track is disabled, leaving ``arrive`` untouched
+        arrive = jnp.minimum(arrive,
+                             market.next_spot_boundary(dc.scaler, dc.time))
     dt_arr = jnp.where(arrive < INF, arrive - dc.time, INF)
     dt = jnp.minimum(dt_other, dt_arr)
     active = dt < INF
@@ -658,6 +779,17 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
                                       jnp.maximum(mig - dt, 0.0), mig))
         vms = dataclasses.replace(vms, mig_remaining=mig_rem)
 
+    scaler = dc.scaler
+    if elastic:
+        # spot spend: price and alive fleet are constant on [time, time+dt)
+        # (fleet only changes inside the passes above), so price * fleet *
+        # dt is the exact integral — like energy.  Zero-price when the
+        # track is disabled, so the accrual is a bit-exact identity then.
+        spot_rate = (market.spot_price_at(scaler, dc.time)
+                     * alive_fleet(dc.vms).astype(jnp.float32))
+        scaler = dataclasses.replace(
+            scaler, spot_cost=scaler.spot_cost + spot_rate * dt)
+
     new = dataclasses.replace(
         dc,
         hosts=dataclasses.replace(dc.hosts, energy_j=energy_j),
@@ -669,6 +801,7 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         acct=dataclasses.replace(dc.acct, cpu_cost=cpu_cost, bw_cost=bw_cost),
         time=t_next,
         net_transferred_mb=transferred_mb,
+        scaler=scaler,
     )
 
     n_events = active.astype(jnp.int32)
@@ -679,7 +812,8 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
             mig_done if dynamic else None,
             leap_budget, leap_horizon,
             next_arrival if streaming else None,
-            dynamic=dynamic, networked=networked, streaming=streaming)
+            dynamic=dynamic, networked=networked, streaming=streaming,
+            elastic=elastic)
         n_events = n_events + extra
 
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
@@ -700,6 +834,8 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         n_flows=(jnp.sum((frates > 0.0).astype(jnp.int32)) if networked
                  else jnp.int32(0)),
         n_events=n_events,
+        fleet=alive_fleet(new.vms),
+        spot_cost=new.scaler.spot_cost,
     )
     return new, rec
 
@@ -719,11 +855,25 @@ def wants_dynamic(dc: DatacenterState) -> bool:
         return True
 
 
+def wants_elastic(dc: DatacenterState) -> bool:
+    """True when the scenario carries an enabled autoscaler or spot track.
+    Host-side dispatch helper like ``wants_dynamic`` — on traced inputs
+    it conservatively answers True.  Accepts unbatched and batched
+    states (the fields are scalars / [B] vectors either way)."""
+    try:
+        sc = dc.scaler
+        return (bool(np.any(np.asarray(sc.enabled) != 0))
+                or bool(np.any(np.asarray(sc.spot_enabled) != 0)))
+    except Exception:           # tracer — cannot inspect; take the safe path
+        return True
+
+
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked", "leap"))
+                                   "dynamic", "networked", "elastic",
+                                   "leap"))
 def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
          provision_policy: int, dynamic: bool,
-         networked: bool, leap: bool) -> DatacenterState:
+         networked: bool, elastic: bool, leap: bool) -> DatacenterState:
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
     def cond(carry):
@@ -733,7 +883,8 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
     def body(carry):
         dc, n, _ = carry
         new, rec = step(dc, provision_policy=provision_policy,
-                        dynamic=dynamic, networked=networked, leap=leap,
+                        dynamic=dynamic, networked=networked,
+                        elastic=elastic, leap=leap,
                         leap_budget=jnp.int32(max_steps) - n - 1,
                         leap_horizon=horizon)
         return new, n + rec.n_events, rec.active
@@ -747,6 +898,7 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         horizon: float = float("inf"), provision_policy: int = FIRST_FIT,
         dynamic: bool | None = None,
         networked: bool | None = None,
+        elastic: bool | None = None,
         leap: bool | None = None) -> DatacenterState:
     """Run the simulation to quiescence with ``lax.while_loop``.
 
@@ -769,21 +921,25 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         dynamic = wants_dynamic(dc)
     if networked is None:
         networked = wants_network(dc)
+    if elastic is None:
+        elastic = wants_elastic(dc)
     if leap is None:
         leap = _LEAP_DEFAULT
     return _run(dc, max_steps=max_steps, horizon=horizon,
                 provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked, leap=leap)
+                networked=networked, elastic=elastic, leap=leap)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "provision_policy",
-                                   "dynamic", "networked"))
+                                   "dynamic", "networked", "elastic"))
 def _run_trace(dc: DatacenterState, *, num_steps: int,
-               provision_policy: int, dynamic: bool, networked: bool
+               provision_policy: int, dynamic: bool, networked: bool,
+               elastic: bool
                ) -> tuple[DatacenterState, StepRecord]:
     def body(dc, _):
         new, rec = step(dc, provision_policy=provision_policy,
-                        dynamic=dynamic, networked=networked)
+                        dynamic=dynamic, networked=networked,
+                        elastic=elastic)
         return new, rec
 
     return jax.lax.scan(body, dc, None, length=num_steps)
@@ -792,7 +948,8 @@ def _run_trace(dc: DatacenterState, *, num_steps: int,
 def run_trace(dc: DatacenterState, *, num_steps: int,
               provision_policy: int = FIRST_FIT,
               dynamic: bool | None = None,
-              networked: bool | None = None
+              networked: bool | None = None,
+              elastic: bool | None = None
               ) -> tuple[DatacenterState, StepRecord]:
     """Run exactly ``num_steps`` events via ``lax.scan``, keeping telemetry.
 
@@ -805,9 +962,11 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
         dynamic = wants_dynamic(dc)
     if networked is None:
         networked = wants_network(dc)
+    if elastic is None:
+        elastic = wants_elastic(dc)
     return _run_trace(dc, num_steps=num_steps,
                       provision_policy=provision_policy, dynamic=dynamic,
-                      networked=networked)
+                      networked=networked, elastic=elastic)
 
 
 def _lane_dynamic(batch: DatacenterState) -> jnp.ndarray:
@@ -823,12 +982,20 @@ def _lane_dynamic(batch: DatacenterState) -> jnp.ndarray:
     return lane
 
 
+def _lane_elastic(batch: DatacenterState) -> jnp.ndarray:
+    """bool[L] — lanes carrying an enabled autoscaler or spot track.
+    Constant over the run (the flags never change), hence monotone."""
+    return ((jnp.asarray(batch.scaler.enabled) == 1)
+            | (jnp.asarray(batch.scaler.spot_enabled) == 1))
+
+
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked", "leap"))
+                                   "dynamic", "networked", "elastic",
+                                   "leap"))
 def batched_run(batch: DatacenterState, *, max_steps: int,
                 horizon: float = float("inf"),
                 provision_policy: int = FIRST_FIT, dynamic: bool = True,
-                networked: bool = False,
+                networked: bool = False, elastic: bool = False,
                 leap: bool = _LEAP_DEFAULT) -> DatacenterState:
     """Run a batched state (leading lane axis) to quiescence.
 
@@ -849,43 +1016,43 @@ def batched_run(batch: DatacenterState, *, max_steps: int,
     hor = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
     lanes = batch.time.shape[0]
 
-    def _vstep(dyn: bool, net: bool):
+    def _vstep(dyn: bool, net: bool, ela: bool):
         def one(d, bud):
             return step(d, provision_policy=provision_policy, dynamic=dyn,
-                        networked=net, leap=leap, leap_budget=bud,
-                        leap_horizon=hor)
+                        networked=net, elastic=ela, leap=leap,
+                        leap_budget=bud, leap_horizon=hor)
         return lambda op: jax.vmap(one)(op[0], op[1])
-
-    variants = [(dyn, net)
-                for dyn in ([True, False] if dynamic else [False])
-                for net in ([True, False] if networked else [False])]
 
     def body(carry):
         b, n, alive = carry
         live = alive & (n < max_steps) & (b.time < hor)
         bud = jnp.int32(max_steps) - n - 1
         op = (b, bud)
-        if len(variants) == 1:
-            new, rec = _vstep(*variants[0])(op)
+        if not (dynamic or networked or elastic):
+            new, rec = _vstep(False, False, False)(op)
         else:
-            need_d = (jnp.any(live & _lane_dynamic(b)) if dynamic
-                      else jnp.bool_(False))
-            need_n = (jnp.any(live & (b.net.enabled == 1)) if networked
-                      else jnp.bool_(False))
-            if dynamic and networked:
-                new, rec = jax.lax.cond(
-                    need_d,
-                    lambda o: jax.lax.cond(need_n, _vstep(True, True),
-                                           _vstep(True, False), o),
-                    lambda o: jax.lax.cond(need_n, _vstep(False, True),
-                                           _vstep(False, False), o),
-                    op)
-            elif dynamic:
-                new, rec = jax.lax.cond(need_d, _vstep(True, False),
-                                        _vstep(False, False), op)
-            else:
-                new, rec = jax.lax.cond(need_n, _vstep(False, True),
-                                        _vstep(False, False), op)
+            # nested binary dispatch over the *active* static dimensions:
+            # each per-step predicate reduces over live lanes, picking the
+            # cheapest step variant still exact for every live lane
+            need = {}
+            if dynamic:
+                need["dyn"] = jnp.any(live & _lane_dynamic(b))
+            if networked:
+                need["net"] = jnp.any(live & (b.net.enabled == 1))
+            if elastic:
+                need["ela"] = jnp.any(live & _lane_elastic(b))
+
+            def dispatch(names, flags):
+                if not names:
+                    return _vstep(flags.get("dyn", False),
+                                  flags.get("net", False),
+                                  flags.get("ela", False))
+                name, rest = names[0], names[1:]
+                on = dispatch(rest, {**flags, name: True})
+                off = dispatch(rest, {**flags, name: False})
+                return lambda o: jax.lax.cond(need[name], on, off, o)
+
+            new, rec = dispatch(list(need), {})(op)
         # freeze finished lanes — the batching rule vmap applies to
         # while_loop, replicated here leaf by leaf
         sel = lambda a, o: jnp.where(
@@ -1061,7 +1228,7 @@ def _admit_due(dc: DatacenterState, st: StreamState, chunk
 
 def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
                  *, provision_policy: int, dynamic: bool, networked: bool,
-                 leap: bool, max_steps_per_chunk: int
+                 elastic: bool, leap: bool, max_steps_per_chunk: int
                  ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
     """lax.scan over arrival chunks: admit -> step until the chunk drains.
 
@@ -1109,7 +1276,8 @@ def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
 
             def _step(d_):
                 return step(d_, provision_policy=provision_policy,
-                            dynamic=dynamic, networked=networked, leap=leap,
+                            dynamic=dynamic, networked=networked,
+                            elastic=elastic, leap=leap,
                             leap_budget=(jnp.int32(max_steps_per_chunk)
                                          - n - 1),
                             streaming=True, next_arrival=nxt)
@@ -1121,7 +1289,8 @@ def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
                     utilization=jnp.float32(0.0), watts=jnp.float32(0.0),
                     active=jnp.bool_(False), n_migrating=z, migrations=z,
                     hosts_down=z, transferred_mb=jnp.float32(0.0),
-                    n_flows=z, n_events=z)
+                    n_flows=z, n_events=z, fleet=z,
+                    spot_cost=jnp.float32(0.0))
                 return d_, rec
 
             new, rec = jax.lax.cond(go, _step, _handoff, d)
@@ -1145,13 +1314,14 @@ def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
 
 
 _run_stream = jax.jit(_stream_core, static_argnames=(
-    "provision_policy", "dynamic", "networked", "leap",
+    "provision_policy", "dynamic", "networked", "elastic", "leap",
     "max_steps_per_chunk"))
 
 
 def run_stream(dc: DatacenterState, stream: ArrivalStream, *,
                reservoir: int = 64, provision_policy: int = FIRST_FIT,
                dynamic: bool | None = None, networked: bool | None = None,
+               elastic: bool | None = None,
                leap: bool | None = None, max_steps_per_chunk: int = 4096
                ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
     """Run a streamed-arrival scenario to quiescence (docs/streaming.md).
@@ -1174,10 +1344,13 @@ def run_stream(dc: DatacenterState, stream: ArrivalStream, *,
         dynamic = wants_dynamic(dc)
     if networked is None:
         networked = wants_network(dc)
+    if elastic is None:
+        elastic = wants_elastic(dc)
     if leap is None:
         leap = _LEAP_DEFAULT
     st = make_stream_state(stream, dc.vms.req_pes.shape[0],
                            dc.cloudlets.vm.shape[0], reservoir=reservoir)
     return _run_stream(dc, st, stream, provision_policy=provision_policy,
-                       dynamic=dynamic, networked=networked, leap=leap,
+                       dynamic=dynamic, networked=networked,
+                       elastic=elastic, leap=leap,
                        max_steps_per_chunk=max_steps_per_chunk)

@@ -38,7 +38,8 @@ from repro.core import sweep
 from repro.core.provisioning import FIRST_FIT
 
 __all__ = ["Provider", "UserFleet", "FederationStudy", "fleet_demand",
-           "build_study", "run_study"]
+           "build_study", "run_study", "sla_violations", "pareto_front",
+           "ElasticityStudy", "run_elasticity_study"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,7 +133,8 @@ def build_study(providers: Sequence[Provider],
                 mig_threshold: float = 0.8,
                 mig_energy_per_mb: float = 0.0,
                 latency=None, origin=None,
-                latency_weight: float = 0.0
+                latency_weight: float = 0.0,
+                spot=None, spot_horizon: float = 0.0
                 ) -> tuple[list[S.DatacenterState], jnp.ndarray,
                            cis.CisEntry]:
     """Route fleets across providers; build one datacenter scenario each.
@@ -149,7 +151,11 @@ def build_study(providers: Sequence[Provider],
     ``latency``/``origin``/``latency_weight`` opt into latency-aware
     routing: an f32[D, D] inter-provider latency matrix, each user's home
     region row, and the $-per-second exchange rate the broker scores with
-    (see ``federation.assign_users``).
+    (see ``federation.assign_users``).  ``spot`` (a ``market.SpotMarket``
+    with one row per provider) + ``spot_horizon`` switch to
+    spot-reactive cloudbursting: each provider's routing score gains its
+    forecast spot price (``federation.cloudburst_assign``), so burst
+    fleets land on the cheapest forecast provider with capacity.
     """
     bare = [S.make_datacenter(p.hosts, _empty_vms(), _empty_cloudlets(),
                               vm_policy=vm_policy, task_policy=task_policy,
@@ -161,9 +167,15 @@ def build_study(providers: Sequence[Provider],
             for p in providers]
     table = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[cis.register(d) for d in bare])
-    assignment = F.assign_users(table, fleet_demand(fleets),
-                                latency=latency, origin=origin,
-                                latency_weight=latency_weight)
+    if spot is not None:
+        assignment = F.cloudburst_assign(table, fleet_demand(fleets), spot,
+                                         horizon=spot_horizon,
+                                         latency=latency, origin=origin,
+                                         latency_weight=latency_weight)
+    else:
+        assignment = F.assign_users(table, fleet_demand(fleets),
+                                    latency=latency, origin=origin,
+                                    latency_weight=latency_weight)
     assign_np = np.asarray(assignment)
 
     dcs = []
@@ -193,6 +205,7 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
               mig_policy: int = S.MIG_OFF, mig_threshold: float = 0.8,
               mig_energy_per_mb: float = 0.0,
               latency=None, origin=None, latency_weight: float = 0.0,
+              spot=None, spot_horizon: float = 0.0,
               mesh=None, sharded: bool | None = None) -> FederationStudy:
     """An arXiv:0907.4878-style inter-cloud policy study, end to end.
 
@@ -207,7 +220,8 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
     dcs, assignment, table = build_study(
         providers, fleets, reserve_pes=reserve_pes, mig_policy=mig_policy,
         mig_threshold=mig_threshold, mig_energy_per_mb=mig_energy_per_mb,
-        latency=latency, origin=origin, latency_weight=latency_weight)
+        latency=latency, origin=origin, latency_weight=latency_weight,
+        spot=spot, spot_horizon=spot_horizon)
     batch = sweep.stack_scenarios(dcs)
     final = sweep.run_grid(batch, vm_policies, task_policies,
                            max_steps=max_steps,
@@ -225,4 +239,129 @@ def run_study(providers: Sequence[Provider], fleets: Sequence[UserFleet],
         fed_energy_j=jnp.sum(summary.energy_j, axis=-1),
         fed_migrations=jnp.sum(summary.n_migrations, axis=-1),
         fed_transferred_mb=jnp.sum(summary.transferred_mb, axis=-1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop elasticity studies (docs/elasticity.md): the policy search
+# reduced to a cost / SLA / energy Pareto front against a static fleet.
+# ---------------------------------------------------------------------------
+def sla_violations(final: S.DatacenterState, *, factor: float = 2.0,
+                   include_unfinished: bool = False) -> jnp.ndarray:
+    """i32[...] — completed cloudlets whose response blew the SLA.
+
+    The SLA target for a cloudlet of L MI on a VM rated M MIPS is
+    ``factor * L / M`` (a response-ratio bound: ``factor`` = allowed
+    stretch over dedicated-PE service time).  Queueing delay from an
+    under-scaled fleet is exactly what stretches responses, so this is
+    the metric the autoscaler trades against cost.  Reduces the
+    trailing cloudlet axis; leading batch axes pass through.
+
+    ``include_unfinished=True`` additionally counts cloudlets still
+    CL_CREATED in the final state — work stranded on never-activated VM
+    slots (a too-timid autoscaler).  Without it a policy that strands
+    half its queue would look SLA-clean; elasticity studies should keep
+    it on.
+    """
+    cl, vms = final.cloudlets, final.vms
+    nv = vms.req_mips.shape[-1]
+    owner = jnp.clip(cl.vm, 0, nv - 1)
+    mips = jnp.take_along_axis(vms.req_mips, owner, axis=-1)
+    ideal = cl.length / jnp.maximum(mips, 1e-30)
+    done = cl.state == S.CL_DONE
+    resp = cl.finish_time - cl.submit_time
+    viol = done & (resp > jnp.float32(factor) * ideal)
+    if include_unfinished:
+        viol = viol | (cl.state == S.CL_CREATED)
+    return jnp.sum(viol.astype(jnp.int32), axis=-1)
+
+
+def pareto_front(points) -> np.ndarray:
+    """bool[N] — nondominated mask over rows of an [N, K] objective table.
+
+    All objectives minimize.  A row is dominated when another row is <=
+    everywhere and < somewhere; duplicates of a front point stay on the
+    front.  Host-side NumPy (N is the policy-grid size).
+    """
+    pts = np.asarray(points, np.float64)
+    if pts.ndim != 2:
+        raise ValueError(f"expected [N, K] objectives, got {pts.shape}")
+    n = pts.shape[0]
+    mask = np.ones(n, bool)
+    for i in range(n):
+        dominated = (np.all(pts <= pts[i], axis=1)
+                     & np.any(pts < pts[i], axis=1))
+        if dominated.any():
+            mask[i] = False
+    return mask
+
+
+class ElasticityStudy(NamedTuple):
+    """``run_elasticity_study`` results.
+
+    P = policy points, B = scenarios.  ``cost`` is spot spend + market
+    bill summed across scenarios; ``pareto`` marks the nondominated
+    points of the (cost, SLA violations, energy) trade-off.
+    """
+    grid: sweep.PolicyGrid        # the P searched points
+    final: S.DatacenterState      # final states, leaves [P, B, ...]
+    summary: sweep.SweepSummary   # per-cell scalars, leaves [P, B]
+    sla: jnp.ndarray              # i32[P] SLA violations across scenarios
+    cost: jnp.ndarray             # f32[P] spot + market $ across scenarios
+    energy_j: jnp.ndarray         # f32[P] joules across scenarios
+    pareto: np.ndarray            # bool[P] nondominated points
+    static_summary: sweep.SweepSummary  # static-fleet baseline, leaves [B]
+    static_sla: jnp.ndarray       # i32[] baseline SLA violations
+    static_cost: jnp.ndarray      # f32[] baseline spot + market $
+    static_energy_j: jnp.ndarray  # f32[] baseline joules
+
+
+def run_elasticity_study(batch: S.DatacenterState, grid: sweep.PolicyGrid,
+                         *, static_batch: S.DatacenterState | None = None,
+                         sla_factor: float = 2.0,
+                         include_unfinished: bool = True,
+                         max_steps: int = 1_000_000,
+                         provision_policy: int = FIRST_FIT,
+                         mesh=None, partitioner: str = "auto"
+                         ) -> ElasticityStudy:
+    """Policy search -> Pareto front vs. a static fleet, in two calls.
+
+    Every (scenario, autoscaler-point) cell runs in one fused elastic
+    sweep (``sweep.run_policy_search``); the static baseline is the same
+    scenarios with the control loop off (``static_batch``, defaulting to
+    ``batch`` with the scaler disabled — pass a full-fleet variant to
+    compare against peak-provisioned capacity).  Spot accrual stays live
+    in the baseline: a static fleet pays the spot price for every alive
+    VM all run long, which is exactly the bill the autoscaler undercuts.
+    """
+    final = sweep.run_policy_search(batch, grid, max_steps=max_steps,
+                                    provision_policy=provision_policy,
+                                    mesh=mesh, partitioner=partitioner)
+    summary = sweep.summarize_batch(final)
+    sla = jnp.sum(sla_violations(final, factor=sla_factor,
+                                 include_unfinished=include_unfinished),
+                  axis=-1)
+    cost = jnp.sum(summary.total_cost + summary.spot_cost, axis=-1)
+    energy = jnp.sum(summary.energy_j, axis=-1)
+    front = pareto_front(np.stack([np.asarray(cost, np.float64),
+                                   np.asarray(sla, np.float64),
+                                   np.asarray(energy, np.float64)], axis=1))
+    if static_batch is None:
+        static_batch = dataclasses.replace(
+            batch, scaler=dataclasses.replace(
+                batch.scaler,
+                enabled=jnp.zeros_like(batch.scaler.enabled)))
+    sfinal = sweep.run_batch(static_batch, max_steps=max_steps,
+                             provision_policy=provision_policy)
+    ssum = sweep.summarize_batch(sfinal)
+    return ElasticityStudy(
+        grid=grid, final=final, summary=summary,
+        sla=sla, cost=cost, energy_j=energy, pareto=front,
+        static_summary=ssum,
+        static_sla=jnp.sum(
+            sla_violations(sfinal, factor=sla_factor,
+                           include_unfinished=include_unfinished),
+            axis=-1),
+        static_cost=jnp.sum(ssum.total_cost + ssum.spot_cost, axis=-1),
+        static_energy_j=jnp.sum(ssum.energy_j, axis=-1),
     )

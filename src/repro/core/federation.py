@@ -30,7 +30,8 @@ from repro.core import state as S
 from repro.core.engine import run
 from repro.core.provisioning import FIRST_FIT
 
-__all__ = ["UserDemand", "assign_users", "federated_run", "vmap_federation"]
+__all__ = ["UserDemand", "assign_users", "cloudburst_assign",
+           "federated_run", "vmap_federation"]
 
 
 class UserDemand(NamedTuple):
@@ -98,6 +99,29 @@ def assign_users(table: cis.CisEntry, demand: UserDemand, *,
     init = (table.free_pes, table.free_ram, table.free_storage)
     _, dcs = jax.lax.scan(body, init, jnp.arange(n_users))
     return dcs
+
+
+def cloudburst_assign(table: cis.CisEntry, demand: UserDemand,
+                      spot, *, horizon: float,
+                      latency: jnp.ndarray | None = None,
+                      origin: jnp.ndarray | None = None,
+                      latency_weight: float = 0.0) -> jnp.ndarray:
+    """Spot-reactive cloudbursting: route marginal load by forecast price.
+
+    The arXiv:0907.4878 burst scenario — when local capacity runs hot,
+    overflow fleets shop the federation by *spot* economics rather than
+    list price.  Each provider's score gains its time-averaged spot
+    price over ``[0, horizon]`` (``market.mean_spot_price``), so the
+    greedy FCFS broker (``assign_users``, including its latency-aware
+    WAN penalty) sends each burst to the cheapest forecast provider
+    with capacity.  ``spot`` is a ``market.SpotMarket`` whose provider
+    rows align with the CIS table rows.
+    """
+    from repro.core import market as M
+    bias = M.mean_spot_price(spot, horizon=horizon)
+    biased = table._replace(cost_per_cpu_sec=table.cost_per_cpu_sec + bias)
+    return assign_users(biased, demand, latency=latency, origin=origin,
+                        latency_weight=latency_weight)
 
 
 def _run_one(dc: S.DatacenterState, max_steps: int, policy: int):

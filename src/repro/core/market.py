@@ -14,11 +14,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import state as S
 
 __all__ = ["quote_vm", "quote_cloudlet", "bill_by_vm", "PricingPolicy",
-           "flat_rates", "tiered_cpu_rates"]
+           "flat_rates", "tiered_cpu_rates", "SpotMarket", "make_spot_market",
+           "spot_price_at", "next_spot_boundary", "mean_spot_price",
+           "cheapest_spot_provider"]
 
 
 def quote_vm(rates: S.MarketRates, *, ram: float, size: float) -> jnp.ndarray:
@@ -69,6 +72,107 @@ def bill_by_vm(dc: S.DatacenterState) -> jnp.ndarray:
                        dc.rates.cost_per_mem * vms.ram
                        + dc.rates.cost_per_storage * vms.size, 0.0)
     return cpu + bw + create
+
+
+# ---------------------------------------------------------------------------
+# Spot-price tracks (arXiv:0907.4878 market-oriented federation): per-provider
+# piecewise-constant price tables.  A track's per-datacenter row lives in
+# ``state.AutoscalerState`` (spot_t / spot_price); this module holds the
+# multi-provider tables and the price arithmetic shared by the engine's spot
+# accrual, the oracle mirror, and the cloudbursting broker.
+# ---------------------------------------------------------------------------
+class SpotMarket(NamedTuple):
+    """Piecewise-constant spot prices across D federated providers.
+
+    Segment ``i`` of provider ``d`` charges ``prices[d, i]`` $ per
+    alive-VM-second over ``[times[d, i], times[d, i+1])``; the last
+    segment extends forever.  Rows must start at 0 and strictly increase
+    (``make_spot_market`` pads ragged tracks with repeats of the final
+    segment, which is a no-op under the last-segment-extends rule).
+    """
+    times: jnp.ndarray      # f32[D, T] segment start times, row[0] = 0
+    prices: jnp.ndarray     # f32[D, T] $ per alive-VM-second
+
+
+def make_spot_market(tracks) -> SpotMarket:
+    """Build ``SpotMarket`` from per-provider ``(times, prices)`` pairs.
+
+    Host-side (NumPy): tracks may have ragged lengths; shorter tracks are
+    padded by extending their final segment.
+    """
+    if not tracks:
+        raise ValueError("need at least one provider track")
+    ts, ps = [], []
+    for times, prices in tracks:
+        t = np.asarray(times, np.float32).reshape(-1)
+        p = np.asarray(prices, np.float32).reshape(-1)
+        if t.shape != p.shape:
+            raise ValueError("times and prices must have equal length")
+        if t.shape[0] == 0 or t[0] != 0.0 or np.any(np.diff(t) <= 0.0):
+            raise ValueError("times must start at 0 and strictly increase")
+        ts.append(t)
+        ps.append(p)
+    width = max(t.shape[0] for t in ts)
+    pad_t = [np.concatenate([t, t[-1] + np.arange(1, width - t.shape[0] + 1,
+                                                  dtype=np.float32)])
+             for t in ts]
+    pad_p = [np.concatenate([p, np.full(width - p.shape[0], p[-1],
+                                        np.float32)]) for p in ps]
+    return SpotMarket(times=jnp.asarray(np.stack(pad_t)),
+                      prices=jnp.asarray(np.stack(pad_p)))
+
+
+def spot_price_at(scaler: S.AutoscalerState, time) -> jnp.ndarray:
+    """f32[] — current spot price of a lane's track (0 while disabled).
+
+    The active segment is the last one whose start time is <= ``time``;
+    both sides of the conformance contract evaluate the same comparison
+    on exact table values, so engine f32 and oracle f64 agree bitwise.
+    """
+    n = scaler.spot_t.shape[0]
+    idx = jnp.sum((scaler.spot_t <= time).astype(jnp.int32)) - 1
+    price = scaler.spot_price[jnp.clip(idx, 0, n - 1)]
+    return jnp.where(scaler.spot_enabled == 1, price, jnp.float32(0.0))
+
+
+def next_spot_boundary(scaler: S.AutoscalerState, time) -> jnp.ndarray:
+    """f32[] — earliest segment boundary strictly after ``time`` (INF if none).
+
+    Boundaries join the event queue as absolute arrival times so the
+    piecewise-constant accrual is exact between events.
+    """
+    nb = jnp.min(jnp.where(scaler.spot_t > time, scaler.spot_t, S.INF))
+    return jnp.where(scaler.spot_enabled == 1, nb, S.INF)
+
+
+def mean_spot_price(spot: SpotMarket, *, horizon: float) -> jnp.ndarray:
+    """f32[D] — time-averaged price of each provider over ``[0, horizon]``.
+
+    The broker's forecast signal for cloudbursting: exact integral of the
+    piecewise-constant track divided by the horizon.
+    """
+    t = jnp.minimum(spot.times, jnp.float32(horizon))
+    nxt = jnp.concatenate(
+        [t[:, 1:], jnp.full((t.shape[0], 1), jnp.float32(horizon))], axis=1)
+    seg = jnp.maximum(nxt - t, 0.0)
+    return jnp.sum(spot.prices * seg, axis=1) / jnp.maximum(
+        jnp.float32(horizon), 1e-30)
+
+
+def cheapest_spot_provider(spot: SpotMarket, *, horizon: float,
+                           latency_row=None, latency_weight: float = 0.0
+                           ) -> jnp.ndarray:
+    """i32[] — provider with the lowest forecast spot price.
+
+    ``latency_row`` (f32[D], seconds from the bursting user's region) and
+    ``latency_weight`` ($ per second) add the PR-5 broker's WAN-distance
+    penalty, so bursting trades price against locality.
+    """
+    score = mean_spot_price(spot, horizon=horizon)
+    if latency_row is not None:
+        score = score + jnp.float32(latency_weight) * jnp.asarray(
+            latency_row, jnp.float32)
+    return jnp.argmin(score).astype(jnp.int32)
 
 
 class PricingPolicy(NamedTuple):

@@ -49,7 +49,26 @@ ROUND_ROBIN = 3
 MOST_FULL = 4
 
 __all__ = ["FIRST_FIT", "BEST_FIT", "WORST_FIT", "ROUND_ROBIN",
-           "MOST_FULL", "provision_pending", "feasible_hosts"]
+           "MOST_FULL", "provision_pending", "feasible_hosts",
+           "alive_mask", "alive_fleet"]
+
+
+def alive_mask(vms) -> jnp.ndarray:
+    """bool[..., V] — VM slots the autoscaler counts as fleet members.
+
+    Alive = PENDING (submitted, awaiting placement) or ACTIVE (placed).
+    EMPTY slots are latent scale-up capacity; DESTROYED/FAILED slots have
+    left the fleet.  This is the membership rule shared by the watermark
+    utilization ratio, the fleet clamps, the spot accrual (alive VMs pay
+    the spot price even while pending — capacity is held either way), and
+    the ``StepRecord.fleet`` telemetry sample.
+    """
+    return (vms.state == VM_PENDING) | (vms.state == VM_ACTIVE)
+
+
+def alive_fleet(vms) -> jnp.ndarray:
+    """i32[...] — alive (PENDING | ACTIVE) VM count; see ``alive_mask``."""
+    return jnp.sum(alive_mask(vms).astype(jnp.int32), axis=-1)
 
 
 def feasible_hosts(dc: DatacenterState, free_ram, free_bw, free_storage,

@@ -62,7 +62,9 @@ __all__ = ["pad_scenario", "stack_scenarios", "run_batch", "run_grid",
            "run_grid_nested", "fuse_grid", "inert_lane", "pad_batch",
            "run_sharded", "policy_grid", "SweepSummary", "summarize_batch",
            "stack_streams", "run_stream_batch", "run_stream_grid",
-           "StreamSweepSummary", "summarize_stream"]
+           "StreamSweepSummary", "summarize_stream",
+           "PolicyGrid", "policy_points", "fuse_policies",
+           "run_policy_search"]
 
 
 # ---------------------------------------------------------------------------
@@ -80,12 +82,17 @@ def _pad_axis0(arr: jnp.ndarray, n: int, fill) -> jnp.ndarray:
 
 def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
                  n_vms: int | None = None, n_cloudlets: int | None = None,
-                 n_events: int | None = None) -> DatacenterState:
+                 n_events: int | None = None,
+                 n_spot: int | None = None) -> DatacenterState:
     """Grow a scenario to fixed entity capacities with inert padding.
 
     Padded event rows are all-zero (kind ``EV_NONE``) and unfired — the
     engine never applies them, so the event axis pads as inertly as the
-    entity axes.
+    entity axes.  Spot tables pad with *duplicates* of their final
+    segment: duplicates add no new boundaries (``spot_t > time`` yields
+    the same minimum) and leave the active-segment lookup's clipped
+    index pointing at the same price, so a padded spot lane replays its
+    unpadded trajectory event for event.
     """
     h, v, c = dc.hosts, dc.vms, dc.cloudlets
     nh = n_hosts if n_hosts is not None else h.num_pes.shape[0]
@@ -139,12 +146,18 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         net_remaining=_pad_axis0(c.net_remaining, nc, 0.0),
         net_lat=_pad_axis0(c.net_lat, nc, 0.0),
     )
+    sc = dc.scaler
+    ns = n_spot if n_spot is not None else sc.spot_t.shape[0]
     return dataclasses.replace(
         dc, hosts=hosts, vms=vms, cloudlets=cloudlets,
         events=_pad_axis0(dc.events, ne, 0.0),
         event_fired=_pad_axis0(dc.event_fired, ne, False),
         net=dataclasses.replace(
-            dc.net, cluster=_pad_axis0(dc.net.cluster, nh, 0)))
+            dc.net, cluster=_pad_axis0(dc.net.cluster, nh, 0)),
+        scaler=dataclasses.replace(
+            sc,
+            spot_t=_pad_axis0(sc.spot_t, ns, sc.spot_t[-1]),
+            spot_price=_pad_axis0(sc.spot_price, ns, sc.spot_price[-1])))
 
 
 def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
@@ -157,8 +170,9 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
     nv = max(d.vms.req_pes.shape[0] for d in dcs)
     nc = max(d.cloudlets.vm.shape[0] for d in dcs)
     ne = max(d.events.shape[0] for d in dcs)
+    ns = max(d.scaler.spot_t.shape[0] for d in dcs)
     padded = [pad_scenario(d, n_hosts=nh, n_vms=nv, n_cloudlets=nc,
-                           n_events=ne)
+                           n_events=ne, n_spot=ns)
               for d in dcs]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
 
@@ -168,19 +182,21 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
 # ---------------------------------------------------------------------------
 def _run_batch(batch: DatacenterState, *, max_steps: int,
                provision_policy: int, dynamic: bool,
-               networked: bool) -> DatacenterState:
+               networked: bool, elastic: bool = False) -> DatacenterState:
     # engine.batched_run == vmap(engine.run) lane for lane (bitwise), plus
-    # the dead-lane early-exit: the dynamic/networked passes switch off the
-    # moment no live lane needs them (tests/test_leap_parity.py).
+    # the dead-lane early-exit: the dynamic/networked/elastic passes switch
+    # off the moment no live lane needs them (tests/test_leap_parity.py).
     return engine.batched_run(batch, max_steps=max_steps,
                               provision_policy=provision_policy,
-                              dynamic=dynamic, networked=networked)
+                              dynamic=dynamic, networked=networked,
+                              elastic=elastic)
 
 
 def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
               provision_policy: int = FIRST_FIT,
               dynamic: bool | None = None,
-              networked: bool | None = None) -> DatacenterState:
+              networked: bool | None = None,
+              elastic: bool | None = None) -> DatacenterState:
     """vmap ``engine.run`` over a stacked scenario batch (one compiled call).
 
     Each lane runs to its own quiescence; lanes that finish early take
@@ -188,25 +204,29 @@ def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
     whole batch quiesces, so per-lane results are identical to single runs.
     ``dynamic=None`` auto-detects whether any lane carries events or a
     migration policy (``engine.wants_dynamic``); ``networked=None``
-    likewise auto-detects an enabled topology (``engine.wants_network``).
-    The whole batch then runs the dynamic/networked program — inert for
-    lanes without events or with a disabled topology.
+    likewise auto-detects an enabled topology (``engine.wants_network``);
+    ``elastic=None`` an enabled autoscaler or spot track
+    (``engine.wants_elastic``).  The whole batch then runs the
+    dynamic/networked/elastic program — inert for lanes without the
+    matching subsystem.
     """
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
+    if elastic is None:
+        elastic = engine.wants_elastic(batch)
     return _run_batch(batch, max_steps=max_steps,
                       provision_policy=provision_policy, dynamic=dynamic,
-                      networked=networked)
+                      networked=networked, elastic=elastic)
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked"))
+                                   "dynamic", "networked", "elastic"))
 def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                      task_policies: jnp.ndarray, *, max_steps: int,
-                     provision_policy: int, dynamic: bool, networked: bool
-                     ) -> DatacenterState:
+                     provision_policy: int, dynamic: bool, networked: bool,
+                     elastic: bool = False) -> DatacenterState:
     def one_policy(vp, tp):
         withp = dataclasses.replace(
             batch,
@@ -214,7 +234,8 @@ def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
             task_policy=jnp.broadcast_to(tp, batch.task_policy.shape))
         return _run_batch(withp, max_steps=max_steps,
                           provision_policy=provision_policy,
-                          dynamic=dynamic, networked=networked)
+                          dynamic=dynamic, networked=networked,
+                          elastic=elastic)
 
     return jax.vmap(one_policy)(jnp.asarray(vm_policies, jnp.int32),
                                 jnp.asarray(task_policies, jnp.int32))
@@ -224,7 +245,8 @@ def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                     task_policies: jnp.ndarray, *, max_steps: int = 1_000_000,
                     provision_policy: int = FIRST_FIT,
                     dynamic: bool | None = None,
-                    networked: bool | None = None) -> DatacenterState:
+                    networked: bool | None = None,
+                    elastic: bool | None = None) -> DatacenterState:
     """Reference grid runner: outer vmap over policies, inner over scenarios.
 
     The PR-1 implementation, kept as the differential baseline for the
@@ -235,10 +257,13 @@ def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
+    if elastic is None:
+        elastic = engine.wants_elastic(batch)
     return _run_grid_nested(batch, vm_policies, task_policies,
                             max_steps=max_steps,
                             provision_policy=provision_policy,
-                            dynamic=dynamic, networked=networked)
+                            dynamic=dynamic, networked=networked,
+                            elastic=elastic)
 
 
 def fuse_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
@@ -356,7 +381,7 @@ def _dispatch_cost(batch: DatacenterState) -> np.ndarray:
 
 def _dispatch_run(batch: DatacenterState, mesh, *, max_steps: int,
                   provision_policy: int, dynamic: bool, networked: bool,
-                  chunk: int = 4) -> DatacenterState:
+                  elastic: bool = False, chunk: int = 4) -> DatacenterState:
     """Sorted-chunk dispatch: per-call sharding without SPMD.
 
     Lanes are sorted by estimated cost (descending) and cut into
@@ -382,7 +407,7 @@ def _dispatch_run(batch: DatacenterState, mesh, *, max_steps: int,
             lambda x: jax.device_put(jnp.take(x, idx, axis=0), dev), batch)
         outs.append(engine.batched_run(
             sub, max_steps=max_steps, provision_policy=provision_policy,
-            dynamic=dynamic, networked=networked))
+            dynamic=dynamic, networked=networked, elastic=elastic))
     cat = jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate([jax.device_put(x, devs[0])
                                      for x in xs]), *outs)
@@ -397,7 +422,8 @@ def _default_inner() -> str:
 
 @lru_cache(maxsize=None)
 def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                    inner: str, dynamic: bool, networked: bool):
+                    inner: str, dynamic: bool, networked: bool,
+                    elastic: bool = False):
     """jit(shard_map(map-or-vmap(run))) for one (mesh, statics) combination.
 
     Cached so repeated sweeps with the same mesh reuse the compiled
@@ -419,7 +445,7 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
     def go(block: DatacenterState) -> DatacenterState:
         f = partial(engine.run, max_steps=max_steps,
                     provision_policy=provision_policy, dynamic=dynamic,
-                    networked=networked)
+                    networked=networked, elastic=elastic)
         if inner == "vmap":
             return jax.vmap(f)(block)
         return jax.lax.map(f, block)
@@ -429,7 +455,7 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
 
 @lru_cache(maxsize=None)
 def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                  dynamic: bool, networked: bool):
+                  dynamic: bool, networked: bool, elastic: bool = False):
     """jit(vmap(run)) with GSPMD in/out shardings over the lane axis.
 
     Same program as ``run_batch`` — XLA's automatic partitioner splits
@@ -441,7 +467,7 @@ def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
     shd = NamedSharding(mesh, P(axis))
     f = partial(engine.run, max_steps=max_steps,
                 provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked)
+                networked=networked, elastic=elastic)
     return jax.jit(jax.vmap(f), in_shardings=(shd,), out_shardings=shd)
 
 
@@ -451,7 +477,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
                 partitioner: str = "auto",
                 inner: str | None = None,
                 dynamic: bool | None = None,
-                networked: bool | None = None) -> DatacenterState:
+                networked: bool | None = None,
+                elastic: bool | None = None) -> DatacenterState:
     """``run_batch`` with the lane axis split across the devices of a mesh.
 
     ``mesh`` is a 1-D ``jax.sharding.Mesh`` (default: all local devices,
@@ -489,6 +516,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
+    if elastic is None:
+        elastic = engine.wants_elastic(batch)
     n_dev = mesh.shape[axis]
     partitioner = _resolve_partitioner(partitioner, n_dev=n_dev,
                                        dispatch_ok=True)
@@ -496,18 +525,19 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         # chunks need no divisibility padding — any lane count dispatches
         return _dispatch_run(batch, mesh, max_steps=max_steps,
                              provision_policy=provision_policy,
-                             dynamic=dynamic, networked=networked)
+                             dynamic=dynamic, networked=networked,
+                             elastic=elastic)
     have = batch.time.shape[0]
     lanes = -(-have // n_dev) * n_dev
     padded = pad_batch(batch, lanes)
     if partitioner == "gspmd":
-        out = _gspmd_runner(mesh, axis, max_steps,
-                            provision_policy, dynamic, networked)(padded)
+        out = _gspmd_runner(mesh, axis, max_steps, provision_policy,
+                            dynamic, networked, elastic)(padded)
     else:
         out = _sharded_runner(mesh, axis, max_steps, provision_policy,
                               inner if inner is not None
                               else _default_inner(), dynamic,
-                              networked)(padded)
+                              networked, elastic)(padded)
     if lanes == have:
         return out
     return jax.tree_util.tree_map(lambda x: x[:have], out)
@@ -516,7 +546,7 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
 @lru_cache(maxsize=None)
 def _grid_runner(mesh, max_steps: int, provision_policy: int,
                  partitioner: str, inner: str, dynamic: bool,
-                 networked: bool):
+                 networked: bool, elastic: bool = False):
     """One jitted fuse -> (shard) -> run -> reshape pipeline per config.
 
     The whole grid — policy broadcast, inert mesh padding, the flat lane
@@ -526,7 +556,8 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
     """
     run_lane = lambda dc: engine.run(dc, max_steps=max_steps,
                                      provision_policy=provision_policy,
-                                     dynamic=dynamic, networked=networked)
+                                     dynamic=dynamic, networked=networked,
+                                     elastic=elastic)
 
     def fn(batch, vm_policies, task_policies):
         n_pol = vm_policies.shape[0]
@@ -535,7 +566,8 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
         if mesh is None:
             out = engine.batched_run(fused, max_steps=max_steps,
                                      provision_policy=provision_policy,
-                                     dynamic=dynamic, networked=networked)
+                                     dynamic=dynamic, networked=networked,
+                                     elastic=elastic)
         else:
             axis = _lane_axis(mesh)
             n_dev = mesh.shape[axis]
@@ -566,7 +598,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
              sharded: bool | None = None,
              partitioner: str = "auto",
              dynamic: bool | None = None,
-             networked: bool | None = None) -> DatacenterState:
+             networked: bool | None = None,
+             elastic: bool | None = None) -> DatacenterState:
     """Scenarios x policy grid as ONE fused, device-sharded batch.
 
     ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
@@ -597,6 +630,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
+    if elastic is None:
+        elastic = engine.wants_elastic(batch)
     n_dev = mesh.shape[_lane_axis(mesh)] if mesh is not None else 1
     resolved = _resolve_partitioner(partitioner, n_dev=n_dev,
                                     dispatch_ok=mesh is not None)
@@ -607,12 +642,13 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         fused = fuse_grid(batch, vm_policies, task_policies)
         out = _dispatch_run(fused, mesh, max_steps=max_steps,
                             provision_policy=provision_policy,
-                            dynamic=dynamic, networked=networked)
+                            dynamic=dynamic, networked=networked,
+                            elastic=elastic)
         return jax.tree_util.tree_map(
             lambda x: x.reshape((n_pol, n_scen) + x.shape[1:]), out)
     return _grid_runner(mesh, max_steps, provision_policy, resolved,
-                        _default_inner(), dynamic,
-                        networked)(batch, vm_policies, task_policies)
+                        _default_inner(), dynamic, networked,
+                        elastic)(batch, vm_policies, task_policies)
 
 
 def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -620,6 +656,107 @@ def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
     vm_p = jnp.array([0, 0, 1, 1], jnp.int32)
     task_p = jnp.array([0, 1, 0, 1], jnp.int32)
     return vm_p, task_p
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler policy search — the fused sweep as an optimizer: thousands of
+# (watermark, cooldown, price-sensitivity) points run as one flat elastic
+# lane axis, then reduced to Pareto fronts by ``core/experiments.py``.
+# ---------------------------------------------------------------------------
+class PolicyGrid(NamedTuple):
+    """P autoscaler policy points, paired element-wise (docs/elasticity.md).
+
+    Only the *searchable* knobs live here; structural scaler config
+    (fleet bounds, spot tables) stays per-scenario on the batch.
+    """
+    util_high: jnp.ndarray          # f32[P] scale-up watermark
+    util_low: jnp.ndarray           # f32[P] scale-down watermark
+    cooldown: jnp.ndarray           # f32[P] min seconds between actions
+    scale_step: jnp.ndarray         # i32[P] VMs per action
+    price_sensitivity: jnp.ndarray  # f32[P] spot price ceiling (0 = off)
+
+
+def policy_points(util_highs: Sequence[float], util_lows: Sequence[float],
+                  cooldowns: Sequence[float],
+                  price_sensitivities: Sequence[float] = (0.0,),
+                  scale_steps: Sequence[int] = (1,)) -> PolicyGrid:
+    """Cartesian product of knob axes, dropping inverted watermark pairs
+    (``util_low >= util_high`` would thrash).  Host-side NumPy."""
+    pts = [(uh, ul, cd, ps, ss)
+           for uh in util_highs
+           for ul in util_lows if ul < uh
+           for cd in cooldowns
+           for ps in price_sensitivities
+           for ss in scale_steps]
+    if not pts:
+        raise ValueError("empty policy grid (check watermark ordering)")
+    uh, ul, cd, ps, ss = zip(*pts)
+    return PolicyGrid(
+        util_high=jnp.asarray(uh, jnp.float32),
+        util_low=jnp.asarray(ul, jnp.float32),
+        cooldown=jnp.asarray(cd, jnp.float32),
+        scale_step=jnp.asarray(ss, jnp.int32),
+        price_sensitivity=jnp.asarray(ps, jnp.float32))
+
+
+def fuse_policies(batch: DatacenterState, grid: PolicyGrid
+                  ) -> DatacenterState:
+    """Flatten a [B] batch x P autoscaler points into [P*B] elastic lanes.
+
+    The ``fuse_grid`` analogue for the control loop: lane ``p*B + b`` is
+    scenario ``b`` with its scaler's searchable knobs overwritten by
+    point ``p`` and the loop force-enabled.  Fleet bounds and spot
+    tables are scenario config and broadcast unchanged.
+    """
+    n_pol = grid.util_high.shape[0]
+    n_scen = batch.time.shape[0]
+
+    def tile(x):
+        return jnp.broadcast_to(
+            x[None], (n_pol,) + x.shape).reshape((n_pol * n_scen,)
+                                                 + x.shape[1:])
+
+    fused = jax.tree_util.tree_map(tile, batch)
+    rep = lambda x: jnp.repeat(x, n_scen)
+    return dataclasses.replace(
+        fused,
+        scaler=dataclasses.replace(
+            fused.scaler,
+            enabled=jnp.ones((n_pol * n_scen,), jnp.int32),
+            util_high=rep(grid.util_high),
+            util_low=rep(grid.util_low),
+            cooldown=rep(grid.cooldown),
+            scale_step=rep(grid.scale_step),
+            price_sensitivity=rep(grid.price_sensitivity)))
+
+
+def run_policy_search(batch: DatacenterState, grid: PolicyGrid, *,
+                      max_steps: int = 1_000_000,
+                      provision_policy: int = FIRST_FIT,
+                      mesh=None, partitioner: str = "auto",
+                      dynamic: bool | None = None,
+                      networked: bool | None = None) -> DatacenterState:
+    """Run every (scenario, autoscaler-point) cell in one elastic sweep.
+
+    Returns the final state reshaped to ``[P, B, ...]`` — feed it to
+    ``summarize_batch`` and ``experiments.pareto_front`` for the cost /
+    SLA / energy trade-off study (``examples/elasticity_study.py``).
+    Pass ``mesh`` to shard the fused lane axis (as in ``run_sharded``).
+    """
+    n_pol = int(grid.util_high.shape[0])
+    n_scen = int(batch.time.shape[0])
+    fused = fuse_policies(batch, grid)
+    if mesh is None:
+        out = run_batch(fused, max_steps=max_steps,
+                        provision_policy=provision_policy,
+                        dynamic=dynamic, networked=networked, elastic=True)
+    else:
+        out = run_sharded(fused, mesh=mesh, max_steps=max_steps,
+                          provision_policy=provision_policy,
+                          partitioner=partitioner, dynamic=dynamic,
+                          networked=networked, elastic=True)
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n_pol, n_scen) + x.shape[1:]), out)
 
 
 # ---------------------------------------------------------------------------
@@ -680,7 +817,7 @@ def _stack_stream_states(streams: ArrivalStream, n_vms: int, n_slots: int,
 def _stream_batch_runner(provision_policy: int, dynamic: bool,
                          networked: bool, leap: bool,
                          max_steps_per_chunk: int, mesh=None,
-                         axis: str | None = None):
+                         axis: str | None = None, elastic: bool = False):
     """jit(vmap(engine._stream_core)) for one static config.
 
     ``mesh`` adds GSPMD lane-axis in/out shardings (the only sharded
@@ -689,8 +826,8 @@ def _stream_batch_runner(provision_policy: int, dynamic: bool,
     — ROADMAP landmine #1 — and GSPMD keeps the wide-vmap program
     identical on every backend)."""
     f = partial(engine._stream_core, provision_policy=provision_policy,
-                dynamic=dynamic, networked=networked, leap=leap,
-                max_steps_per_chunk=max_steps_per_chunk)
+                dynamic=dynamic, networked=networked, elastic=elastic,
+                leap=leap, max_steps_per_chunk=max_steps_per_chunk)
     vf = jax.vmap(f)
     if mesh is None:
         return jax.jit(vf)
@@ -723,6 +860,7 @@ def run_stream_batch(batch: DatacenterState,
                      provision_policy: int = FIRST_FIT,
                      dynamic: bool | None = None,
                      networked: bool | None = None,
+                     elastic: bool | None = None,
                      leap: bool | None = None,
                      max_steps_per_chunk: int = 4096,
                      mesh=None, axis: str = "sweep"
@@ -747,13 +885,16 @@ def run_stream_batch(batch: DatacenterState,
         dynamic = engine.wants_dynamic(batch)
     if networked is None:
         networked = engine.wants_network(batch)
+    if elastic is None:
+        elastic = engine.wants_elastic(batch)
     if leap is None:
         leap = engine._LEAP_DEFAULT
     sts = _stack_stream_states(streams, batch.vms.req_pes.shape[-1],
                                batch.cloudlets.vm.shape[-1], reservoir)
     if mesh is None:
         runner = _stream_batch_runner(provision_policy, dynamic, networked,
-                                      leap, max_steps_per_chunk)
+                                      leap, max_steps_per_chunk,
+                                      elastic=elastic)
         return runner(batch, sts, streams)
     axis = _lane_axis(mesh)
     n_dev = mesh.shape[axis]
@@ -767,7 +908,8 @@ def run_stream_batch(batch: DatacenterState,
         streams = jax.tree_util.tree_map(grow, streams, pad_s)
         sts = jax.tree_util.tree_map(grow, sts, pad_st)
     runner = _stream_batch_runner(provision_policy, dynamic, networked,
-                                  leap, max_steps_per_chunk, mesh, axis)
+                                  leap, max_steps_per_chunk, mesh, axis,
+                                  elastic=elastic)
     out = runner(batch, sts, streams)
     if lanes == have:
         return out
@@ -780,6 +922,7 @@ def run_stream_grid(batch: DatacenterState,
                     reservoir: int = 64, provision_policy: int = FIRST_FIT,
                     dynamic: bool | None = None,
                     networked: bool | None = None,
+                    elastic: bool | None = None,
                     leap: bool | None = None,
                     max_steps_per_chunk: int = 4096,
                     mesh=None, axis: str = "sweep"
@@ -805,7 +948,8 @@ def run_stream_grid(batch: DatacenterState,
     fused_streams = jax.tree_util.tree_map(tile, streams)
     out = run_stream_batch(fused, fused_streams, reservoir=reservoir,
                            provision_policy=provision_policy,
-                           dynamic=dynamic, networked=networked, leap=leap,
+                           dynamic=dynamic, networked=networked,
+                           elastic=elastic, leap=leap,
                            max_steps_per_chunk=max_steps_per_chunk,
                            mesh=mesh, axis=axis)
     reshape = lambda x: x.reshape((n_pol, n_scen) + x.shape[1:])
@@ -860,6 +1004,9 @@ class SweepSummary(NamedTuple):
     n_migrations: jnp.ndarray    # i32[...]  live migrations performed
     mig_downtime: jnp.ndarray    # f32[...]  summed migration delays, VM-s
     transferred_mb: jnp.ndarray  # f32[...]  MB moved by completed transfers
+    spot_cost: jnp.ndarray       # f32[...]  accrued spot spend, $
+    n_scale_up: jnp.ndarray      # i32[...]  autoscaler VM creations
+    n_scale_down: jnp.ndarray    # i32[...]  autoscaler VM destructions
 
 
 def summarize_batch(final: DatacenterState) -> SweepSummary:
@@ -879,4 +1026,7 @@ def summarize_batch(final: DatacenterState) -> SweepSummary:
         n_migrations=final.mig_count,
         mig_downtime=final.mig_downtime,
         transferred_mb=final.net_transferred_mb,
+        spot_cost=final.scaler.spot_cost,
+        n_scale_up=final.scaler.up_count,
+        n_scale_down=final.scaler.down_count,
     )

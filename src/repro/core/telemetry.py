@@ -17,6 +17,7 @@ from repro.core.engine import StepRecord
 __all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
            "trace_energy_j", "migration_timeline", "failure_timeline",
            "transfer_timeline", "link_utilization_timeline",
+           "fleet_timeline", "spot_cost_timeline",
            "gantt", "summarize_trace", "stream_timeline",
            "summarize_stream_trace"]
 
@@ -111,6 +112,30 @@ def link_utilization_timeline(trace: StepRecord, wan_bw_mbps: float
     return t, np.clip(util / max(float(wan_bw_mbps), 1e-12), 0.0, 1.0)
 
 
+def fleet_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, alive VMs) per event step — the autoscaler's scale profile.
+
+    ``fleet[i]`` counts PENDING + ACTIVE VMs *after* the step at
+    ``times[i]``, so scale-out waves show as upward stairs and drain +
+    scale-in as downward ones (docs/elasticity.md).  Flat at the static
+    fleet size for non-elastic runs.
+    """
+    act = np.asarray(trace.active)
+    return np.asarray(trace.time)[act], np.asarray(trace.fleet)[act]
+
+
+def spot_cost_timeline(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
+    """(times, cumulative spot $ spent) per event step.
+
+    The accrual is exact between events (price and fleet are piecewise
+    constant; spot-segment boundaries are themselves events), so the
+    final sample equals the engine's ``scaler.spot_cost`` accumulator.
+    Zeros when the lane has no spot track.
+    """
+    act = np.asarray(trace.active)
+    return np.asarray(trace.time)[act], np.asarray(trace.spot_cost)[act]
+
+
 def stream_timeline(recs) -> Dict[str, np.ndarray]:
     """Per-chunk streaming timelines from ``engine.run_stream``'s records.
 
@@ -174,7 +199,8 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
                 "peak_util": 0.0, "energy_total_j": 0.0,
                 "mean_watts": 0.0, "peak_watts": 0.0,
                 "migrations": 0, "peak_hosts_down": 0,
-                "transferred_mb": 0.0, "peak_flows": 0}
+                "transferred_mb": 0.0, "peak_flows": 0,
+                "peak_fleet": 0, "spot_cost": 0.0}
     # time-weighted means over event intervals (interval i ends at t[i])
     if len(t) > 1:
         dt = np.diff(np.concatenate([[0.0], t]))
@@ -196,4 +222,6 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
         "peak_hosts_down": int(np.asarray(trace.hosts_down)[act].max()),
         "transferred_mb": float(np.asarray(trace.transferred_mb)[act][-1]),
         "peak_flows": int(np.asarray(trace.n_flows)[act].max()),
+        "peak_fleet": int(np.asarray(trace.fleet)[act].max()),
+        "spot_cost": float(np.asarray(trace.spot_cost)[act][-1]),
     }

@@ -55,7 +55,7 @@ remaining work in MI, rates in MIPS, RAM/BW/storage in MB.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -172,6 +172,9 @@ class OracleResult:
     n_migrations: int = 0           # live migrations performed
     mig_downtime: float = 0.0       # summed migration delays (VM-seconds)
     transferred_mb: float = 0.0     # MB moved by completed staged transfers
+    scale_up_count: int = 0         # VMs created by the autoscaler loop
+    scale_down_count: int = 0       # VMs destroyed by the autoscaler loop
+    spot_cost: float = 0.0          # accrued spot spend ($, f64)
 
     @property
     def n_done(self) -> int:
@@ -198,7 +201,19 @@ class ReferenceSimulator:
                  net_energy_per_mb: float = 0.0,
                  n_vm_slots: Optional[int] = None,
                  n_cl_slots: Optional[int] = None,
-                 n_host_slots: Optional[int] = None):
+                 n_host_slots: Optional[int] = None,
+                 scaler_enabled: bool = False,
+                 util_high: float = 0.0, util_low: float = 0.0,
+                 cooldown: float = 0.0,
+                 min_fleet: int = 0, max_fleet: int = 0,
+                 scale_step: int = 0,
+                 price_sensitivity: float = 0.0,
+                 last_action: float = -1e30,
+                 up_count0: int = 0, down_count0: int = 0,
+                 spot_enabled: bool = False,
+                 spot_times: Sequence[float] = (),
+                 spot_prices: Sequence[float] = (),
+                 spot_cost0: float = 0.0):
         self.hosts = hosts
         self.vms = vms
         self.cloudlets = cloudlets
@@ -225,6 +240,22 @@ class ReferenceSimulator:
             max((c.index for c in cloudlets), default=-1) + 1)
         self.n_host_slots = n_host_slots if n_host_slots is not None else (
             max((h.index for h in hosts), default=-1) + 1)
+        # closed-loop elasticity (f64 mirror of state.AutoscalerState)
+        self.scaler_enabled = bool(scaler_enabled)
+        self.util_high = float(util_high)
+        self.util_low = float(util_low)
+        self.cooldown = float(cooldown)
+        self.min_fleet = int(min_fleet)
+        self.max_fleet = int(max_fleet)
+        self.scale_step = int(scale_step)
+        self.price_sensitivity = float(price_sensitivity)
+        self.last_action = float(last_action)
+        self.scale_up_count = int(up_count0)
+        self.scale_down_count = int(down_count0)
+        self.spot_enabled = bool(spot_enabled)
+        self.spot_times = [float(t) for t in spot_times]
+        self.spot_prices = [float(p) for p in spot_prices]
+        self.spot_cost = float(spot_cost0)
         self.time = 0.0
         self.n_events = 0
         self._vm_by_index = {v.index: v for v in vms}
@@ -273,15 +304,19 @@ class ReferenceSimulator:
         create_targets = {e.target for e in events
                           if e.kind == EV_VM_CREATE and not e.fired}
         v = dc.vms
+        sc = dc.scaler
+        scaler_on = bool(int(g(sc.enabled)))
         # EMPTY slots are padding *unless* a pending create event will
-        # bring them to life mid-run.
+        # bring them to life mid-run — or the autoscaler can, in which
+        # case every EMPTY slot is a latent scale-up target.
         vms = [
             Vm(i, int(g(v.req_pes)[i]), float(g(v.req_mips)[i]),
                float(g(v.ram)[i]), float(g(v.bw)[i]), float(g(v.size)[i]),
                float(g(v.submit_time)[i]), state=int(g(v.state)[i]),
                mig_remaining=float(g(v.mig_remaining)[i]))
             for i in range(g(v.req_pes).shape[0])
-            if int(g(v.state)[i]) != VM_EMPTY or i in create_targets
+            if (int(g(v.state)[i]) != VM_EMPTY or i in create_targets
+                or scaler_on)
         ]
         c = dc.cloudlets
         cls_ = [
@@ -314,7 +349,22 @@ class ReferenceSimulator:
                    net_energy_per_mb=float(g(net.energy_per_mb)),
                    n_vm_slots=g(v.req_pes).shape[0],
                    n_cl_slots=g(c.vm).shape[0],
-                   n_host_slots=g(h.num_pes).shape[0])
+                   n_host_slots=g(h.num_pes).shape[0],
+                   scaler_enabled=scaler_on,
+                   util_high=float(g(sc.util_high)),
+                   util_low=float(g(sc.util_low)),
+                   cooldown=float(g(sc.cooldown)),
+                   min_fleet=int(g(sc.min_fleet)),
+                   max_fleet=int(g(sc.max_fleet)),
+                   scale_step=int(g(sc.scale_step)),
+                   price_sensitivity=float(g(sc.price_sensitivity)),
+                   last_action=float(g(sc.last_action)),
+                   up_count0=int(g(sc.up_count)),
+                   down_count0=int(g(sc.down_count)),
+                   spot_enabled=bool(int(g(sc.spot_enabled))),
+                   spot_times=[float(x) for x in g(sc.spot_t)],
+                   spot_prices=[float(x) for x in g(sc.spot_price)],
+                   spot_cost0=float(g(sc.spot_cost)))
 
     # -- provisioning (the VMProvisioner walk) ------------------------------
     def _feasible(self, host: Host, vm: Vm) -> bool:
@@ -695,6 +745,11 @@ class ReferenceSimulator:
         for e in self.events:
             if not e.fired and e.kind != EV_NONE and e.time > self.time:
                 arrive = min(arrive, e.time)
+        if self.spot_enabled:           # spot segment boundaries arrive too
+            for t in self.spot_times:
+                if t > self.time:
+                    arrive = min(arrive, t)
+                    break               # times strictly increase
         if self._select_migration() is not None:
             dt = 0.0            # same-instant migration cascade chains on
         return dt, arrive
@@ -766,10 +821,104 @@ class ReferenceSimulator:
         (``engine._stream_core``).  ``StreamingReferenceSimulator``
         overrides it."""
 
+    # -- closed-loop elasticity (engine.apply_autoscaler mirror) ------------
+    def _spot_price_now(self) -> float:
+        """Current spot price (f64): last segment start <= now, 0 if off."""
+        if not self.spot_enabled or not self.spot_times:
+            return 0.0
+        idx = 0
+        for i, t in enumerate(self.spot_times):
+            if t <= self.time:
+                idx = i
+        return self.spot_prices[idx]
+
+    def _accrue_spot(self, dt: float):
+        """Exact piecewise-constant accrual: price(t) x alive fleet x dt.
+
+        Spot boundaries sit in the arrival set (``_next_dt``), so the
+        price and the fleet are both constant over the interval."""
+        if not self.spot_enabled:
+            return
+        alive = sum(1 for v in self.vms
+                    if v.state in (VM_PENDING, VM_ACTIVE))
+        self.spot_cost += self._spot_price_now() * alive * dt
+
+    def _autoscale(self):
+        """Watermark autoscaler pass, between dynamic events and
+        provisioning.  Every action is gated on live work existing so
+        post-quiescence steps stay exact no-ops (the trace/while_loop
+        fixed-point contract).  Scale-ups flip the lowest-index EMPTY
+        slots to PENDING (latent capacity, build-time submit times — no
+        sort keys rewritten); scale-downs destroy the highest-index
+        drained VMs with EV_VM_DESTROY semantics."""
+        if not self.scaler_enabled:
+            return
+        work_exists = any(cl.state == CL_CREATED for cl in self.cloudlets)
+        alive = [v for v in self.vms if v.state in (VM_PENDING, VM_ACTIVE)]
+        fleet = len(alive)
+
+        def n_current(vm):
+            return sum(1 for cl in vm.cloudlets
+                       if cl.state == CL_CREATED
+                       and cl.submit_time <= self.time
+                       and cl.remaining > 0.0)
+
+        busy = sum(1 for v in alive
+                   if v.state == VM_ACTIVE and n_current(v) > 0)
+        util = busy / max(fleet, 1)
+        ready = (self.time - self.last_action) >= self.cooldown
+        price_ok = (not self.spot_enabled
+                    or self.price_sensitivity <= 0.0
+                    or self._spot_price_now() <= self.price_sensitivity)
+        want_up = (work_exists and ready and util > self.util_high
+                   and fleet < self.max_fleet and price_ok)
+        want_down = (not want_up and work_exists and ready
+                     and util < self.util_low and fleet > self.min_fleet)
+        n_up = n_down = 0
+        if want_up:
+            quota = min(self.scale_step, self.max_fleet - fleet)
+            empties = sorted((v for v in self.vms if v.state == VM_EMPTY),
+                             key=lambda v: v.index)[:quota]
+            for vm in empties:
+                vm.state = VM_PENDING
+            n_up = len(empties)
+        if want_down:
+            quota = min(self.scale_step, fleet - self.min_fleet)
+
+            def n_assigned(vm):
+                return sum(1 for cl in vm.cloudlets
+                           if cl.state == CL_CREATED)
+
+            drained = sorted((v for v in alive
+                              if n_assigned(v) == 0
+                              and v.mig_remaining <= 0.0),
+                             key=lambda v: -v.index)[:quota]
+            for vm in drained:          # EV_VM_DESTROY body, verbatim
+                if vm.state == VM_ACTIVE and vm.host is not None:
+                    h = vm.host
+                    h.free_ram += vm.ram
+                    h.free_bw += vm.bw
+                    h.free_storage += vm.size
+                    if self.reserve_pes:
+                        h.free_pes += vm.req_pes
+                    h.vms.remove(vm)
+                vm.state = VM_DESTROYED
+                vm.host = None
+                vm.mig_remaining = 0.0
+                for cl in vm.cloudlets:
+                    if cl.state == CL_CREATED:
+                        cl.state = CL_FAILED
+            n_down = len(drained)
+        if n_up + n_down > 0:
+            self.last_action = self.time
+            self.scale_up_count += n_up
+            self.scale_down_count += n_down
+
     def run(self, max_events: int = 100_000) -> OracleResult:
         while self.n_events < max_events:
             self._admit_stream()
             self._apply_events()
+            self._autoscale()
             self._provision()
             self._advance_phases()
             self._update_rates()
@@ -784,6 +933,7 @@ class ReferenceSimulator:
             # arrivals win ties: the clock lands on the exact table time
             t_next = arrive if dt_arr <= dt else self.time + head
             self._accrue_energy(head)
+            self._accrue_spot(head)
             self._advance(head, t_next)
             self.n_events += 1
         return self._result()
@@ -809,7 +959,10 @@ class ReferenceSimulator:
                            time=self.time, n_events=self.n_events,
                            n_migrations=self.n_migrations,
                            mig_downtime=self.mig_downtime,
-                           transferred_mb=self.transferred_mb)
+                           transferred_mb=self.transferred_mb,
+                           scale_up_count=self.scale_up_count,
+                           scale_down_count=self.scale_down_count,
+                           spot_cost=self.spot_cost)
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:
@@ -851,6 +1004,9 @@ class StreamOracleResult:
     n_migrations: int
     mig_downtime: float
     transferred_mb: float
+    scale_up_count: int = 0
+    scale_down_count: int = 0
+    spot_cost: float = 0.0
 
 
 class StreamingReferenceSimulator(ReferenceSimulator):
@@ -972,7 +1128,10 @@ class StreamingReferenceSimulator(ReferenceSimulator):
             vm_host=vh, energy_j=en, time=self.time,
             n_events=self.n_events, n_migrations=self.n_migrations,
             mig_downtime=self.mig_downtime,
-            transferred_mb=self.transferred_mb)
+            transferred_mb=self.transferred_mb,
+            scale_up_count=self.scale_up_count,
+            scale_down_count=self.scale_down_count,
+            spot_cost=self.spot_cost)
 
 
 def _stream_rows(stream) -> list:

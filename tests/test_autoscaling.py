@@ -1,0 +1,313 @@
+"""Closed-loop autoscaling invariants (docs/elasticity.md).
+
+The watermark loop in ``engine.apply_autoscaler`` is pinned against the
+f64 oracle by ``test_conformance.py``; this suite checks the *control
+contracts* that conformance alone cannot express:
+
+  * the alive fleet never leaves ``[min(min_fleet, fleet_0), max_fleet]``
+    and no step moves it by more than ``scale_step``,
+  * consecutive scale actions are spaced at least ``cooldown`` apart,
+  * a *disabled* scaler compiled through the elastic program is
+    bit-for-bit the non-elastic program (the static gate's semantics,
+    not just its compilation),
+  * scale-up work is monotone in sustained load,
+  * spot spend is exactly the piecewise-constant integral
+    sum(price(t_i) * fleet_i * dt_i) over the event intervals,
+  * elastic lanes survive the fused / nested / sharded sweep runners
+    bit-for-bit (1-device inline; forced-2-device in a subprocess, the
+    ``gspmd`` and ``dispatch`` partitioners — the loop flips VM states
+    without touching provisioning sort keys, so ROADMAP landmine #2
+    stays dormant).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_conformance import ELASTIC_SEEDS, make_elastic_scenario, \
+    make_scenario
+
+from repro import compat
+from repro.core import engine
+from repro.core import state as S
+from repro.core import sweep, telemetry
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# even conformance seeds carry no lifecycle events, so every fleet
+# change observed in a trace is the autoscaler's own action
+EVEN_SEEDS = [s for s in ELASTIC_SEEDS if s % 2 == 0][:6]
+
+
+def _assert_trees_bitwise(a, b, ctx):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=ctx)
+
+
+def _initial_fleet(dc) -> int:
+    st = np.asarray(dc.vms.state)
+    return int(((st == S.VM_PENDING) | (st == S.VM_ACTIVE)).sum())
+
+
+@pytest.mark.parametrize("seed", EVEN_SEEDS)
+def test_fleet_never_exceeds_max(seed):
+    """On conformance lanes (where PENDING slots can legitimately *fail*
+    provisioning and drop out of the alive count) the ceiling still
+    binds: the alive fleet never exceeds max_fleet."""
+    dc = make_elastic_scenario(seed, 0, 0)
+    out, trace = engine.run_trace(dc, num_steps=512)
+    t, fleet = telemetry.fleet_timeline(trace)
+    assert fleet.size > 0
+    assert fleet.max() <= int(dc.scaler.max_fleet), (seed, fleet.max())
+
+
+def test_fleet_stays_within_bounds():
+    """With ample host capacity (no provisioning failures) the scaler is
+    the only alive-count mutator: the fleet stays inside
+    [min(min_fleet, fleet_0), max_fleet] and no step moves it by more
+    than scale_step."""
+    for per_slot in (4, 8):
+        dc = _sustained_load(per_slot)
+        out, trace = engine.run_trace(dc, num_steps=1024)
+        t, fleet = telemetry.fleet_timeline(trace)
+        lo = min(int(dc.scaler.min_fleet), _initial_fleet(dc))
+        assert fleet.min() >= lo, (per_slot, fleet.min(), lo)
+        assert fleet.max() <= int(dc.scaler.max_fleet), (per_slot,
+                                                         fleet.max())
+        deltas = np.diff(np.concatenate([[_initial_fleet(dc)], fleet]))
+        assert np.abs(deltas).max() <= int(dc.scaler.scale_step), \
+            (per_slot, deltas)
+
+
+def test_no_action_inside_cooldown():
+    """Times at which the fleet changes are spaced >= cooldown apart
+    (ample capacity: every fleet change is a scaler action)."""
+    dc = _sustained_load(8)
+    out, trace = engine.run_trace(dc, num_steps=1024)
+    t, fleet = telemetry.fleet_timeline(trace)
+    prev = np.concatenate([[_initial_fleet(dc)], fleet[:-1]])
+    changed = fleet != prev
+    action_t = t[changed].astype(np.float64)
+    # scaler counters account for at least the observed fleet changes —
+    # an action on the quiescing step (active=False) is real but filtered
+    # from the active timeline, so the counters may exceed it
+    total = int(out.scaler.up_count) + int(out.scaler.down_count)
+    assert total >= int(np.abs(fleet - prev).sum()) > 0
+    assert action_t.size >= 2, action_t
+    gaps = np.diff(action_t)
+    assert gaps.min() >= float(dc.scaler.cooldown) - 1e-3, \
+        (gaps.min(), float(dc.scaler.cooldown))
+
+
+def test_disabled_scaler_is_bitwise_non_elastic():
+    """enabled=0 through the *elastic* program == the non-elastic program
+    bit-for-bit: the closed loop's no-op is exact, not approximate."""
+    for seed in (0, 4):
+        dc = make_elastic_scenario(seed, 0, 0)
+        dead = dataclasses.replace(dc, scaler=dataclasses.replace(
+            dc.scaler, enabled=jnp.int32(0), spot_enabled=jnp.int32(0)))
+        assert not engine.wants_elastic(dead)
+        on = engine.run(dead, max_steps=512, dynamic=False,
+                        networked=False, elastic=True)
+        off = engine.run(dead, max_steps=512, dynamic=False,
+                         networked=False, elastic=False)
+        _assert_trees_bitwise(on, off, f"disabled scaler seed {seed}")
+        assert int(on.scaler.up_count) == 0
+        assert float(on.scaler.spot_cost) == 0.0
+
+
+def _sustained_load(per_slot: int):
+    """12 1-PE VM slots, 2 alive, `per_slot` queued cloudlets each —
+    sustained utilization 1.0 on the alive fleet until the backlog
+    drains, so heavier backlogs must trigger at least as many
+    scale-ups."""
+    n_vms, alive = 12, 2
+    hosts = S.make_uniform_hosts(4, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6)
+    vms = S.make_vms([1] * n_vms, [1000.0] * n_vms, [512.0] * n_vms,
+                     [100.0] * n_vms, [1000.0] * n_vms)
+    st = np.full(n_vms, S.VM_EMPTY, np.int32)
+    st[:alive] = S.VM_PENDING
+    vms = dataclasses.replace(vms, state=jnp.asarray(st))
+    vm = np.repeat(np.arange(n_vms, dtype=np.int32), per_slot)
+    sub = np.tile(0.01 * np.arange(per_slot, dtype=np.float32), n_vms)
+    lens = np.full(n_vms * per_slot, 800.0, np.float32)
+    scaler = S.make_autoscaler(util_high=0.6, util_low=0.2, cooldown=1.0,
+                               min_fleet=alive, max_fleet=n_vms,
+                               scale_step=1)
+    return S.make_datacenter(hosts, vms, S.make_cloudlets(vm, lens, sub),
+                             vm_policy=S.SPACE_SHARED,
+                             task_policy=S.SPACE_SHARED, scaler=scaler)
+
+
+def test_scale_up_monotone_in_sustained_load():
+    """More sustained backlog never produces fewer scale-ups (or less
+    executed work), and the final fleet closes the action ledger:
+    alive = fleet_0 + ups - downs (no lifecycle events, ample hosts).
+
+    Note the loop only evaluates at real events — a lane whose alive
+    queues drain before the cooldown reopens quiesces with CREATED work
+    stranded on EMPTY slots, exactly like the oracle.  Monotonicity is
+    the invariant, not full completion."""
+    ups, downs, executed = [], [], []
+    for per_slot in (1, 3, 6, 8):
+        dc = _sustained_load(per_slot)
+        out = engine.run(dc, max_steps=4096)
+        u, d = int(out.scaler.up_count), int(out.scaler.down_count)
+        ups.append(u)
+        downs.append(d)
+        executed.append(float(np.asarray(
+            out.cloudlets.length - out.cloudlets.remaining).sum()))
+        st = np.asarray(out.vms.state)
+        alive = int(((st == S.VM_PENDING) | (st == S.VM_ACTIVE)).sum())
+        assert alive == _initial_fleet(dc) + u - d, (per_slot, alive, u, d)
+    assert ups == sorted(ups), ups
+    assert ups[-1] > ups[0], ups
+    assert executed == sorted(executed), executed
+    assert max(downs) > 0, downs
+
+
+@pytest.mark.parametrize("seed", [s for s in EVEN_SEEDS][:4])
+def test_spot_cost_is_exact_piecewise_integral(seed):
+    """spot_cost == sum(price(t_i) * fleet_i * dt_i) reconstructed in f64
+    from the trace — price boundaries are events, so rates are constant
+    inside every interval (even seeds carry a live spot track)."""
+    dc = make_elastic_scenario(seed, 0, 0)
+    assert int(dc.scaler.spot_enabled) == 1
+    out, trace = engine.run_trace(dc, num_steps=512)
+    t, fleet = telemetry.fleet_timeline(trace)
+    # record i covers [t_{i-1}, t_i): its fleet is the post-pass alive
+    # count at the interval *start*, priced at that same start time
+    starts = np.concatenate([[0.0], t[:-1].astype(np.float64)])
+    ends = t.astype(np.float64)
+    spot_t = np.asarray(dc.scaler.spot_t, np.float64)
+    spot_p = np.asarray(dc.scaler.spot_price, np.float64)
+    seg = np.clip(np.searchsorted(spot_t, starts, side="right") - 1,
+                  0, spot_t.size - 1)
+    expected = float(np.sum(spot_p[seg] * fleet.astype(np.float64)
+                            * (ends - starts)))
+    got = float(out.scaler.spot_cost)
+    np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-3,
+                               err_msg=f"seed {seed}")
+    assert got > 0.0, seed
+
+
+def test_elastic_lanes_bitwise_through_fused_and_sharded_sweeps():
+    """Stacked elastic lanes through run_batch, run_sharded (gspmd +
+    dispatch, trivial 1-device mesh) and the fused policy grid are
+    bit-for-bit the per-lane engine.run results — scaler counters and
+    spot spend included."""
+    dcs = [make_elastic_scenario(s, 0, 0) for s in (0, 2, 4)]
+    batch = sweep.stack_scenarios(dcs)
+    out = sweep.run_batch(batch, max_steps=512)
+    for i, dc in enumerate(dcs):
+        single = engine.run(dc, max_steps=512)
+        for name in ("finish_time", "start_time", "state"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.cloudlets, name)),
+                np.asarray(getattr(out.cloudlets, name))[i],
+                err_msg=f"lane {i} {name}")
+        np.testing.assert_array_equal(np.asarray(single.vms.state),
+                                      np.asarray(out.vms.state)[i])
+        for name in ("up_count", "down_count", "spot_cost"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(single.scaler, name)),
+                np.asarray(getattr(out.scaler, name))[i],
+                err_msg=f"lane {i} scaler.{name}")
+    mesh = compat.make_mesh("sweep", jax.devices()[:1])
+    for part in ("gspmd", "dispatch"):
+        sh = sweep.run_sharded(batch, mesh=mesh, max_steps=512,
+                               partitioner=part)
+        _assert_trees_bitwise(sh, out, f"elastic {part} vs run_batch")
+
+
+def test_policy_search_cells_match_single_runs():
+    """Every [policy, scenario] cell of run_policy_search equals a plain
+    engine.run with those scaler knobs substituted (fuse_policies is a
+    pure re-parameterization)."""
+    dcs = [make_elastic_scenario(s, 0, 0) for s in (0, 2)]
+    batch = sweep.stack_scenarios(dcs)
+    grid = sweep.policy_points(util_highs=(0.55, 0.72),
+                               util_lows=(0.18,), cooldowns=(2.0,))
+    final = sweep.run_policy_search(batch, grid, max_steps=512)
+    P = grid.util_high.shape[0]
+    for p in range(P):
+        for b, dc in enumerate(dcs):
+            cell = dataclasses.replace(dc, scaler=dataclasses.replace(
+                dc.scaler,
+                util_high=jnp.float32(grid.util_high[p]),
+                util_low=jnp.float32(grid.util_low[p]),
+                cooldown=jnp.float32(grid.cooldown[p]),
+                scale_step=jnp.int32(grid.scale_step[p]),
+                price_sensitivity=jnp.float32(grid.price_sensitivity[p])))
+            ref = engine.run(cell, max_steps=512)
+            np.testing.assert_array_equal(
+                np.asarray(ref.cloudlets.finish_time),
+                np.asarray(final.cloudlets.finish_time)[p, b],
+                err_msg=f"cell {p},{b}")
+            for name in ("up_count", "down_count", "spot_cost"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref.scaler, name)),
+                    np.asarray(getattr(final.scaler, name))[p, b],
+                    err_msg=f"cell {p},{b} scaler.{name}")
+
+
+_TWO_DEVICE_ELASTIC_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() >= 2, jax.devices()
+    from test_conformance import make_elastic_scenario
+    from repro.core import sweep
+
+    dcs = [make_elastic_scenario(s, 0, 0) for s in (0, 2, 4)]
+    batch = sweep.stack_scenarios(dcs)
+    single = sweep.run_batch(batch, max_steps=512)
+    for part in ("gspmd", "dispatch"):
+        sh = sweep.run_sharded(batch, max_steps=512, partitioner=part)
+        la = jax.tree_util.tree_leaves(sh)
+        lb = jax.tree_util.tree_leaves(single)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=part)
+    assert int(np.asarray(single.scaler.up_count).sum()) > 0
+    assert float(np.asarray(single.scaler.spot_cost).sum()) > 0.0
+    print("SHARDED_ELASTIC_OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_sharded_two_devices_elastic_lanes_bitwise():
+    """Elastic lanes over a (forced) 2-device mesh == single-device,
+    bit-for-bit, under gspmd and the host-side dispatch spelling.  The
+    autoscaler flips VM states but never rewrites provisioning sort keys
+    (build-time submit_time), so the CPU SPMD partitioner landmine
+    (ROADMAP #2) stays dormant — a regression deadlocks into this
+    subprocess timeout exactly like the dynamic check."""
+    if jax.device_count() >= 2:
+        exec(compile(_TWO_DEVICE_ELASTIC_CHECK, "<two-device-elastic>",
+                     "exec"), {})
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip(),
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)).strip(
+                os.pathsep),
+    )
+    proc = subprocess.run([sys.executable, "-c", _TWO_DEVICE_ELASTIC_CHECK],
+                          capture_output=True, text=True, timeout=560,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED_ELASTIC_OK" in proc.stdout

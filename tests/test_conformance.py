@@ -31,7 +31,9 @@ POLICY_GRID = [(vp, tp) for vp in (S.SPACE_SHARED, S.TIME_SHARED)
 SEEDS = list(range(26))                 # 26 seeds x 4 combos = 104 scenarios
 DYN_SEEDS = list(range(16))             # +16 x 4 = 64 dynamic scenarios
 NET_SEEDS = list(range(8))              # +8 x 4 = 32 networked
-STREAM_SEEDS = list(range(8))           # +8 x 4 = 32 streamed -> 232 total
+STREAM_SEEDS = list(range(8))           # +8 x 4 = 32 streamed
+ELASTIC_SEEDS = list(range(16))         # +16 x 4 = 64 elastic
+ELASTIC_STREAM_SEEDS = list(range(4))   # +4 x 4 = 16 -> 312 total
 
 
 def make_scenario(seed, vm_policy, task_policy, *, n_hosts=3, n_vms=N_VMS,
@@ -280,6 +282,119 @@ def make_streamed_scenario(seed, vm_policy, task_policy, *, n_hosts=3,
     return dc, stream
 
 
+def make_elastic_scenario(seed, vm_policy, task_policy, *, n_hosts=3,
+                          n_vms=8, per_vm=3):
+    """Randomized *elastic* scenario: watermark autoscaler + spot track.
+
+    A small alive fleet (2-4 submitted VMs) plus latent EMPTY slots the
+    control loop turns on, staggered cloudlet lengths/submits so drains
+    happen mid-run and scale-downs actually fire, and per-seed knobs:
+    watermarks off the small-integer utilization grid (busy/alive with
+    alive <= 8 never lands within f32-vs-f64 distance of 0.55/0.72/
+    0.18/0.28), 2-decimal cooldowns, scale steps of 1-2.  Even seeds
+    carry a piecewise-constant spot-price track (segment boundaries are
+    events on both sides); seeds % 4 == 0 also set a price-sensitivity
+    veto at a mid-table price.  Odd seeds compose with the dynamic
+    subsystem — a host failure/recovery pair — so eviction-driven
+    re-provisioning runs under the control loop too.
+    """
+    rng = np.random.default_rng(40_000 + seed)
+    idle = rng.uniform(0.05, 0.2, n_hosts)
+    g4 = np.asarray(energy.normalize_watts(energy.SPEC_G4_WATTS)[2])
+    lin = np.asarray(energy.linear_curve())
+    curves = np.where(rng.integers(0, 2, n_hosts)[:, None] == 1,
+                      g4[None], lin[None])
+    hosts = S.make_hosts(rng.integers(2, 5, n_hosts),
+                         rng.choice([250.0, 500.0, 1000.0], n_hosts),
+                         4096.0, 1000.0, 1e6,
+                         idle_w=idle,
+                         peak_w=idle + rng.uniform(0.2, 0.8, n_hosts),
+                         power_curve=curves)
+    vms = S.make_vms(
+        rng.integers(1, 3, n_vms),
+        rng.choice([250.0, 500.0, 1000.0], n_vms),
+        64.0, 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 5, n_vms), 2).astype(np.float32))
+    alive0 = int(rng.integers(2, 5))
+    st = np.full(n_vms, S.VM_EMPTY, np.int32)
+    st[:alive0] = S.VM_PENDING
+    vms = dataclasses.replace(vms, state=jnp.asarray(st))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(                   # FCFS submission order per VM
+        np.round(rng.uniform(0, 20, (n_vms, per_vm)), 2),
+        axis=1).reshape(-1).astype(np.float32)
+    lengths = np.round(
+        rng.uniform(500, 8000, n_vms * per_vm)).astype(np.float32)
+    cl = S.make_cloudlets(owners, lengths, submit)
+
+    sc_kw = {}
+    if seed % 2 == 0:                   # spot track (boundaries = events)
+        t1 = round(float(rng.uniform(3, 10)), 2)
+        t2 = round(t1 + float(rng.uniform(5, 15)), 2)
+        sc_kw["spot_t"] = [0.0, t1, t2]
+        sc_kw["spot_price"] = [round(float(p), 2)
+                               for p in rng.uniform(0.01, 0.1, 3)]
+        if seed % 4 == 0:               # veto scale-ups at high prices
+            sc_kw["price_sensitivity"] = round(
+                float(np.median(sc_kw["spot_price"])), 2)
+    scaler = S.make_autoscaler(
+        util_high=float(rng.choice([0.55, 0.72])),
+        util_low=float(rng.choice([0.18, 0.28])),
+        cooldown=round(float(rng.uniform(1, 4)), 2),
+        min_fleet=int(rng.integers(1, 3)), max_fleet=n_vms,
+        scale_step=int(rng.integers(1, 3)), **sc_kw)
+
+    kw = {}
+    if seed % 2 == 1:                   # compose with the dynamic subsystem
+        fail_t = round(float(rng.uniform(5, 20)), 2)
+        kw["events"] = S.make_events(
+            [fail_t, round(fail_t + float(rng.uniform(5, 15)), 2)],
+            [S.EV_HOST_FAIL, S.EV_HOST_RECOVER],
+            [int(rng.integers(0, n_hosts))] * 2)
+    return S.make_datacenter(
+        hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
+        reserve_pes=bool(seed % 2), scaler=scaler, **kw)
+
+
+def make_elastic_streamed_scenario(seed, vm_policy, task_policy):
+    """Streamed arrivals under the control loop: ``make_streamed_scenario``
+    with two extra latent EMPTY slots and a watermark autoscaler (even
+    seeds add a spot track), so windowed admission, slot recycling, and
+    scale-out/in all run in one lane.  Returns ``(dc, stream)``."""
+    dc, stream = make_streamed_scenario(seed, vm_policy, task_policy,
+                                        n_vms=5)
+    rng = np.random.default_rng(41_000 + seed)
+    nv = 5 + 2
+    vms = S.make_vms(
+        rng.integers(1, 3, nv),
+        rng.choice([250.0, 500.0, 1000.0], nv),
+        64.0, 1.0, 10.0,
+        submit_time=np.round(rng.uniform(0, 3, nv), 2).astype(np.float32))
+    st = np.asarray(vms.state).copy()
+    st[5:] = S.VM_EMPTY
+    vms = dataclasses.replace(vms, state=jnp.asarray(st))
+    # arrivals target slots 0..6 so the latent VMs carry real work
+    n = np.asarray(stream.vm).shape[0]
+    vm_ids = np.asarray(stream.vm).copy()
+    live = vm_ids >= 0
+    vm_ids[live] = np.asarray(rng.integers(0, nv, int(live.sum())),
+                              np.int32)
+    stream = dataclasses.replace(stream, vm=jnp.asarray(vm_ids))
+    sc_kw = {}
+    if seed % 2 == 0:
+        t1 = round(float(rng.uniform(4, 12)), 2)
+        sc_kw["spot_t"] = [0.0, t1]
+        sc_kw["spot_price"] = [round(float(p), 2)
+                               for p in rng.uniform(0.01, 0.1, 2)]
+    scaler = S.make_autoscaler(
+        util_high=float(rng.choice([0.55, 0.72])),
+        util_low=float(rng.choice([0.18, 0.28])),
+        cooldown=round(float(rng.uniform(1, 3)), 2),
+        min_fleet=1, max_fleet=nv,
+        scale_step=int(rng.integers(1, 3)), **sc_kw)
+    return dataclasses.replace(dc, vms=vms, scaler=scaler), stream
+
+
 # ---------------------------------------------------------------------------
 # Engine vs oracle
 # ---------------------------------------------------------------------------
@@ -416,9 +531,10 @@ def test_engine_matches_oracle_streamed(vm_policy, task_policy):
     (makespan / exec / response sums at 1e-3 relative, energy and clock at
     1e-3 absolute), exact retirement/failure accounting, exact per-VM
     completion counts, and the deterministic strided reservoir of
-    per-cloudlet (start, finish) samples at 1e-3.  Total conformance
-    coverage: 104 static + 64 dynamic + 32 networked + 32 streamed = 232
-    scenarios."""
+    per-cloudlet (start, finish) samples at 1e-3.  With the elastic
+    suites below, total conformance coverage is 104 static + 64 dynamic
+    + 32 networked + 32 streamed + 64 elastic + 16 elastic-streamed =
+    312 scenarios."""
     from repro.core.engine import run_stream
     from repro.oracle.reference import simulate_stream
 
@@ -471,6 +587,103 @@ def test_engine_matches_oracle_streamed(vm_policy, task_policy):
         np.testing.assert_allclose(
             float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
             rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle_elastic(vm_policy, task_policy):
+    """64 elastic scenarios (16 seeds x 2x2 policies): the closed control
+    loop — watermark scale-ups onto latent EMPTY slots, drain-and-destroy
+    scale-downs, cooldown windows, fleet clamps, spot-price tracks with
+    boundary events, price-sensitivity vetoes, odd seeds composed with
+    host failures — engine vs oracle on completion/start times and
+    per-host energy within 1e-3, identical event counts, *exact*
+    scale-action and VM-create/destroy counts, and spot spend within
+    1e-3 $.  Total conformance coverage: 232 prior + 64 elastic + 16
+    elastic-streamed = 312 scenarios."""
+    total_ups = total_downs = 0
+    total_spot = 0.0
+    for seed in ELASTIC_SEEDS:
+        dc = make_elastic_scenario(seed, vm_policy, task_policy)
+        out, trace = run_trace(dc, num_steps=512)
+        res = simulate_dense(dc)
+        ctx = (seed, vm_policy, task_policy)
+
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+        np.testing.assert_array_equal(
+            np.asarray(out.cloudlets.state), res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.start_time, np.float64)[done],
+            res.start_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        # scale actions land the same VMs in the same states on the same
+        # hosts — creates, destroys, and the untouched remainder
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        # exact action accounting: every scale decision identical
+        assert int(np.asarray(out.scaler.up_count)) == res.scale_up_count, ctx
+        assert int(np.asarray(out.scaler.down_count)) == \
+            res.scale_down_count, ctx
+        # spot spend: f32 price*fleet*dt accrual vs the oracle's f64 one
+        np.testing.assert_allclose(
+            float(np.asarray(out.scaler.spot_cost)), res.spot_cost,
+            rtol=1e-4, atol=1e-3, err_msg=str(ctx))
+        total_ups += res.scale_up_count
+        total_downs += res.scale_down_count
+        total_spot += res.spot_cost
+    # the generator must actually exercise both loop directions + spot
+    assert total_ups > 0 and total_downs > 0 and total_spot > 0.0
+
+
+@pytest.mark.parametrize("vm_policy,task_policy", POLICY_GRID)
+def test_engine_matches_oracle_elastic_streamed(vm_policy, task_policy):
+    """16 elastic-streamed scenarios (4 seeds x 2x2 policies): the control
+    loop over windowed arrival lanes — latent slots receiving streamed
+    work, scale-out under admission pressure, drain + scale-in, odd seeds
+    composed with failures/migration/transfers — engine vs oracle on the
+    streaming aggregates at 1e-3, exact retirement and scale-action
+    counts, and spot spend."""
+    from repro.core.engine import run_stream
+    from repro.oracle.reference import simulate_stream
+
+    total_actions = 0
+    for seed in ELASTIC_STREAM_SEEDS:
+        dc, stream = make_elastic_streamed_scenario(seed, vm_policy,
+                                                    task_policy)
+        out, st, _ = run_stream(dc, stream, reservoir=32)
+        res = simulate_stream(dc, stream, reservoir=32)
+        ctx = (seed, vm_policy, task_policy)
+
+        assert int(st.stats.n_retired) == res.n_retired, ctx
+        assert int(st.stats.n_failed) == res.n_failed, ctx
+        np.testing.assert_array_equal(np.asarray(st.stats.per_vm_done),
+                                      res.per_vm_done, err_msg=str(ctx))
+        np.testing.assert_allclose(float(st.stats.makespan), res.makespan,
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(float(np.asarray(out.time)), res.time,
+                                   rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=1e-3, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.host),
+                                      res.vm_host, err_msg=str(ctx))
+        assert int(np.asarray(out.scaler.up_count)) == res.scale_up_count, ctx
+        assert int(np.asarray(out.scaler.down_count)) == \
+            res.scale_down_count, ctx
+        np.testing.assert_allclose(
+            float(np.asarray(out.scaler.spot_cost)), res.spot_cost,
+            rtol=1e-4, atol=1e-3, err_msg=str(ctx))
+        total_actions += res.scale_up_count + res.scale_down_count
+    assert total_actions > 0
 
 
 def test_oracle_matches_fig3_exactly():

@@ -196,3 +196,87 @@ def test_determinism():
     b = run(dc, max_steps=1024)
     np.testing.assert_array_equal(np.asarray(a.cloudlets.finish_time),
                                   np.asarray(b.cloudlets.finish_time))
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop autoscaling properties (docs/elasticity.md)
+# ---------------------------------------------------------------------------
+def _elastic_scenario(seed, *, n_vms=10, per_vm=4, util_high=0.72,
+                      util_low=0.18, scale_step=1):
+    """Ample-capacity elastic lane: hosts always fit every VM, so the
+    autoscaler is the only alive-count mutator."""
+    rng = np.random.default_rng(seed)
+    hosts = S.make_uniform_hosts(4, pes=4, mips=1000.0, ram=8192.0,
+                                 bw=1000.0, storage=1e6)
+    vms = S.make_vms([1] * n_vms, [1000.0] * n_vms, [256.0] * n_vms,
+                     [10.0] * n_vms, [100.0] * n_vms)
+    alive0 = int(rng.integers(2, 5))
+    st_ = np.full(n_vms, S.VM_EMPTY, np.int32)
+    st_[:alive0] = S.VM_PENDING
+    vms = dataclasses.replace(vms, state=np.asarray(st_))
+    owners = np.repeat(np.arange(n_vms, dtype=np.int32), per_vm)
+    submit = np.sort(rng.uniform(0, 10, (n_vms, per_vm))
+                     .astype(np.float32), axis=1).reshape(-1)
+    cl = S.make_cloudlets(
+        owners, rng.uniform(500, 4000, n_vms * per_vm).astype(np.float32),
+        submit)
+    scaler = S.make_autoscaler(util_high=util_high, util_low=util_low,
+                               cooldown=float(rng.integers(1, 4)),
+                               min_fleet=int(rng.integers(1, alive0 + 1)),
+                               max_fleet=n_vms, scale_step=scale_step)
+    return S.make_datacenter(hosts, vms, cl, vm_policy=S.SPACE_SHARED,
+                             task_policy=S.SPACE_SHARED, scaler=scaler), \
+        alive0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       util_high=st.sampled_from([0.55, 0.72]),
+       util_low=st.sampled_from([0.18, 0.28]),
+       scale_step=st.integers(1, 2))
+def test_autoscaler_invariants(seed, util_high, util_low, scale_step):
+    """Whatever the watermarks: the fleet stays within its clamps, moves
+    at most scale_step per step, closes the action ledger, and completed
+    work still respects causality."""
+    from repro.core import telemetry
+    dc, alive0 = _elastic_scenario(seed, util_high=util_high,
+                                   util_low=util_low,
+                                   scale_step=scale_step)
+    out, trace = run_trace(dc, num_steps=1024)
+    t, fleet = telemetry.fleet_timeline(trace)
+    if fleet.size:
+        assert fleet.min() >= min(int(dc.scaler.min_fleet), alive0)
+        assert fleet.max() <= int(dc.scaler.max_fleet)
+        deltas = np.diff(np.concatenate([[alive0], fleet]))
+        assert np.abs(deltas).max() <= scale_step
+    vst = np.asarray(out.vms.state)
+    alive = int(((vst == S.VM_PENDING) | (vst == S.VM_ACTIVE)).sum())
+    u, d = int(out.scaler.up_count), int(out.scaler.down_count)
+    assert alive == alive0 + u - d
+    cl = out.cloudlets
+    done = np.asarray(cl.state) == S.CL_DONE
+    assert np.all(np.asarray(cl.start_time)[done]
+                  >= np.asarray(cl.submit_time)[done] - 1e-4)
+    assert np.all(np.asarray(cl.finish_time)[done]
+                  >= np.asarray(cl.start_time)[done] - 1e-4)
+    np.testing.assert_allclose(np.asarray(cl.remaining)[done], 0.0,
+                               atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), vm_policy=policies,
+       task_policy=policies)
+def test_disabled_autoscaler_is_identity(seed, vm_policy, task_policy):
+    """The elastic program with the default (disabled) scaler is
+    bit-for-bit the non-elastic program on any scenario — the static
+    gate is a semantic no-op, not an approximation."""
+    import jax
+    dc = _scenario(seed, n_hosts=5, n_vms=4, per_vm=3,
+                   vm_policy=vm_policy, task_policy=task_policy,
+                   reserve=False)
+    a = run(dc, max_steps=1024, elastic=False)
+    b = run(dc, max_steps=1024, elastic=True)
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

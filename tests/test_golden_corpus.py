@@ -1,9 +1,9 @@
 """Golden-scenario corpus: digest, generator-drift, and replay checks.
 
 ``tests/data/golden_scenarios.json`` freezes every conformance scenario
-payload (26 static + 16 dynamic + 8 networked + 8 streamed seeds; the
-2x2 policy matrix expands at replay, so 58 payloads cover the 232
-conformance scenarios).  Three contracts:
+payload (26 static + 16 dynamic + 8 networked + 8 streamed + 8 elastic
+seeds; the 2x2 policy matrix expands at replay, so 66 payloads cover
+the conformance scenarios).  Three contracts:
 
   1. the file's sha256 digest matches its payload (integrity),
   2. the live generators in ``test_conformance.py`` still reproduce the
@@ -24,8 +24,9 @@ import os
 import numpy as np
 import pytest
 
-from test_conformance import (DYN_SEEDS, NET_SEEDS, POLICY_GRID, SEEDS,
-                              STREAM_SEEDS, make_dynamic_scenario,
+from test_conformance import (DYN_SEEDS, ELASTIC_SEEDS, NET_SEEDS,
+                              POLICY_GRID, SEEDS, STREAM_SEEDS,
+                              make_dynamic_scenario, make_elastic_scenario,
                               make_networked_scenario, make_scenario,
                               make_streamed_scenario)
 
@@ -88,6 +89,20 @@ def _assert_matches(dc, stored, ctx):
         np.testing.assert_allclose(float(np.asarray(getattr(net, k))),
                                    sn[k], rtol=0, atol=0,
                                    err_msg=f"{ctx} net.{k}")
+    if "scaler" in stored:
+        sc, ss = dc.scaler, stored["scaler"]
+        for k in ("enabled", "min_fleet", "max_fleet", "scale_step",
+                  "spot_enabled"):
+            assert int(np.asarray(getattr(sc, k))) == ss[k], \
+                f"{ctx} scaler.{k}"
+        for k in ("util_high", "util_low", "cooldown", "price_sensitivity"):
+            np.testing.assert_allclose(float(np.asarray(getattr(sc, k))),
+                                       ss[k], rtol=0, atol=0,
+                                       err_msg=f"{ctx} scaler.{k}")
+        for k in ("spot_t", "spot_price"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sc, k)).reshape(-1),
+                np.asarray(ss[k], np.float32), err_msg=f"{ctx} scaler.{k}")
 
 
 def test_generators_reproduce_corpus(corpus):
@@ -108,6 +123,10 @@ def test_generators_reproduce_corpus(corpus):
         _assert_matches(make_networked_scenario(s, 0, 0),
                         corpus["scenarios"]["networked"][str(s)],
                         f"networked seed {s}")
+    for s in ELASTIC_SEEDS[:8]:
+        _assert_matches(make_elastic_scenario(s, 0, 0),
+                        corpus["scenarios"]["elastic"][str(s)],
+                        f"elastic seed {s}")
     for s in STREAM_SEEDS:
         stored = corpus["scenarios"]["streamed"][str(s)]
         dc, stream = make_streamed_scenario(s, 0, 0)
@@ -146,12 +165,23 @@ def rebuild(stored, vm_policy, task_policy) -> S.DatacenterState:
         bw_wan=sn["bw_wan"], lat_wan=sn["lat_wan"],
         energy_per_mb=sn["energy_per_mb"]) if sn["enabled"] else \
         S.no_network(nh)
+    scaler = None
+    if "scaler" in stored:
+        ss = stored["scaler"]
+        spot_kw = (dict(spot_t=ss["spot_t"], spot_price=ss["spot_price"])
+                   if ss["spot_enabled"] else {})
+        scaler = S.make_autoscaler(
+            util_high=ss["util_high"], util_low=ss["util_low"],
+            cooldown=ss["cooldown"], min_fleet=ss["min_fleet"],
+            max_fleet=ss["max_fleet"], scale_step=ss["scale_step"],
+            price_sensitivity=ss["price_sensitivity"], **spot_kw)
     return S.make_datacenter(
         hosts, vms, cl, vm_policy=vm_policy, task_policy=task_policy,
         reserve_pes=bool(stored["reserve_pes"]), events=events,
         mig_policy=stored["mig_policy"],
         mig_threshold=stored["mig_threshold"],
-        mig_energy_per_mb=stored["mig_energy_per_mb"], net=net)
+        mig_energy_per_mb=stored["mig_energy_per_mb"], net=net,
+        scaler=scaler)
 
 
 @pytest.mark.parametrize("kind,seed", [("static", 0), ("static", 9),
@@ -181,6 +211,38 @@ def test_corpus_replays_engine_vs_oracle(corpus, kind, seed):
         np.testing.assert_allclose(
             float(np.asarray(out.net_transferred_mb)), res.transferred_mb,
             rtol=0, atol=1e-3, err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 4, 7])
+def test_corpus_replays_elastic_engine_vs_oracle(corpus, seed):
+    """Frozen elastic payloads replay the closed control loop against the
+    f64 oracle — exact scale-action counts, 1e-3 times/energy, 1e-4
+    relative spot spend (the conformance pinning from disk)."""
+    stored = corpus["scenarios"]["elastic"][str(seed)]
+    for vp, tp in POLICY_GRID:
+        dc = rebuild(stored, vp, tp)
+        out, trace = run_trace(dc, num_steps=512)
+        res = simulate_dense(dc)
+        ctx = ("elastic", seed, vp, tp)
+        assert int(np.asarray(trace.active).sum()) == res.n_events, ctx
+        np.testing.assert_array_equal(np.asarray(out.cloudlets.state),
+                                      res.cl_state, err_msg=str(ctx))
+        done = res.cl_state == S.CL_DONE
+        np.testing.assert_allclose(
+            np.asarray(out.cloudlets.finish_time, np.float64)[done],
+            res.finish_time[done], rtol=0, atol=1e-3, err_msg=str(ctx))
+        np.testing.assert_array_equal(np.asarray(out.vms.state),
+                                      res.vm_state, err_msg=str(ctx))
+        np.testing.assert_allclose(
+            np.asarray(out.hosts.energy_j, np.float64), res.energy_j,
+            rtol=0, atol=1e-3, err_msg=str(ctx))
+        assert int(np.asarray(out.scaler.up_count)) == \
+            res.scale_up_count, ctx
+        assert int(np.asarray(out.scaler.down_count)) == \
+            res.scale_down_count, ctx
+        np.testing.assert_allclose(
+            float(np.asarray(out.scaler.spot_cost)), res.spot_cost,
+            rtol=1e-4, atol=1e-3, err_msg=str(ctx))
 
 
 def rebuild_stream(stored) -> S.ArrivalStream:

@@ -29,8 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from test_conformance import (DYN_SEEDS, NET_SEEDS, POLICY_GRID, SEEDS,
-                              make_dynamic_scenario,
+from test_conformance import (DYN_SEEDS, ELASTIC_SEEDS, NET_SEEDS,
+                              POLICY_GRID, SEEDS, make_dynamic_scenario,
+                              make_elastic_scenario,
                               make_networked_scenario, make_scenario)
 from test_golden_corpus import CORPUS, rebuild
 
@@ -48,11 +49,11 @@ def _assert_trees_bitwise(a, b, ctx):
                                       err_msg=ctx)
 
 
-def _run_both(dc, *, dynamic, networked, max_steps=2048):
+def _run_both(dc, *, dynamic, networked, elastic=False, max_steps=2048):
     off = engine.run(dc, max_steps=max_steps, dynamic=dynamic,
-                     networked=networked, leap=False)
+                     networked=networked, elastic=elastic, leap=False)
     on = engine.run(dc, max_steps=max_steps, dynamic=dynamic,
-                    networked=networked, leap=True)
+                    networked=networked, elastic=elastic, leap=True)
     return off, on
 
 
@@ -74,6 +75,31 @@ def test_conformance_subset_leap_bitwise(vp, tp):
         _assert_trees_bitwise(off, on, f"networked seed {seed} ({vp},{tp})")
 
 
+def test_elastic_lanes_leap_bitwise():
+    """Leap parity on closed-loop lanes.  An *enabled* scaler disables
+    leaping entirely (a scale action can land inside any drain window),
+    so on == off trivially — but the gate itself must be exact: with the
+    scaler knocked out, the same lane must still leap *and* reproduce
+    the elastic program's results bit-for-bit through the non-elastic
+    gate.  Odd seeds compose with host lifecycle events."""
+    for seed in (0, 1, 4, 7):
+        dc = make_elastic_scenario(seed, *POLICY_GRID[seed % 4])
+        dyn = bool(seed % 2)
+        off, on = _run_both(dc, dynamic=dyn, networked=False, elastic=True)
+        _assert_trees_bitwise(off, on, f"elastic seed {seed}")
+        assert int(np.asarray(on.scaler.up_count)) > 0 or \
+            int(np.asarray(on.scaler.down_count)) > 0 or seed % 2, seed
+    # disabled scaler: the elastic program must keep leaping — and match
+    dc = make_elastic_scenario(0, *POLICY_GRID[0])
+    dead = dataclasses.replace(dc, scaler=dataclasses.replace(
+        dc.scaler, enabled=jnp.int32(0), spot_enabled=jnp.int32(0)))
+    off, on = _run_both(dead, dynamic=False, networked=False, elastic=True)
+    _assert_trees_bitwise(off, on, "elastic disabled scaler")
+    plain = engine.run(dead, max_steps=2048, dynamic=False,
+                       networked=False, elastic=False, leap=True)
+    _assert_trees_bitwise(on, plain, "elastic gate vs non-elastic program")
+
+
 @pytest.mark.slow
 def test_golden_corpus_leap_bitwise():
     """Every stored corpus payload replays leap-on == leap-off exactly —
@@ -85,7 +111,9 @@ def test_golden_corpus_leap_bitwise():
         corpus = json.load(f)
     kinds = (("static", dict(dynamic=False, networked=False)),
              ("dynamic", dict(dynamic=True, networked=False)),
-             ("networked", dict(dynamic=True, networked=True)))
+             ("networked", dict(dynamic=True, networked=True)),
+             ("elastic", dict(dynamic=True, networked=False,
+                              elastic=True)))
     for kind, kw in kinds:
         for seed, stored in corpus["scenarios"][kind].items():
             vp, tp = POLICY_GRID[int(seed) % len(POLICY_GRID)]
@@ -155,7 +183,7 @@ def test_batched_run_matches_vmap_run_mixed_lanes():
     batch = sweep.stack_scenarios(scs)
     ref = jax.vmap(lambda d: engine._run(
         d, max_steps=512, horizon=float("inf"), provision_policy=0,
-        dynamic=True, networked=False, leap=True))(batch)
+        dynamic=True, networked=False, elastic=False, leap=True))(batch)
     out = engine.batched_run(batch, max_steps=512, dynamic=True,
                              networked=False, leap=True)
     _assert_trees_bitwise(ref, out, "batched_run vs vmap(run)")

@@ -114,7 +114,8 @@ def test_summarize_trace_empty():
                  "peak_util": 0.0, "energy_total_j": 0.0,
                  "mean_watts": 0.0, "peak_watts": 0.0,
                  "migrations": 0, "peak_hosts_down": 0,
-                 "transferred_mb": 0.0, "peak_flows": 0}
+                 "transferred_mb": 0.0, "peak_flows": 0,
+                 "peak_fleet": 0, "spot_cost": 0.0}
     assert T.trace_energy_j(trace) == 0.0
 
 

@@ -18,6 +18,10 @@ the committed copy honest without re-running the (minutes-long, forced
     nonzero — response includes queue wait),
   * all policy-sweep lanes ran to completion (``all_done``) and each
     migration/network case finished the same amount of work,
+  * the elasticity section is live: static vs elastic-idle finished the
+    same work (the disabled loop is an identity), the autoscaled case
+    actually scaled (``ups > 0``) and accrued spot spend, and the
+    policy search's cell count and cells/s are consistent,
   * every streamed lane accounts for all n arrivals
     (``retired + failed == n``) and, at the largest tier, the windowed
     engine's peak RSS stays below the resident table's.
@@ -64,6 +68,14 @@ SCHEMA = {
         "staging": ["wall_s", "transferred_mb", "done"],
         "networked_idle_overhead": None, "networked_idle_overhead_raw": None,
         "staging_overhead": None, "staging_overhead_raw": None,
+    },
+    "elasticity": {
+        "static": ["wall_s", "done"],
+        "elastic_idle": ["wall_s", "done"],
+        "autoscaled": ["wall_s", "ups", "downs", "spot_cost", "done"],
+        "elastic_idle_overhead": None, "elastic_idle_overhead_raw": None,
+        "policy_search": ["policies", "scenarios", "cells", "wall_s",
+                          "cells_per_s", "done_cells", "done_total"],
     },
     "sharded": ["devices", "cells", "single_device_s", "gspmd_s",
                 "shard_map_s", "dispatch_s", "single_cells_per_s",
@@ -159,6 +171,33 @@ def main() -> int:
             errors.append(
                 f"streaming.{top}: streamed peak RSS {sm:.0f}MB >= "
                 f"resident {rs:.0f}MB (window no longer memory-bounded?)")
+
+    ela = bench.get("elasticity", {})
+    if ela:
+        st, idle = ela.get("static", {}), ela.get("elastic_idle", {})
+        if st.get("done") != idle.get("done"):
+            errors.append(
+                f"elasticity: static done {st.get('done')} != elastic_idle "
+                f"done {idle.get('done')} (disabled loop is not an "
+                "identity?)")
+        auto = ela.get("autoscaled", {})
+        if (auto.get("ups") or 0) <= 0:
+            errors.append("elasticity.autoscaled.ups <= 0 "
+                          "(closed loop never scaled up)")
+        if (auto.get("spot_cost") or 0) <= 0:
+            errors.append("elasticity.autoscaled.spot_cost <= 0 "
+                          "(spot track accrued nothing)")
+        ps = ela.get("policy_search", {})
+        if ps and ps.get("cells") != (ps.get("policies", 0)
+                                      * ps.get("scenarios", 0)):
+            errors.append(
+                f"elasticity.policy_search: cells {ps.get('cells')} != "
+                f"policies {ps.get('policies')} x scenarios "
+                f"{ps.get('scenarios')}")
+        if ps and (ps.get("cells_per_s") or 0) <= 0:
+            errors.append("elasticity.policy_search.cells_per_s <= 0")
+        if ps and (ps.get("done_total") or 0) <= 0:
+            errors.append("elasticity.policy_search finished no cloudlets")
 
     for section in ("migration", "network"):
         done = {k: v["done"] for k, v in bench.get(section, {}).items()

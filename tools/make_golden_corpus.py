@@ -2,15 +2,17 @@
 """Regenerate the golden conformance-scenario corpus.
 
 Serializes every scenario the conformance suite generates — the 26
-static, 16 dynamic, 8 networked, and 8 streamed seeds of
-``tests/test_conformance.py`` — to ``tests/data/golden_scenarios.json``
-together with a sha256 digest of the canonical payload.  Policies are
-*not* baked in: each stored seed expands to the full 2x2 policy matrix
-at replay time, exactly like the generators, so the file freezes 58
-payloads for 232 scenarios.  Streamed payloads store the window
-infrastructure in the common layout plus a ``stream`` block (the
-chunked arrival table, flattened) — adding them left every pre-existing
-payload's bytes untouched; only the digest covers the new section.
+static, 16 dynamic, 8 networked, 8 streamed, and the first 8 elastic
+seeds of ``tests/test_conformance.py`` — to
+``tests/data/golden_scenarios.json`` together with a sha256 digest of
+the canonical payload.  Policies are *not* baked in: each stored seed
+expands to the full 2x2 policy matrix at replay time, exactly like the
+generators, so the file freezes 66 payloads covering the conformance
+scenarios.  Streamed payloads store the window infrastructure in the
+common layout plus a ``stream`` block (the chunked arrival table,
+flattened); elastic payloads add a ``scaler`` block (the autoscaler
+knobs + spot-price track) — each addition left every pre-existing
+payload's bytes untouched; only the digest covers the new sections.
 
 The committed corpus makes the conformance scenarios reproducible even
 if a future NumPy changes ``default_rng`` streams:
@@ -97,6 +99,31 @@ def serialize_streamed(dc, stream) -> dict:
     return out
 
 
+def serialize_elastic(dc) -> dict:
+    """Elastic scenario: the common layout + the autoscaler knob block.
+
+    Only the build-time knobs are stored (``last_action``/counters/cost
+    start at their ``make_autoscaler`` defaults), so ``rebuild`` can
+    reconstruct the scaler through the public constructor.
+    """
+    out = serialize(dc)
+    sc = dc.scaler
+    out["scaler"] = {
+        "enabled": int(np.asarray(sc.enabled)),
+        "util_high": float(np.asarray(sc.util_high)),
+        "util_low": float(np.asarray(sc.util_low)),
+        "cooldown": float(np.asarray(sc.cooldown)),
+        "min_fleet": int(np.asarray(sc.min_fleet)),
+        "max_fleet": int(np.asarray(sc.max_fleet)),
+        "scale_step": int(np.asarray(sc.scale_step)),
+        "price_sensitivity": float(np.asarray(sc.price_sensitivity)),
+        "spot_enabled": int(np.asarray(sc.spot_enabled)),
+        "spot_t": _arr(sc.spot_t),
+        "spot_price": _arr(sc.spot_price),
+    }
+    return out
+
+
 def canonical(payload: dict) -> str:
     return json.dumps(payload, sort_keys=True, separators=(",", ":"))
 
@@ -106,8 +133,9 @@ def digest(payload: dict) -> str:
 
 
 def main() -> int:
-    from test_conformance import (DYN_SEEDS, NET_SEEDS, SEEDS, STREAM_SEEDS,
-                                  make_dynamic_scenario,
+    from test_conformance import (DYN_SEEDS, ELASTIC_SEEDS, NET_SEEDS, SEEDS,
+                                  STREAM_SEEDS, make_dynamic_scenario,
+                                  make_elastic_scenario,
                                   make_networked_scenario, make_scenario,
                                   make_streamed_scenario)
 
@@ -121,14 +149,15 @@ def main() -> int:
         "streamed": {str(s): serialize_streamed(
                          *make_streamed_scenario(s, 0, 0))
                      for s in STREAM_SEEDS},
+        "elastic": {str(s): serialize_elastic(make_elastic_scenario(s, 0, 0))
+                    for s in ELASTIC_SEEDS[:8]},
     }
-    out = {"format": 3, "digest": digest(payload), "scenarios": payload}
+    out = {"format": 4, "digest": digest(payload), "scenarios": payload}
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
         f.write("\n")
-    n = (len(payload["static"]) + len(payload["dynamic"])
-         + len(payload["networked"]) + len(payload["streamed"]))
+    n = sum(len(v) for v in payload.values())
     print(f"wrote {OUT}: {n} scenario payloads, digest {out['digest'][:16]}…")
     return 0
 
