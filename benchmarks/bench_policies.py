@@ -34,6 +34,12 @@ points x B scenarios fused into one compiled sweep, in lane-cells/s.
 traces against the same workload as a resident dense table, each cell in
 its own subprocess so ``ru_maxrss`` is per-case.
 
+``bench_metrics`` measures the in-run metrics plane (``core/metrics.py``):
+the fused policy grid with no plane vs a dormant (probes-off) plane vs
+probes on, plus a probed vs unprobed streamed lane.  Probes-off compiles
+the pre-metrics program unchanged, so its overhead is the floored-at-1.0
+proof of the static-gate promise.
+
 Besides the CSV-ish stdout lines, ``main`` writes every measurement to
 ``BENCH_policies.json`` at the repo root so the perf trajectory is
 recorded run-over-run (cells/s for single vs gspmd vs shard_map, energy
@@ -600,6 +606,112 @@ def bench_streaming(tiers=(10_000, 100_000, 1_000_000), window=64,
     return out
 
 
+def bench_metrics(batch=32, n_hosts=64, n_vms=16, waves=4, max_steps=512,
+                  stream_n=20_000, window=64, chunk=2048):
+    """Metrics-plane overhead: probed vs unprobed, fused sweep + stream.
+
+      * ``baseline_s`` — the fused 2x2 policy grid with the default inert
+        plane (``no_metrics``): the pre-metrics program,
+      * ``off_s``      — the same grid with a full-size plane (K=32
+        buckets, NB=24 bins) whose ``enabled`` flag is 0: the static
+        ``probed`` gate excludes every probe, so the compiled program is
+        the baseline's — ``probes_off_overhead`` is the measured proof of
+        the probes-off promise (floored at 1.0, min-of-k),
+      * ``probed_s``   — the same grid with probes on and the SLA
+        watermark armed: the real cost of in-run observability.
+
+    The streamed pair times one windowed ``stream_n``-arrival lane
+    unprobed vs probed (bucket rows fold through the chunk scan).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import broker as B, metrics as M, state as S, sweep
+    from repro.core.engine import run_stream
+
+    def scenario(seed):
+        rng = np.random.default_rng(seed)
+        hosts = S.make_uniform_hosts(n_hosts, idle_w=100.0, peak_w=250.0)
+        vms = B.build_fleet([B.VmSpec(count=n_vms, pes=1, mips=1000.0,
+                                      ram=512.0, bw=10.0, size=1000.0)])
+        cl = B.build_waves(n_vms, B.WaveSpec(
+            waves=waves, length_mi=float(rng.integers(600, 1200) * 1000),
+            period=600.0))
+        return S.make_datacenter(hosts, vms, cl, reserve_pes=True)
+
+    def with_plane(dc, enabled):
+        plane = M.make_metrics(n_hosts, horizon=waves * 600.0 + 1800.0,
+                               buckets=32, bins=24, sla_factor=2.0)
+        if not enabled:
+            plane = dataclasses.replace(plane, enabled=jnp.int32(0))
+        return dataclasses.replace(dc, metrics=plane)
+
+    dcs = [scenario(s) for s in range(batch)]
+    vm_p, task_p = sweep.policy_grid()
+    cells = int(vm_p.shape[0]) * batch
+
+    def timed(ds):
+        stacked = sweep.stack_scenarios(ds)
+        box = {}
+
+        def go():
+            box["g"] = sweep.run_grid(stacked, vm_p, task_p,
+                                      max_steps=max_steps, sharded=False)
+            jax.block_until_ready(box["g"].time)
+
+        return _timeit(go), box["g"]
+
+    baseline_s, _ = timed(dcs)
+    off_s, _ = timed([with_plane(d, False) for d in dcs])
+    probed_s, grid = timed([with_plane(d, True) for d in dcs])
+    raw_off = off_s / max(baseline_s, 1e-9)
+    raw_probed = probed_s / max(baseline_s, 1e-9)
+    sw = {
+        "cells": cells,
+        "done": int((np.asarray(grid.cloudlets.state) == 2).sum()),
+        "retired": int(np.asarray(grid.metrics.hist_response).sum()),
+        "baseline_s": baseline_s,
+        "off_s": off_s,
+        "probed_s": probed_s,
+        "probes_off_overhead_raw": raw_off,
+        "probes_off_overhead": max(raw_off, 1.0),
+        "probed_overhead_raw": raw_probed,
+        "probed_overhead": max(raw_probed, 1.0),
+    }
+
+    hosts, vms, vm, length, sub = _streaming_scenario(stream_n)
+    stream = S.make_stream(vm, length, sub, chunk=chunk)
+    dc = S.make_datacenter(hosts, vms, S.make_window(window),
+                           vm_policy=S.SPACE_SHARED,
+                           task_policy=S.SPACE_SHARED)
+    probed_dc = dataclasses.replace(dc, metrics=M.make_metrics(
+        hosts.num_pes.shape[0], horizon=stream_n / 40.0,
+        buckets=32, bins=24, sla_factor=2.0))
+    box = {}
+
+    def go_stream(d):
+        fin, st, _ = run_stream(d, stream, max_steps_per_chunk=4 * chunk)
+        jax.block_until_ready(fin.time)
+        box["st"] = st
+
+    stream_base_s = _timeit(lambda: go_stream(dc))
+    stream_probed_s = _timeit(lambda: go_stream(probed_dc))
+    raw_stream = stream_probed_s / max(stream_base_s, 1e-9)
+    return {
+        "sweep": sw,
+        "streaming": {
+            "n": stream_n,
+            "retired": int(np.asarray(box["st"].stats.n_retired)),
+            "baseline_s": stream_base_s,
+            "probed_s": stream_probed_s,
+            "probed_overhead_raw": raw_stream,
+            "probed_overhead": max(raw_stream, 1.0),
+        },
+    }
+
+
 def bench_sharded(batch=16, n_hosts=256, n_vms=32, max_steps=8192):
     """Fused grid on one device vs sharded over every visible device.
 
@@ -743,6 +855,16 @@ def main():
               f"_rss={sm.get('peak_rss_mb', 0):.0f}MB"
               f"_resident_rss={rs.get('peak_rss_mb', 0):.0f}MB"
               f"_resident_wall={rw}")
+    bmx = bench_metrics()
+    results["bench_metrics"] = bmx
+    msw = bmx["sweep"]
+    print(f"bench_metrics,{msw['probed_s']*1e6:.0f},"
+          f"cells={msw['cells']}"
+          f"_probes_off_overhead={msw['probes_off_overhead']:.2f}x"
+          f"_probed_overhead={msw['probed_overhead']:.2f}x"
+          f"_stream_probed_overhead="
+          f"{bmx['streaming']['probed_overhead']:.2f}x"
+          f"_retired={msw['retired']}")
     # the sharded measurement needs a multi-device backend, which must be
     # forced before jax initializes -> fresh subprocess
     env = dict(

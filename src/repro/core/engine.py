@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, market, migration, network, scheduling
+from repro.core import energy, market, metrics, migration, network, scheduling
 from repro.core.network import wants_network
 from repro.core.provisioning import (FIRST_FIT, alive_fleet, alive_mask,
                                      provision_pending)
@@ -77,7 +77,7 @@ from repro.core.state import (
 __all__ = ["step", "run", "run_trace", "batched_run", "run_stream",
            "StepRecord", "StreamChunkRecord", "apply_due_events",
            "apply_autoscaler", "wants_dynamic", "wants_network",
-           "wants_elastic"]
+           "wants_elastic", "wants_probes"]
 
 _EPS_MI = 1e-3      # absolute snap threshold, in million instructions
 
@@ -407,12 +407,76 @@ def _drain_safe(pre: DatacenterState, post: DatacenterState,
     return jnp.all(safe)
 
 
+def _interval_probes(state: DatacenterState, rates: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, ...]:
+    """(util, fleet, backlog, busy_hosts) observed over the interval a
+    commit is about to book — all derived from the post-passes state and
+    its fixed ``rates``, which are constant until the next event.  The
+    exact same f32 arithmetic serves the ``step`` commit and the leap
+    body (on frozen re-masked rates, elementwise-equal by the leap
+    gate), so the metrics plane inherits leap-on/off bitwise parity.
+    """
+    cl = state.cloudlets
+    nv = state.vms.req_pes.shape[0]
+    nh = state.hosts.num_pes.shape[0]
+    host_mips = jnp.sum(jnp.where(state.hosts.valid,
+                                  state.hosts.capacity_mips, 0.0))
+    util = jnp.sum(rates) / jnp.maximum(host_mips, 1e-30)
+    fleet = alive_fleet(state.vms).astype(jnp.float32)
+    # queue pressure: submitted, unfinished, but drawing no MIPS (under a
+    # topology this includes staging cloudlets — documented)
+    backlog = jnp.sum(((cl.state == CL_CREATED)
+                       & (cl.submit_time <= state.time)
+                       & (cl.remaining > 0.0)
+                       & (rates <= 0.0)).astype(jnp.int32))
+    hidx = jnp.clip(state.vms.host[jnp.clip(cl.vm, 0, nv - 1)], 0, nh - 1)
+    busy = (jax.ops.segment_sum((rates > 0.0).astype(jnp.int32), hidx,
+                                num_segments=nh) > 0).astype(jnp.float32)
+    return util, fleet, backlog, busy
+
+
+def _sla_bound(state: DatacenterState) -> jnp.ndarray:
+    """f32[C] per-cloudlet SLA response bound — the
+    ``experiments.sla_violations`` formula with the plane's factor."""
+    nv = state.vms.req_pes.shape[0]
+    owner = jnp.clip(state.cloudlets.vm, 0, nv - 1)
+    ideal = state.cloudlets.length / jnp.maximum(
+        state.vms.req_mips[owner], 1e-30)
+    return state.metrics.sla_factor * ideal
+
+
+def _probe_commit(pre: DatacenterState, new: DatacenterState,
+                  rates: jnp.ndarray, host_watts: jnp.ndarray, dt,
+                  frates, was_done) -> DatacenterState:
+    """Book one ``step`` commit into the metrics plane (``probed=True``).
+
+    ``pre`` is the post-passes state whose ``rates`` the commit used
+    (observables are constant on [pre.time, new.time)); ``new`` is the
+    committed state.  ``was_done`` is the DONE mask at *step entry* so
+    retirements via ``advance_phases`` (STAGE_OUT drains completing at
+    the top of the step) are booked exactly once too.
+    """
+    util, fleet, backlog, busy = _interval_probes(pre, rates)
+    m = metrics.accrue_interval(
+        pre.metrics, t0=pre.time, t1=new.time, util=util,
+        watts=jnp.sum(host_watts), fleet=fleet, backlog=backlog,
+        flows=(jnp.sum((frates > 0.0).astype(jnp.int32))
+               if frates is not None else jnp.int32(0)),
+        busy_hosts=busy, dt=dt)
+    ncl = new.cloudlets
+    m = metrics.fill_retirement(
+        m, newly=(ncl.state == CL_DONE) & ~was_done,
+        finish=ncl.finish_time, submit=ncl.submit_time,
+        start=ncl.start_time, bound=_sla_bound(pre))
+    return dataclasses.replace(new, metrics=m)
+
+
 def _leap_window(pre: DatacenterState, new: DatacenterState,
                  rates: jnp.ndarray, active, dt_arr, dt_other, arrive,
                  trig_next, mig_done, budget, horizon,
                  next_arrival=None, *,
                  dynamic: bool, networked: bool, streaming: bool = False,
-                 elastic: bool = False
+                 elastic: bool = False, probed: bool = False
                  ) -> tuple[DatacenterState, jnp.ndarray]:
     """Commit further queued events cheaply while no decision can intervene.
 
@@ -542,6 +606,12 @@ def _leap_window(pre: DatacenterState, new: DatacenterState,
                          + state.rates.cost_per_bw * moved_mb)),
             time=t_next,
         )
+        if probed:
+            # the exact probe arithmetic of step()'s commit, on the
+            # frozen re-masked rates (elementwise-equal by the gate) —
+            # metrics stay bitwise under leap-on/off
+            cand = _probe_commit(state, cand, r, host_watts, dt, None,
+                                 cl.state == CL_DONE)
         do = (going & act & (d_arr > dt_o) & (arr > t_next)
               & _drain_safe(state, cand, occ, networked=networked))
         nxt = jax.tree.map(lambda a, b: jnp.where(do, a, b), cand, state)
@@ -556,7 +626,8 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
          dynamic: bool = True, networked: bool = False,
          elastic: bool = False, leap: bool = False,
          leap_budget=None, leap_horizon=None,
-         streaming: bool = False, next_arrival=None
+         streaming: bool = False, next_arrival=None,
+         probed: bool = False
          ) -> tuple[DatacenterState, StepRecord]:
     """Process exactly one simulation event (pure; jit/vmap/scan-safe).
 
@@ -601,7 +672,18 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
     arrival so the clock lands exactly on it (admission itself happens in
     the driver, between steps).  ``streaming=False`` compiles today's
     resident program bit-for-bit.
+
+    ``probed`` (static, auto-detected via ``wants_probes``): collect the
+    O(K) metrics plane (core/metrics.py) alongside the commit — bucketed
+    timelines, retirement histograms, SLA watermarks.  ``probed=False``
+    never touches ``dc.metrics`` and compiles the unprobed program
+    unchanged; ``probed=True`` on a lane whose plane is disabled
+    (``metrics.enabled == 0``) is a bitwise identity on it.
     """
+    if probed:
+        # DONE mask at step *entry*: retirement probes below must also
+        # catch completions made by advance_phases (STAGE_OUT drains)
+        was_done = dc.cloudlets.state == CL_DONE
     # Every pass below is a bit-exact identity when its trigger predicate
     # is False (verified pass by pass; the quiescence fixed point depends
     # on it), so each can sit behind a runtime lax.cond: quiesced lanes and
@@ -804,6 +886,10 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
         scaler=scaler,
     )
 
+    if probed:
+        new = _probe_commit(dc, new, rates, host_watts, dt,
+                            frates if networked else None, was_done)
+
     n_events = active.astype(jnp.int32)
     if leap:
         new, extra = _leap_window(
@@ -813,7 +899,7 @@ def step(dc: DatacenterState, *, provision_policy=FIRST_FIT,
             leap_budget, leap_horizon,
             next_arrival if streaming else None,
             dynamic=dynamic, networked=networked, streaming=streaming,
-            elastic=elastic)
+            elastic=elastic, probed=probed)
         n_events = n_events + extra
 
     host_mips = jnp.sum(jnp.where(dc.hosts.valid,
@@ -868,12 +954,24 @@ def wants_elastic(dc: DatacenterState) -> bool:
         return True
 
 
+def wants_probes(dc: DatacenterState) -> bool:
+    """True when any lane carries an enabled metrics plane
+    (core/metrics.py).  Host-side dispatch helper like ``wants_dynamic``
+    — on traced inputs it conservatively answers True.  Accepts
+    unbatched and batched states (``enabled`` is scalar / [B])."""
+    try:
+        return bool(np.any(np.asarray(dc.metrics.enabled) != 0))
+    except Exception:           # tracer — cannot inspect; take the safe path
+        return True
+
+
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
                                    "dynamic", "networked", "elastic",
-                                   "leap"))
+                                   "leap", "probed"))
 def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
          provision_policy: int, dynamic: bool,
-         networked: bool, elastic: bool, leap: bool) -> DatacenterState:
+         networked: bool, elastic: bool, leap: bool,
+         probed: bool) -> DatacenterState:
     horizon = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
 
     def cond(carry):
@@ -886,7 +984,7 @@ def _run(dc: DatacenterState, *, max_steps: int, horizon: float,
                         dynamic=dynamic, networked=networked,
                         elastic=elastic, leap=leap,
                         leap_budget=jnp.int32(max_steps) - n - 1,
-                        leap_horizon=horizon)
+                        leap_horizon=horizon, probed=probed)
         return new, n + rec.n_events, rec.active
 
     out, _, _ = jax.lax.while_loop(cond, body, (dc, jnp.int32(0),
@@ -899,7 +997,8 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         dynamic: bool | None = None,
         networked: bool | None = None,
         elastic: bool | None = None,
-        leap: bool | None = None) -> DatacenterState:
+        leap: bool | None = None,
+        probed: bool | None = None) -> DatacenterState:
     """Run the simulation to quiescence with ``lax.while_loop``.
 
     Terminates when the event queue is empty (no runnable work, no future
@@ -925,21 +1024,25 @@ def run(dc: DatacenterState, *, max_steps: int = 1_000_000,
         elastic = wants_elastic(dc)
     if leap is None:
         leap = _LEAP_DEFAULT
+    if probed is None:
+        probed = wants_probes(dc)
     return _run(dc, max_steps=max_steps, horizon=horizon,
                 provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked, elastic=elastic, leap=leap)
+                networked=networked, elastic=elastic, leap=leap,
+                probed=probed)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "provision_policy",
-                                   "dynamic", "networked", "elastic"))
+                                   "dynamic", "networked", "elastic",
+                                   "probed"))
 def _run_trace(dc: DatacenterState, *, num_steps: int,
                provision_policy: int, dynamic: bool, networked: bool,
-               elastic: bool
+               elastic: bool, probed: bool
                ) -> tuple[DatacenterState, StepRecord]:
     def body(dc, _):
         new, rec = step(dc, provision_policy=provision_policy,
                         dynamic=dynamic, networked=networked,
-                        elastic=elastic)
+                        elastic=elastic, probed=probed)
         return new, rec
 
     return jax.lax.scan(body, dc, None, length=num_steps)
@@ -949,7 +1052,8 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
               provision_policy: int = FIRST_FIT,
               dynamic: bool | None = None,
               networked: bool | None = None,
-              elastic: bool | None = None
+              elastic: bool | None = None,
+              probed: bool | None = None
               ) -> tuple[DatacenterState, StepRecord]:
     """Run exactly ``num_steps`` events via ``lax.scan``, keeping telemetry.
 
@@ -964,9 +1068,11 @@ def run_trace(dc: DatacenterState, *, num_steps: int,
         networked = wants_network(dc)
     if elastic is None:
         elastic = wants_elastic(dc)
+    if probed is None:
+        probed = wants_probes(dc)
     return _run_trace(dc, num_steps=num_steps,
                       provision_policy=provision_policy, dynamic=dynamic,
-                      networked=networked, elastic=elastic)
+                      networked=networked, elastic=elastic, probed=probed)
 
 
 def _lane_dynamic(batch: DatacenterState) -> jnp.ndarray:
@@ -989,14 +1095,23 @@ def _lane_elastic(batch: DatacenterState) -> jnp.ndarray:
             | (jnp.asarray(batch.scaler.spot_enabled) == 1))
 
 
+def _lane_probed(batch: DatacenterState) -> jnp.ndarray:
+    """bool[L] — lanes carrying an enabled metrics plane.  Constant over
+    the run, hence monotone: once every live probed lane quiesces the
+    dispatch drops to the unprobed step (bitwise-identical for lanes
+    this rejects — the probed step never touches a disabled plane)."""
+    return jnp.asarray(batch.metrics.enabled) == 1
+
+
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
                                    "dynamic", "networked", "elastic",
-                                   "leap"))
+                                   "leap", "probed"))
 def batched_run(batch: DatacenterState, *, max_steps: int,
                 horizon: float = float("inf"),
                 provision_policy: int = FIRST_FIT, dynamic: bool = True,
                 networked: bool = False, elastic: bool = False,
-                leap: bool = _LEAP_DEFAULT) -> DatacenterState:
+                leap: bool = _LEAP_DEFAULT,
+                probed: bool = False) -> DatacenterState:
     """Run a batched state (leading lane axis) to quiescence.
 
     Equivalent to ``vmap(run)`` lane for lane — finished lanes are frozen
@@ -1016,11 +1131,11 @@ def batched_run(batch: DatacenterState, *, max_steps: int,
     hor = jnp.minimum(jnp.asarray(horizon, jnp.float32), INF)
     lanes = batch.time.shape[0]
 
-    def _vstep(dyn: bool, net: bool, ela: bool):
+    def _vstep(dyn: bool, net: bool, ela: bool, prb: bool):
         def one(d, bud):
             return step(d, provision_policy=provision_policy, dynamic=dyn,
                         networked=net, elastic=ela, leap=leap,
-                        leap_budget=bud, leap_horizon=hor)
+                        leap_budget=bud, leap_horizon=hor, probed=prb)
         return lambda op: jax.vmap(one)(op[0], op[1])
 
     def body(carry):
@@ -1028,8 +1143,8 @@ def batched_run(batch: DatacenterState, *, max_steps: int,
         live = alive & (n < max_steps) & (b.time < hor)
         bud = jnp.int32(max_steps) - n - 1
         op = (b, bud)
-        if not (dynamic or networked or elastic):
-            new, rec = _vstep(False, False, False)(op)
+        if not (dynamic or networked or elastic or probed):
+            new, rec = _vstep(False, False, False, False)(op)
         else:
             # nested binary dispatch over the *active* static dimensions:
             # each per-step predicate reduces over live lanes, picking the
@@ -1041,12 +1156,15 @@ def batched_run(batch: DatacenterState, *, max_steps: int,
                 need["net"] = jnp.any(live & (b.net.enabled == 1))
             if elastic:
                 need["ela"] = jnp.any(live & _lane_elastic(b))
+            if probed:
+                need["prb"] = jnp.any(live & _lane_probed(b))
 
             def dispatch(names, flags):
                 if not names:
                     return _vstep(flags.get("dyn", False),
                                   flags.get("net", False),
-                                  flags.get("ela", False))
+                                  flags.get("ela", False),
+                                  flags.get("prb", False))
                 name, rest = names[0], names[1:]
                 on = dispatch(rest, {**flags, name: True})
                 off = dispatch(rest, {**flags, name: False})
@@ -1228,7 +1346,8 @@ def _admit_due(dc: DatacenterState, st: StreamState, chunk
 
 def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
                  *, provision_policy: int, dynamic: bool, networked: bool,
-                 elastic: bool, leap: bool, max_steps_per_chunk: int
+                 elastic: bool, leap: bool, max_steps_per_chunk: int,
+                 probed: bool
                  ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
     """lax.scan over arrival chunks: admit -> step until the chunk drains.
 
@@ -1280,7 +1399,8 @@ def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
                             elastic=elastic, leap=leap,
                             leap_budget=(jnp.int32(max_steps_per_chunk)
                                          - n - 1),
-                            streaming=True, next_arrival=nxt)
+                            streaming=True, next_arrival=nxt,
+                            probed=probed)
 
             def _handoff(d_):
                 z = jnp.int32(0)
@@ -1315,14 +1435,15 @@ def _stream_core(dc: DatacenterState, st: StreamState, stream: ArrivalStream,
 
 _run_stream = jax.jit(_stream_core, static_argnames=(
     "provision_policy", "dynamic", "networked", "elastic", "leap",
-    "max_steps_per_chunk"))
+    "max_steps_per_chunk", "probed"))
 
 
 def run_stream(dc: DatacenterState, stream: ArrivalStream, *,
                reservoir: int = 64, provision_policy: int = FIRST_FIT,
                dynamic: bool | None = None, networked: bool | None = None,
                elastic: bool | None = None,
-               leap: bool | None = None, max_steps_per_chunk: int = 4096
+               leap: bool | None = None, max_steps_per_chunk: int = 4096,
+               probed: bool | None = None
                ) -> tuple[DatacenterState, StreamState, StreamChunkRecord]:
     """Run a streamed-arrival scenario to quiescence (docs/streaming.md).
 
@@ -1348,9 +1469,12 @@ def run_stream(dc: DatacenterState, stream: ArrivalStream, *,
         elastic = wants_elastic(dc)
     if leap is None:
         leap = _LEAP_DEFAULT
+    if probed is None:
+        probed = wants_probes(dc)
     st = make_stream_state(stream, dc.vms.req_pes.shape[0],
                            dc.cloudlets.vm.shape[0], reservoir=reservoir)
     return _run_stream(dc, st, stream, provision_policy=provision_policy,
                        dynamic=dynamic, networked=networked,
                        elastic=elastic, leap=leap,
-                       max_steps_per_chunk=max_steps_per_chunk)
+                       max_steps_per_chunk=max_steps_per_chunk,
+                       probed=probed)

@@ -32,9 +32,11 @@ import numpy as np
 
 from repro.core import broker as B
 from repro.core import cis
+from repro.core import engine
 from repro.core import federation as F
 from repro.core import state as S
 from repro.core import sweep
+from repro.core import telemetry
 from repro.core.provisioning import FIRST_FIT
 
 __all__ = ["Provider", "UserFleet", "FederationStudy", "fleet_demand",
@@ -302,6 +304,12 @@ class ElasticityStudy(NamedTuple):
     P = policy points, B = scenarios.  ``cost`` is spot spend + market
     bill summed across scenarios; ``pareto`` marks the nondominated
     points of the (cost, SLA violations, energy) trade-off.
+
+    When the batch carries an enabled metrics plane (``state.
+    make_datacenter(..., metrics=metrics.make_metrics(...))``), each
+    Pareto point also gains latency-percentile and breach-time columns
+    from the in-run histograms — *why* a point wins, not just its
+    scalars.  NaN columns when probes are off.
     """
     grid: sweep.PolicyGrid        # the P searched points
     final: S.DatacenterState      # final states, leaves [P, B, ...]
@@ -314,6 +322,11 @@ class ElasticityStudy(NamedTuple):
     static_sla: jnp.ndarray       # i32[] baseline SLA violations
     static_cost: jnp.ndarray      # f32[] baseline spot + market $
     static_energy_j: jnp.ndarray  # f32[] baseline joules
+    latency_p50: np.ndarray       # f64[P] response p50 across scenarios (NaN
+                                  #   when probes are off)
+    latency_p95: np.ndarray       # f64[P] response p95 (ditto)
+    first_breach_t: np.ndarray    # f64[P] earliest SLA breach across
+                                  #   scenarios (NaN = none / probes off)
 
 
 def run_elasticity_study(batch: S.DatacenterState, grid: sweep.PolicyGrid,
@@ -346,6 +359,21 @@ def run_elasticity_study(batch: S.DatacenterState, grid: sweep.PolicyGrid,
     front = pareto_front(np.stack([np.asarray(cost, np.float64),
                                    np.asarray(sla, np.float64),
                                    np.asarray(energy, np.float64)], axis=1))
+    n_pol = int(np.asarray(cost).shape[0])
+    if engine.wants_probes(batch):
+        m = final.metrics
+        hist = np.asarray(m.hist_response, np.int64)       # [P, B, NB]
+        edges = np.asarray(m.edges).reshape(hist.shape[:2] + (-1,))[0, 0]
+        lat50 = np.array([telemetry.hist_percentile(hist[p].sum(0), edges, 50)
+                          for p in range(n_pol)])
+        lat95 = np.array([telemetry.hist_percentile(hist[p].sum(0), edges, 95)
+                          for p in range(n_pol)])
+        fb = np.asarray(m.first_breach_t, np.float64).min(axis=-1)
+        breach_t = np.where(fb >= telemetry._METRICS_INF, np.nan, fb)
+    else:
+        lat50 = np.full(n_pol, np.nan)
+        lat95 = np.full(n_pol, np.nan)
+        breach_t = np.full(n_pol, np.nan)
     if static_batch is None:
         static_batch = dataclasses.replace(
             batch, scaler=dataclasses.replace(
@@ -364,4 +392,7 @@ def run_elasticity_study(batch: S.DatacenterState, grid: sweep.PolicyGrid,
             axis=-1),
         static_cost=jnp.sum(ssum.total_cost + ssum.spot_cost, axis=-1),
         static_energy_j=jnp.sum(ssum.energy_j, axis=-1),
+        latency_p50=lat50,
+        latency_p95=lat95,
+        first_breach_t=breach_t,
     )

@@ -1,0 +1,245 @@
+"""In-run metrics plane: fixed-shape, jit-safe probes (docs/observability.md).
+
+``MetricsState`` rides on ``DatacenterState`` the way ``AutoscalerState``
+does: an inert all-zero plane compiles away behind the static ``probed``
+gate, and an enabled plane accumulates O(K)-per-lane observables inside
+``engine.step`` — never O(events) — so fused sweeps, sharded lanes, and
+million-cloudlet streamed runs all get the same bounded-memory telemetry:
+
+* **bucketed timelines** — K fixed time buckets over a build-time
+  ``horizon`` accumulating time-weighted utilization / watts / fleet /
+  backlog / flows (masked scatter-adds; a leap-retired window books its
+  whole interval exactly, so leap stays bitwise and observable),
+* **streaming histograms** — NB fixed log-spaced bins for cloudlet
+  response / exec / wait times, filled once at retirement,
+* **counters / watermarks** — SLA breach count + first-breach time, peak
+  queue depth, per-host busy seconds.
+
+Every update is masked by ``active & (enabled == 1)``; all accumulated
+terms are >= 0 so ``x + (+0.0) == x`` holds bitwise and the quiescence
+fixed point survives.  The f64 oracle (``oracle/reference.py``) fills
+the same buckets and bins; conformance pins them at 1e-3 with exact
+counter equality.
+
+Import-light on purpose (state.py imports this module): jax/numpy only.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MetricsState", "make_metrics", "no_metrics", "metrics_edges",
+    "bucket_overlap", "hist_index", "accrue_interval", "fill_retirement",
+]
+
+INF = jnp.float32(1e30)
+
+
+def pytree_dataclass(cls):
+    """Register a dataclass whose every field is pytree data (the
+    ``state.pytree_dataclass`` idiom, duplicated here so state.py can
+    import this module without a cycle)."""
+    cls = dataclasses.dataclass(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    return jax.tree_util.register_dataclass(cls, data_fields=fields,
+                                            meta_fields=[])
+
+
+@pytree_dataclass
+class MetricsState:
+    """Per-lane metrics plane (all arrays fixed-shape; see make_metrics).
+
+    ``enabled == 0`` (``no_metrics``) is inert: the static ``probed``
+    gate skips every probe and the state rides along untouched, so the
+    compiled program is the pre-metrics one bit for bit.
+    """
+    enabled: jnp.ndarray         # i32[]   1 = collect probes on this lane
+    horizon: jnp.ndarray         # f32[]   bucket span end (seconds)
+    sla_factor: jnp.ndarray      # f32[]   response bound multiplier (0 = off)
+    edges: jnp.ndarray           # f32[NB+1] histogram bin edges, [0, .., INF]
+    bucket_dt: jnp.ndarray       # f32[K]  seconds of sim time per bucket
+    bucket_util: jnp.ndarray     # f32[K]  integral of utilization dt
+    bucket_watts: jnp.ndarray    # f32[K]  integral of total watts dt
+    bucket_fleet: jnp.ndarray    # f32[K]  integral of alive-VM count dt
+    bucket_backlog: jnp.ndarray  # f32[K]  integral of queued-cloudlet count dt
+    bucket_flows: jnp.ndarray    # f32[K]  integral of active-flow count dt
+    hist_response: jnp.ndarray   # i32[NB] finish - submit at retirement
+    hist_exec: jnp.ndarray       # i32[NB] finish - start at retirement
+    hist_wait: jnp.ndarray       # i32[NB] start - submit at retirement
+    sla_breaches: jnp.ndarray    # i32[]   retired with response > bound
+    first_breach_t: jnp.ndarray  # f32[]   finish time of first breach (INF)
+    peak_backlog: jnp.ndarray    # i32[]   high-watermark of queued cloudlets
+    host_busy_s: jnp.ndarray     # f32[H]  seconds each host ran any cloudlet
+
+
+def metrics_edges(bins: int, t_min: float, t_max: float) -> np.ndarray:
+    """f32[bins+1] histogram edges: [0, geomspace(t_min..t_max), INF].
+
+    Built host-side in f64 then cast once — the engine and the f64
+    oracle index with ``searchsorted`` against this *same* f32 array, so
+    bin boundaries agree bit for bit on both sides.
+    """
+    if bins < 2:
+        raise ValueError("metrics histograms need >= 2 bins")
+    interior = np.geomspace(float(t_min), float(t_max), bins - 1)
+    return np.concatenate(
+        [[0.0], interior, [1e30]]).astype(np.float32)
+
+
+def make_metrics(n_hosts: int, *, horizon: float, buckets: int = 32,
+                 bins: int = 24, t_min: float = 1e-2, t_max: float = 1e4,
+                 sla_factor: float = 0.0) -> MetricsState:
+    """Enabled metrics plane: K=``buckets`` timeline rows over
+    ``[0, horizon)`` (the last bucket absorbs overflow), NB=``bins``
+    log-spaced histogram bins spanning ``[t_min, t_max]`` with an
+    underflow bin [0, t_min) and an overflow bin [t_max, INF).
+
+    ``sla_factor > 0`` arms the SLA watermark with the
+    ``experiments.sla_violations`` bound: a retirement breaches when
+    ``finish - submit > sla_factor * length / req_mips(vm)``.
+
+    Lanes stacked into one batch must share ``buckets`` and ``bins``
+    (fixed shapes are what make the plane fuse/shard-safe); ``horizon``
+    and ``sla_factor`` may vary per lane.
+    """
+    if buckets < 1:
+        raise ValueError("metrics timelines need >= 1 bucket")
+    if not horizon > 0.0:
+        raise ValueError("metrics horizon must be > 0")
+    f32 = jnp.float32
+    return MetricsState(
+        enabled=jnp.int32(1),
+        horizon=f32(horizon),
+        sla_factor=f32(sla_factor),
+        edges=jnp.asarray(metrics_edges(bins, t_min, t_max)),
+        bucket_dt=jnp.zeros((buckets,), f32),
+        bucket_util=jnp.zeros((buckets,), f32),
+        bucket_watts=jnp.zeros((buckets,), f32),
+        bucket_fleet=jnp.zeros((buckets,), f32),
+        bucket_backlog=jnp.zeros((buckets,), f32),
+        bucket_flows=jnp.zeros((buckets,), f32),
+        hist_response=jnp.zeros((bins,), jnp.int32),
+        hist_exec=jnp.zeros((bins,), jnp.int32),
+        hist_wait=jnp.zeros((bins,), jnp.int32),
+        sla_breaches=jnp.int32(0),
+        first_breach_t=INF,
+        peak_backlog=jnp.int32(0),
+        host_busy_s=jnp.zeros((n_hosts,), f32))
+
+
+def no_metrics(n_hosts: int) -> MetricsState:
+    """Inert plane (enabled=0, K=1, NB=2) — the default on every state.
+
+    Minimal shapes keep the dormant plane a few words per lane; the
+    static ``probed`` gate means it is never touched by the engine.
+    """
+    f32 = jnp.float32
+    return MetricsState(
+        enabled=jnp.int32(0),
+        horizon=f32(0.0),
+        sla_factor=f32(0.0),
+        edges=jnp.asarray([0.0, 1.0, 1e30], f32),
+        bucket_dt=jnp.zeros((1,), f32),
+        bucket_util=jnp.zeros((1,), f32),
+        bucket_watts=jnp.zeros((1,), f32),
+        bucket_fleet=jnp.zeros((1,), f32),
+        bucket_backlog=jnp.zeros((1,), f32),
+        bucket_flows=jnp.zeros((1,), f32),
+        hist_response=jnp.zeros((2,), jnp.int32),
+        hist_exec=jnp.zeros((2,), jnp.int32),
+        hist_wait=jnp.zeros((2,), jnp.int32),
+        sla_breaches=jnp.int32(0),
+        first_breach_t=INF,
+        peak_backlog=jnp.int32(0),
+        host_busy_s=jnp.zeros((n_hosts,), f32))
+
+
+def bucket_overlap(m: MetricsState, t0, t1, gate) -> jnp.ndarray:
+    """f32[K] — overlap seconds of [t0, t1) with each time bucket.
+
+    Buckets tile ``[0, horizon)`` in K equal widths; the last bucket is
+    open-ended so post-horizon time still lands somewhere (its mean
+    stays well-defined via ``bucket_dt``).  Zero everywhere when
+    ``gate`` is False — adding +0.0 preserves the quiescence fixed
+    point bitwise.
+    """
+    k = m.bucket_dt.shape[0]
+    w = m.horizon / jnp.float32(k)
+    lo = jnp.arange(k, dtype=jnp.float32) * w
+    hi = jnp.where(jnp.arange(k) == k - 1, INF, lo + w)
+    ov = jnp.clip(jnp.minimum(t1, hi) - jnp.maximum(t0, lo), 0.0, None)
+    return jnp.where(gate, ov, 0.0)
+
+
+def accrue_interval(m: MetricsState, *, t0, t1, util, watts, fleet,
+                    backlog, flows, busy_hosts, dt) -> MetricsState:
+    """Book one committed interval [t0, t1) into the timeline buckets.
+
+    Every observable is constant over a committed interval (rates are
+    piecewise-constant between events — the engine's core invariant), so
+    ``value * overlap`` is the exact integral per bucket.  Called with
+    identical f32 inputs from both the ``step`` commit and the leap
+    body, so leap-on/off parity extends to the metrics plane.  All terms
+    are >= 0 and gate to +0.0 when ``enabled == 0`` or the lane is
+    quiesced (empty interval), preserving the bitwise fixed point.
+    """
+    gate = m.enabled == 1
+    ov = bucket_overlap(m, t0, t1, gate)
+    bk = backlog.astype(jnp.float32)
+    return dataclasses.replace(
+        m,
+        bucket_dt=m.bucket_dt + ov,
+        bucket_util=m.bucket_util + ov * util,
+        bucket_watts=m.bucket_watts + ov * watts,
+        bucket_fleet=m.bucket_fleet + ov * fleet,
+        bucket_backlog=m.bucket_backlog + ov * bk,
+        bucket_flows=m.bucket_flows + ov * flows.astype(jnp.float32),
+        peak_backlog=jnp.where(gate, jnp.maximum(m.peak_backlog, backlog),
+                               m.peak_backlog),
+        host_busy_s=m.host_busy_s + jnp.where(gate, dt, 0.0) * busy_hosts)
+
+
+def fill_retirement(m: MetricsState, *, newly, finish, submit, start,
+                    bound) -> MetricsState:
+    """Book newly-retired cloudlets into the histograms + SLA watermarks.
+
+    ``newly`` masks cloudlets that became CL_DONE this commit; masked-
+    out rows scatter +0 (their value indices are still computed but
+    clipped in-range), so a quiesced step is a bitwise identity.
+    ``bound`` is the per-cloudlet SLA response bound
+    (``sla_factor * length / req_mips``, the ``experiments.
+    sla_violations`` formula); ``sla_factor == 0`` disarms breaches.
+    """
+    gate = m.enabled == 1
+    mask = newly & gate
+    one = mask.astype(jnp.int32)
+    resp = finish - submit
+    exe = finish - start
+    wait = start - submit
+    breach = mask & (m.sla_factor > 0.0) & (resp > bound)
+    return dataclasses.replace(
+        m,
+        hist_response=m.hist_response.at[hist_index(m.edges, resp)].add(one),
+        hist_exec=m.hist_exec.at[hist_index(m.edges, exe)].add(one),
+        hist_wait=m.hist_wait.at[hist_index(m.edges, wait)].add(one),
+        sla_breaches=m.sla_breaches + jnp.sum(breach.astype(jnp.int32)),
+        first_breach_t=jnp.minimum(
+            m.first_breach_t, jnp.min(jnp.where(breach, finish, INF))))
+
+
+def hist_index(edges: jnp.ndarray, v) -> jnp.ndarray:
+    """Bin index of value(s) ``v`` against a shared f32 ``edges`` array.
+
+    ``side='right'`` puts a value sitting exactly on an edge into the
+    bin *above* it — the f64 oracle uses ``np.searchsorted`` on the
+    identical f32 edges after casting its value to f32, so any engine/
+    oracle disagreement is confined to values within tolerance of an
+    edge (the margin-aware conformance check).
+    """
+    nb = edges.shape[0] - 1
+    idx = jnp.searchsorted(edges, v, side="right") - 1
+    return jnp.clip(idx, 0, nb - 1)

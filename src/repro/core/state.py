@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import make_power_model
+from repro.core.metrics import MetricsState, make_metrics, no_metrics
 from repro.core.segments import segment_rank
 
 # ---------------------------------------------------------------------------
@@ -369,6 +370,9 @@ class DatacenterState:
     # ``no_autoscaler`` default keeps every field inert and the compiled
     # program identical to the pre-elastic engine.
     scaler: AutoscalerState
+    # in-run metrics plane (core/metrics.py); the ``no_metrics`` default
+    # is inert the same way — probes off compiles the identical program.
+    metrics: MetricsState
 
 
 # ---------------------------------------------------------------------------
@@ -630,7 +634,8 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
                     mig_policy=MIG_OFF, mig_threshold=0.8,
                     mig_energy_per_mb=0.0,
                     net: NetTopology | None = None,
-                    scaler: AutoscalerState | None = None) -> DatacenterState:
+                    scaler: AutoscalerState | None = None,
+                    metrics: MetricsState | None = None) -> DatacenterState:
     zero = jnp.float32(0.0)
     events = no_events() if events is None else jnp.asarray(events,
                                                             jnp.float32)
@@ -638,6 +643,8 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
         net = no_network(hosts.num_pes.shape[0])
     if scaler is None:
         scaler = no_autoscaler()
+    if metrics is None:
+        metrics = no_metrics(hosts.num_pes.shape[0])
     return DatacenterState(
         hosts=hosts, vms=vms, cloudlets=cloudlets,
         rates=rates if rates is not None else make_market(),
@@ -656,4 +663,5 @@ def make_datacenter(hosts: HostState, vms: VmState, cloudlets: CloudletState,
         net=net,
         net_transferred_mb=jnp.float32(0.0),
         scaler=scaler,
+        metrics=metrics,
     )

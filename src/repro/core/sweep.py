@@ -157,7 +157,10 @@ def pad_scenario(dc: DatacenterState, *, n_hosts: int | None = None,
         scaler=dataclasses.replace(
             sc,
             spot_t=_pad_axis0(sc.spot_t, ns, sc.spot_t[-1]),
-            spot_price=_pad_axis0(sc.spot_price, ns, sc.spot_price[-1])))
+            spot_price=_pad_axis0(sc.spot_price, ns, sc.spot_price[-1])),
+        metrics=dataclasses.replace(
+            dc.metrics,
+            host_busy_s=_pad_axis0(dc.metrics.host_busy_s, nh, 0.0)))
 
 
 def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
@@ -182,21 +185,23 @@ def stack_scenarios(dcs: Sequence[DatacenterState]) -> DatacenterState:
 # ---------------------------------------------------------------------------
 def _run_batch(batch: DatacenterState, *, max_steps: int,
                provision_policy: int, dynamic: bool,
-               networked: bool, elastic: bool = False) -> DatacenterState:
+               networked: bool, elastic: bool = False,
+               probed: bool = False) -> DatacenterState:
     # engine.batched_run == vmap(engine.run) lane for lane (bitwise), plus
     # the dead-lane early-exit: the dynamic/networked/elastic passes switch
     # off the moment no live lane needs them (tests/test_leap_parity.py).
     return engine.batched_run(batch, max_steps=max_steps,
                               provision_policy=provision_policy,
                               dynamic=dynamic, networked=networked,
-                              elastic=elastic)
+                              elastic=elastic, probed=probed)
 
 
 def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
               provision_policy: int = FIRST_FIT,
               dynamic: bool | None = None,
               networked: bool | None = None,
-              elastic: bool | None = None) -> DatacenterState:
+              elastic: bool | None = None,
+              probed: bool | None = None) -> DatacenterState:
     """vmap ``engine.run`` over a stacked scenario batch (one compiled call).
 
     Each lane runs to its own quiescence; lanes that finish early take
@@ -206,9 +211,10 @@ def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
     migration policy (``engine.wants_dynamic``); ``networked=None``
     likewise auto-detects an enabled topology (``engine.wants_network``);
     ``elastic=None`` an enabled autoscaler or spot track
-    (``engine.wants_elastic``).  The whole batch then runs the
-    dynamic/networked/elastic program — inert for lanes without the
-    matching subsystem.
+    (``engine.wants_elastic``); ``probed=None`` an enabled metrics plane
+    (``engine.wants_probes``).  The whole batch then runs the
+    dynamic/networked/elastic/probed program — inert for lanes without
+    the matching subsystem.
     """
     if dynamic is None:
         dynamic = engine.wants_dynamic(batch)
@@ -216,17 +222,21 @@ def run_batch(batch: DatacenterState, *, max_steps: int = 1_000_000,
         networked = engine.wants_network(batch)
     if elastic is None:
         elastic = engine.wants_elastic(batch)
+    if probed is None:
+        probed = engine.wants_probes(batch)
     return _run_batch(batch, max_steps=max_steps,
                       provision_policy=provision_policy, dynamic=dynamic,
-                      networked=networked, elastic=elastic)
+                      networked=networked, elastic=elastic, probed=probed)
 
 
 @partial(jax.jit, static_argnames=("max_steps", "provision_policy",
-                                   "dynamic", "networked", "elastic"))
+                                   "dynamic", "networked", "elastic",
+                                   "probed"))
 def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                      task_policies: jnp.ndarray, *, max_steps: int,
                      provision_policy: int, dynamic: bool, networked: bool,
-                     elastic: bool = False) -> DatacenterState:
+                     elastic: bool = False,
+                     probed: bool = False) -> DatacenterState:
     def one_policy(vp, tp):
         withp = dataclasses.replace(
             batch,
@@ -235,7 +245,7 @@ def _run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
         return _run_batch(withp, max_steps=max_steps,
                           provision_policy=provision_policy,
                           dynamic=dynamic, networked=networked,
-                          elastic=elastic)
+                          elastic=elastic, probed=probed)
 
     return jax.vmap(one_policy)(jnp.asarray(vm_policies, jnp.int32),
                                 jnp.asarray(task_policies, jnp.int32))
@@ -246,7 +256,8 @@ def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
                     provision_policy: int = FIRST_FIT,
                     dynamic: bool | None = None,
                     networked: bool | None = None,
-                    elastic: bool | None = None) -> DatacenterState:
+                    elastic: bool | None = None,
+                    probed: bool | None = None) -> DatacenterState:
     """Reference grid runner: outer vmap over policies, inner over scenarios.
 
     The PR-1 implementation, kept as the differential baseline for the
@@ -259,11 +270,13 @@ def run_grid_nested(batch: DatacenterState, vm_policies: jnp.ndarray,
         networked = engine.wants_network(batch)
     if elastic is None:
         elastic = engine.wants_elastic(batch)
+    if probed is None:
+        probed = engine.wants_probes(batch)
     return _run_grid_nested(batch, vm_policies, task_policies,
                             max_steps=max_steps,
                             provision_policy=provision_policy,
                             dynamic=dynamic, networked=networked,
-                            elastic=elastic)
+                            elastic=elastic, probed=probed)
 
 
 def fuse_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
@@ -381,7 +394,8 @@ def _dispatch_cost(batch: DatacenterState) -> np.ndarray:
 
 def _dispatch_run(batch: DatacenterState, mesh, *, max_steps: int,
                   provision_policy: int, dynamic: bool, networked: bool,
-                  elastic: bool = False, chunk: int = 4) -> DatacenterState:
+                  elastic: bool = False, probed: bool = False,
+                  chunk: int = 4) -> DatacenterState:
     """Sorted-chunk dispatch: per-call sharding without SPMD.
 
     Lanes are sorted by estimated cost (descending) and cut into
@@ -407,7 +421,8 @@ def _dispatch_run(batch: DatacenterState, mesh, *, max_steps: int,
             lambda x: jax.device_put(jnp.take(x, idx, axis=0), dev), batch)
         outs.append(engine.batched_run(
             sub, max_steps=max_steps, provision_policy=provision_policy,
-            dynamic=dynamic, networked=networked, elastic=elastic))
+            dynamic=dynamic, networked=networked, elastic=elastic,
+            probed=probed))
     cat = jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate([jax.device_put(x, devs[0])
                                      for x in xs]), *outs)
@@ -423,7 +438,7 @@ def _default_inner() -> str:
 @lru_cache(maxsize=None)
 def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
                     inner: str, dynamic: bool, networked: bool,
-                    elastic: bool = False):
+                    elastic: bool = False, probed: bool = False):
     """jit(shard_map(map-or-vmap(run))) for one (mesh, statics) combination.
 
     Cached so repeated sweeps with the same mesh reuse the compiled
@@ -445,7 +460,7 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
     def go(block: DatacenterState) -> DatacenterState:
         f = partial(engine.run, max_steps=max_steps,
                     provision_policy=provision_policy, dynamic=dynamic,
-                    networked=networked, elastic=elastic)
+                    networked=networked, elastic=elastic, probed=probed)
         if inner == "vmap":
             return jax.vmap(f)(block)
         return jax.lax.map(f, block)
@@ -455,7 +470,8 @@ def _sharded_runner(mesh, axis: str, max_steps: int, provision_policy: int,
 
 @lru_cache(maxsize=None)
 def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
-                  dynamic: bool, networked: bool, elastic: bool = False):
+                  dynamic: bool, networked: bool, elastic: bool = False,
+                  probed: bool = False):
     """jit(vmap(run)) with GSPMD in/out shardings over the lane axis.
 
     Same program as ``run_batch`` — XLA's automatic partitioner splits
@@ -467,7 +483,7 @@ def _gspmd_runner(mesh, axis: str, max_steps: int, provision_policy: int,
     shd = NamedSharding(mesh, P(axis))
     f = partial(engine.run, max_steps=max_steps,
                 provision_policy=provision_policy, dynamic=dynamic,
-                networked=networked, elastic=elastic)
+                networked=networked, elastic=elastic, probed=probed)
     return jax.jit(jax.vmap(f), in_shardings=(shd,), out_shardings=shd)
 
 
@@ -478,7 +494,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
                 inner: str | None = None,
                 dynamic: bool | None = None,
                 networked: bool | None = None,
-                elastic: bool | None = None) -> DatacenterState:
+                elastic: bool | None = None,
+                probed: bool | None = None) -> DatacenterState:
     """``run_batch`` with the lane axis split across the devices of a mesh.
 
     ``mesh`` is a 1-D ``jax.sharding.Mesh`` (default: all local devices,
@@ -518,6 +535,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         networked = engine.wants_network(batch)
     if elastic is None:
         elastic = engine.wants_elastic(batch)
+    if probed is None:
+        probed = engine.wants_probes(batch)
     n_dev = mesh.shape[axis]
     partitioner = _resolve_partitioner(partitioner, n_dev=n_dev,
                                        dispatch_ok=True)
@@ -526,18 +545,18 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
         return _dispatch_run(batch, mesh, max_steps=max_steps,
                              provision_policy=provision_policy,
                              dynamic=dynamic, networked=networked,
-                             elastic=elastic)
+                             elastic=elastic, probed=probed)
     have = batch.time.shape[0]
     lanes = -(-have // n_dev) * n_dev
     padded = pad_batch(batch, lanes)
     if partitioner == "gspmd":
         out = _gspmd_runner(mesh, axis, max_steps, provision_policy,
-                            dynamic, networked, elastic)(padded)
+                            dynamic, networked, elastic, probed)(padded)
     else:
         out = _sharded_runner(mesh, axis, max_steps, provision_policy,
                               inner if inner is not None
                               else _default_inner(), dynamic,
-                              networked, elastic)(padded)
+                              networked, elastic, probed)(padded)
     if lanes == have:
         return out
     return jax.tree_util.tree_map(lambda x: x[:have], out)
@@ -546,7 +565,8 @@ def run_sharded(batch: DatacenterState, *, mesh=None, axis: str = "sweep",
 @lru_cache(maxsize=None)
 def _grid_runner(mesh, max_steps: int, provision_policy: int,
                  partitioner: str, inner: str, dynamic: bool,
-                 networked: bool, elastic: bool = False):
+                 networked: bool, elastic: bool = False,
+                 probed: bool = False):
     """One jitted fuse -> (shard) -> run -> reshape pipeline per config.
 
     The whole grid — policy broadcast, inert mesh padding, the flat lane
@@ -557,7 +577,7 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
     run_lane = lambda dc: engine.run(dc, max_steps=max_steps,
                                      provision_policy=provision_policy,
                                      dynamic=dynamic, networked=networked,
-                                     elastic=elastic)
+                                     elastic=elastic, probed=probed)
 
     def fn(batch, vm_policies, task_policies):
         n_pol = vm_policies.shape[0]
@@ -567,7 +587,7 @@ def _grid_runner(mesh, max_steps: int, provision_policy: int,
             out = engine.batched_run(fused, max_steps=max_steps,
                                      provision_policy=provision_policy,
                                      dynamic=dynamic, networked=networked,
-                                     elastic=elastic)
+                                     elastic=elastic, probed=probed)
         else:
             axis = _lane_axis(mesh)
             n_dev = mesh.shape[axis]
@@ -599,7 +619,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
              partitioner: str = "auto",
              dynamic: bool | None = None,
              networked: bool | None = None,
-             elastic: bool | None = None) -> DatacenterState:
+             elastic: bool | None = None,
+             probed: bool | None = None) -> DatacenterState:
     """Scenarios x policy grid as ONE fused, device-sharded batch.
 
     ``vm_policies``/``task_policies`` are i32[P] (paired — e.g. the 2x2
@@ -632,6 +653,8 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         networked = engine.wants_network(batch)
     if elastic is None:
         elastic = engine.wants_elastic(batch)
+    if probed is None:
+        probed = engine.wants_probes(batch)
     n_dev = mesh.shape[_lane_axis(mesh)] if mesh is not None else 1
     resolved = _resolve_partitioner(partitioner, n_dev=n_dev,
                                     dispatch_ok=mesh is not None)
@@ -643,12 +666,12 @@ def run_grid(batch: DatacenterState, vm_policies: jnp.ndarray,
         out = _dispatch_run(fused, mesh, max_steps=max_steps,
                             provision_policy=provision_policy,
                             dynamic=dynamic, networked=networked,
-                            elastic=elastic)
+                            elastic=elastic, probed=probed)
         return jax.tree_util.tree_map(
             lambda x: x.reshape((n_pol, n_scen) + x.shape[1:]), out)
     return _grid_runner(mesh, max_steps, provision_policy, resolved,
                         _default_inner(), dynamic, networked,
-                        elastic)(batch, vm_policies, task_policies)
+                        elastic, probed)(batch, vm_policies, task_policies)
 
 
 def policy_grid() -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -817,7 +840,8 @@ def _stack_stream_states(streams: ArrivalStream, n_vms: int, n_slots: int,
 def _stream_batch_runner(provision_policy: int, dynamic: bool,
                          networked: bool, leap: bool,
                          max_steps_per_chunk: int, mesh=None,
-                         axis: str | None = None, elastic: bool = False):
+                         axis: str | None = None, elastic: bool = False,
+                         probed: bool = False):
     """jit(vmap(engine._stream_core)) for one static config.
 
     ``mesh`` adds GSPMD lane-axis in/out shardings (the only sharded
@@ -827,7 +851,8 @@ def _stream_batch_runner(provision_policy: int, dynamic: bool,
     identical on every backend)."""
     f = partial(engine._stream_core, provision_policy=provision_policy,
                 dynamic=dynamic, networked=networked, elastic=elastic,
-                leap=leap, max_steps_per_chunk=max_steps_per_chunk)
+                probed=probed, leap=leap,
+                max_steps_per_chunk=max_steps_per_chunk)
     vf = jax.vmap(f)
     if mesh is None:
         return jax.jit(vf)
@@ -861,6 +886,7 @@ def run_stream_batch(batch: DatacenterState,
                      dynamic: bool | None = None,
                      networked: bool | None = None,
                      elastic: bool | None = None,
+                     probed: bool | None = None,
                      leap: bool | None = None,
                      max_steps_per_chunk: int = 4096,
                      mesh=None, axis: str = "sweep"
@@ -887,6 +913,8 @@ def run_stream_batch(batch: DatacenterState,
         networked = engine.wants_network(batch)
     if elastic is None:
         elastic = engine.wants_elastic(batch)
+    if probed is None:
+        probed = engine.wants_probes(batch)
     if leap is None:
         leap = engine._LEAP_DEFAULT
     sts = _stack_stream_states(streams, batch.vms.req_pes.shape[-1],
@@ -894,7 +922,7 @@ def run_stream_batch(batch: DatacenterState,
     if mesh is None:
         runner = _stream_batch_runner(provision_policy, dynamic, networked,
                                       leap, max_steps_per_chunk,
-                                      elastic=elastic)
+                                      elastic=elastic, probed=probed)
         return runner(batch, sts, streams)
     axis = _lane_axis(mesh)
     n_dev = mesh.shape[axis]
@@ -909,7 +937,7 @@ def run_stream_batch(batch: DatacenterState,
         sts = jax.tree_util.tree_map(grow, sts, pad_st)
     runner = _stream_batch_runner(provision_policy, dynamic, networked,
                                   leap, max_steps_per_chunk, mesh, axis,
-                                  elastic=elastic)
+                                  elastic=elastic, probed=probed)
     out = runner(batch, sts, streams)
     if lanes == have:
         return out
@@ -923,6 +951,7 @@ def run_stream_grid(batch: DatacenterState,
                     dynamic: bool | None = None,
                     networked: bool | None = None,
                     elastic: bool | None = None,
+                    probed: bool | None = None,
                     leap: bool | None = None,
                     max_steps_per_chunk: int = 4096,
                     mesh=None, axis: str = "sweep"
@@ -949,7 +978,7 @@ def run_stream_grid(batch: DatacenterState,
     out = run_stream_batch(fused, fused_streams, reservoir=reservoir,
                            provision_policy=provision_policy,
                            dynamic=dynamic, networked=networked,
-                           elastic=elastic, leap=leap,
+                           elastic=elastic, probed=probed, leap=leap,
                            max_steps_per_chunk=max_steps_per_chunk,
                            mesh=mesh, axis=axis)
     reshape = lambda x: x.reshape((n_pol, n_scen) + x.shape[1:])

@@ -1,8 +1,12 @@
 """Telemetry reducers — turn engine traces + final state into analyses.
 
-CloudSim's monitoring (§4.1 "dynamic monitoring") maps to two artifacts:
-the per-event ``StepRecord`` trace from ``engine.run_trace`` and the final
-``DatacenterState``.  Everything here is NumPy post-processing (outside jit).
+CloudSim's monitoring (§4.1 "dynamic monitoring") maps to three artifacts:
+the per-event ``StepRecord`` trace from ``engine.run_trace``, the final
+``DatacenterState``, and — for executions where an O(events) trace is
+unaffordable or unavailable (fused sweeps, sharded lanes, streamed runs)
+— the in-run ``MetricsState`` plane (``core/metrics.py``), reduced here
+by ``from_metrics`` / ``metrics_report``.  Everything in this module is
+NumPy post-processing (outside jit).
 """
 from __future__ import annotations
 
@@ -19,7 +23,9 @@ __all__ = ["completion_curve", "utilization_timeline", "watts_timeline",
            "transfer_timeline", "link_utilization_timeline",
            "fleet_timeline", "spot_cost_timeline",
            "gantt", "summarize_trace", "stream_timeline",
-           "summarize_stream_trace"]
+           "summarize_stream_trace",
+           "from_metrics", "hist_percentile", "metrics_report",
+           "validate_metrics_report", "METRICS_REPORT_SCHEMA"]
 
 
 def completion_curve(trace: StepRecord) -> tuple[np.ndarray, np.ndarray]:
@@ -105,7 +111,9 @@ def link_utilization_timeline(trace: StepRecord, wan_bw_mbps: float
     """
     t, mb, _ = transfer_timeline(trace)
     if len(t) == 0:
-        return t, mb
+        # an empty (times, util) pair — not the raw MB series
+        empty_util = np.zeros(0, dtype=mb.dtype)
+        return t, empty_util
     dt = np.diff(np.concatenate([[0.0], t]))
     dmb = np.diff(np.concatenate([[0.0], mb]))
     util = np.where(dt > 0, dmb / np.maximum(dt, 1e-12), 0.0)
@@ -201,15 +209,12 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
                 "migrations": 0, "peak_hosts_down": 0,
                 "transferred_mb": 0.0, "peak_flows": 0,
                 "peak_fleet": 0, "spot_cost": 0.0}
-    # time-weighted means over event intervals (interval i ends at t[i])
-    if len(t) > 1:
-        dt = np.diff(np.concatenate([[0.0], t]))
-        weights = np.maximum(dt, 1e-12)
-        mean_util = float(np.average(util, weights=weights))
-        mean_watts = float(np.average(watts, weights=weights))
-    else:
-        mean_util = float(util[0])
-        mean_watts = float(watts[0])
+    # time-weighted means over event intervals (interval i ends at t[i]);
+    # the single-event case is the same weighted average over [0, t0]
+    dt = np.diff(np.concatenate([[0.0], t]))
+    weights = np.maximum(dt, 1e-12)
+    mean_util = float(np.average(util, weights=weights))
+    mean_watts = float(np.average(watts, weights=weights))
     return {
         "events": int(act.sum()),
         "makespan": float(t[-1]),
@@ -225,3 +230,150 @@ def summarize_trace(trace: StepRecord) -> Dict[str, float]:
         "peak_fleet": int(np.asarray(trace.fleet)[act].max()),
         "spot_cost": float(np.asarray(trace.spot_cost)[act][-1]),
     }
+
+
+# ---------------------------------------------------------------------------
+# Metrics-plane reducers — the O(K) siblings of the trace reducers above.
+# The plane exists for every execution mode (fused, sharded, streamed);
+# index one lane out of a batched final state before reducing.
+# ---------------------------------------------------------------------------
+_METRICS_INF = 1e29  # first_breach_t sentinel threshold (engine uses 1e30)
+
+METRICS_REPORT_SCHEMA = "repro.metrics/v1"
+
+
+def from_metrics(dc: S.DatacenterState) -> Dict[str, np.ndarray]:
+    """Bucketed timelines from one lane's in-run metrics plane.
+
+    Mirrors the trace timeline API with K rows instead of one per event:
+    ``bucket_start`` holds each bucket's left edge (the last bucket is
+    open-ended past the horizon), ``bucket_dt`` the seconds of simulated
+    time booked into it, and the observable series are *time-weighted
+    bucket means* — e.g. ``utilization[j]`` is the mean fleet utilization
+    over the sim time that fell in bucket j (0.0 for buckets no interval
+    touched, so the series plot cleanly without NaNs).
+    """
+    m = dc.metrics
+    if np.asarray(m.bucket_dt).ndim != 1:
+        raise ValueError("from_metrics reduces one lane; index the batch "
+                         "axis first (e.g. jax.tree.map(lambda x: x[b], dc))")
+    dt = np.asarray(m.bucket_dt, np.float64)
+    k = dt.shape[0]
+    w = float(np.asarray(m.horizon, np.float64)) / k
+    denom = np.maximum(dt, 1e-12)
+    mean = lambda x: np.where(dt > 0, np.asarray(x, np.float64) / denom, 0.0)
+    return {
+        "bucket_start": np.arange(k, dtype=np.float64) * w,
+        "bucket_dt": dt,
+        "utilization": mean(m.bucket_util),
+        "watts": mean(m.bucket_watts),
+        "fleet": mean(m.bucket_fleet),
+        "backlog": mean(m.bucket_backlog),
+        "flows": mean(m.bucket_flows),
+    }
+
+
+def hist_percentile(hist, edges, q: float) -> float:
+    """Percentile estimate from a streaming histogram.
+
+    Walks the cumulative counts to the bin containing the q-th percentile
+    and returns a representative value for that bin: the geometric mean
+    of its edges (the bins are log-spaced), the midpoint for the
+    zero-anchored underflow bin, and the *lower* edge for the open-ended
+    overflow bin (a conservative under-estimate).  0.0 on an empty
+    histogram.
+    """
+    h = np.asarray(hist, np.float64)
+    edges = np.asarray(edges, np.float64)
+    total = h.sum()
+    if total <= 0:
+        return 0.0
+    c = np.cumsum(h)
+    idx = int(np.searchsorted(c, (q / 100.0) * total, side="left"))
+    idx = min(idx, len(h) - 1)
+    lo, hi = float(edges[idx]), float(edges[idx + 1])
+    if hi >= _METRICS_INF:
+        return lo
+    if lo <= 0.0:
+        return hi / 2.0
+    return float(np.sqrt(lo * hi))
+
+
+def metrics_report(dc: S.DatacenterState) -> Dict:
+    """Structured JSON-ready run report from one lane's metrics plane.
+
+    The schema (``repro.metrics/v1``, validated by
+    ``validate_metrics_report`` and ``tools/check_bench.py --report``):
+    bucketed timelines as emitted by ``from_metrics``, the three
+    retirement histograms with their shared edges, response percentiles
+    (p50/p95/p99 via ``hist_percentile``), and the counters/watermarks.
+    ``first_breach_t`` is ``None`` until a breach lands.
+    """
+    m = dc.metrics
+    tl = from_metrics(dc)
+    fb = float(np.asarray(m.first_breach_t, np.float64))
+    hist = lambda h: np.asarray(h, np.int64).tolist()
+    return {
+        "schema": METRICS_REPORT_SCHEMA,
+        "enabled": bool(np.asarray(m.enabled)),
+        "horizon_s": float(np.asarray(m.horizon, np.float64)),
+        "sla_factor": float(np.asarray(m.sla_factor, np.float64)),
+        "buckets": {k: v.tolist() for k, v in tl.items()},
+        "histograms": {
+            "edges": np.asarray(m.edges, np.float64).tolist(),
+            "response": hist(m.hist_response),
+            "exec": hist(m.hist_exec),
+            "wait": hist(m.hist_wait),
+        },
+        "percentiles": {
+            f"response_p{q}": hist_percentile(m.hist_response, m.edges, q)
+            for q in (50, 95, 99)
+        },
+        "counters": {
+            "retired": int(np.asarray(m.hist_response, np.int64).sum()),
+            "sla_breaches": int(np.asarray(m.sla_breaches)),
+            "first_breach_t": None if fb >= _METRICS_INF else fb,
+            "peak_backlog": int(np.asarray(m.peak_backlog)),
+        },
+        "host_busy_s": np.asarray(m.host_busy_s, np.float64).tolist(),
+    }
+
+
+def validate_metrics_report(report: Dict) -> None:
+    """Raise ``ValueError`` unless ``report`` is a well-formed v1 report.
+
+    Structural checks only (keys, lengths, basic invariants) — enough
+    for the CI smoke and ``tools/check_bench.py --report`` to reject a
+    mangled or schema-drifted report without re-running the engine.
+    """
+    if report.get("schema") != METRICS_REPORT_SCHEMA:
+        raise ValueError(f"unknown report schema: {report.get('schema')!r}")
+    for key in ("enabled", "horizon_s", "sla_factor", "buckets",
+                "histograms", "percentiles", "counters", "host_busy_s"):
+        if key not in report:
+            raise ValueError(f"report missing key: {key}")
+    tl = report["buckets"]
+    k = len(tl.get("bucket_dt", ()))
+    for key in ("bucket_start", "bucket_dt", "utilization", "watts",
+                "fleet", "backlog", "flows"):
+        if len(tl.get(key, ())) != k or k < 1:
+            raise ValueError(f"bucket series {key!r} is not length {k}")
+    hs = report["histograms"]
+    nb = len(hs.get("response", ()))
+    if nb < 2 or len(hs.get("edges", ())) != nb + 1:
+        raise ValueError("histogram edges must be one longer than bins")
+    for key in ("response", "exec", "wait"):
+        h = hs.get(key, ())
+        if len(h) != nb or any(int(x) < 0 for x in h):
+            raise ValueError(f"histogram {key!r} malformed")
+    cnt = report["counters"]
+    for key in ("retired", "sla_breaches", "peak_backlog"):
+        if int(cnt.get(key, -1)) < 0:
+            raise ValueError(f"counter {key!r} must be a non-negative int")
+    if sum(int(x) for x in hs["response"]) != int(cnt["retired"]):
+        raise ValueError("retired counter disagrees with response histogram")
+    fb = cnt.get("first_breach_t")
+    if fb is not None and not float(fb) >= 0.0:
+        raise ValueError("first_breach_t must be None or >= 0")
+    if fb is None and int(cnt["sla_breaches"]) > 0:
+        raise ValueError("breaches counted but first_breach_t is None")

@@ -154,6 +154,30 @@ class Cloudlet:
 
 
 @dataclasses.dataclass
+class OracleMetrics:
+    """f64 mirror of the engine's metrics plane accumulators
+    (``core/metrics.MetricsState``) — same bucket edges, same histogram
+    edges (the engine's f32 edges array, shared verbatim), filled by the
+    object walk.  Bucketed timelines and busy times compare at 1e-3;
+    histogram counts and watermarks are exact except for values within
+    f32 tolerance of a bin edge / SLA bound (the margin-aware check in
+    tests/test_conformance.py)."""
+    bucket_dt: np.ndarray           # f64[K] seconds booked per bucket
+    bucket_util: np.ndarray         # f64[K] integral of utilization dt
+    bucket_watts: np.ndarray        # f64[K] integral of watts dt
+    bucket_fleet: np.ndarray        # f64[K] integral of alive fleet dt
+    bucket_backlog: np.ndarray      # f64[K] integral of backlog dt
+    bucket_flows: np.ndarray        # f64[K] integral of active flows dt
+    hist_response: np.ndarray       # i64[NB] retirement response times
+    hist_exec: np.ndarray           # i64[NB] retirement exec times
+    hist_wait: np.ndarray           # i64[NB] retirement wait times
+    sla_breaches: int               # retirements with response > bound
+    first_breach_t: float           # finish time of first breach (INF)
+    peak_backlog: int               # high-watermark of queued cloudlets
+    host_busy_s: np.ndarray         # f64[H] busy seconds per host slot
+
+
+@dataclasses.dataclass
 class OracleResult:
     """Per-slot outcome arrays aligned with the dense state layout.
 
@@ -175,6 +199,7 @@ class OracleResult:
     scale_up_count: int = 0         # VMs created by the autoscaler loop
     scale_down_count: int = 0       # VMs destroyed by the autoscaler loop
     spot_cost: float = 0.0          # accrued spot spend ($, f64)
+    metrics: Optional[OracleMetrics] = None   # when the plane was enabled
 
     @property
     def n_done(self) -> int:
@@ -213,7 +238,12 @@ class ReferenceSimulator:
                  spot_enabled: bool = False,
                  spot_times: Sequence[float] = (),
                  spot_prices: Sequence[float] = (),
-                 spot_cost0: float = 0.0):
+                 spot_cost0: float = 0.0,
+                 metrics_enabled: bool = False,
+                 metrics_horizon: float = 0.0,
+                 metrics_sla_factor: float = 0.0,
+                 metrics_edges: Sequence[float] = (),
+                 metrics_buckets: int = 1):
         self.hosts = hosts
         self.vms = vms
         self.cloudlets = cloudlets
@@ -256,9 +286,34 @@ class ReferenceSimulator:
         self.spot_times = [float(t) for t in spot_times]
         self.spot_prices = [float(p) for p in spot_prices]
         self.spot_cost = float(spot_cost0)
+        # metrics plane (f64 mirror of core/metrics.MetricsState); the
+        # edges array is the engine's f32 edges verbatim so histogram
+        # bin boundaries agree bit for bit across both sides
+        self.metrics_enabled = bool(metrics_enabled)
+        self.metrics_horizon = float(metrics_horizon)
+        self.metrics_sla_factor = float(metrics_sla_factor)
+        self.metrics_edges = np.asarray(list(metrics_edges), np.float32)
+        k = max(int(metrics_buckets), 1)
+        nb = max(len(self.metrics_edges) - 1, 1)
+        self.bucket_dt = np.zeros(k)
+        self.bucket_util = np.zeros(k)
+        self.bucket_watts = np.zeros(k)
+        self.bucket_fleet = np.zeros(k)
+        self.bucket_backlog = np.zeros(k)
+        self.bucket_flows = np.zeros(k)
+        self.hist_response = np.zeros(nb, np.int64)
+        self.hist_exec = np.zeros(nb, np.int64)
+        self.hist_wait = np.zeros(nb, np.int64)
+        self.sla_breaches = 0
+        self.first_breach_t = INF
+        self.peak_backlog = 0
         self.time = 0.0
         self.n_events = 0
         self._vm_by_index = {v.index: v for v in vms}
+        self.host_busy_s = np.zeros(self.n_host_slots)
+        # mirror the engine's entry-time DONE mask: only cloudlets that
+        # retire *during* the run fill the histograms
+        self._done0 = {cl.index for cl in cloudlets if cl.state == CL_DONE}
         for cl in cloudlets:
             cl.remaining = cl.length
             owner = self._vm_by_index.get(cl.vm)
@@ -364,7 +419,12 @@ class ReferenceSimulator:
                    spot_enabled=bool(int(g(sc.spot_enabled))),
                    spot_times=[float(x) for x in g(sc.spot_t)],
                    spot_prices=[float(x) for x in g(sc.spot_price)],
-                   spot_cost0=float(g(sc.spot_cost)))
+                   spot_cost0=float(g(sc.spot_cost)),
+                   metrics_enabled=bool(int(g(dc.metrics.enabled))),
+                   metrics_horizon=float(g(dc.metrics.horizon)),
+                   metrics_sla_factor=float(g(dc.metrics.sla_factor)),
+                   metrics_edges=[float(x) for x in g(dc.metrics.edges)],
+                   metrics_buckets=g(dc.metrics.bucket_dt).shape[0])
 
     # -- provisioning (the VMProvisioner walk) ------------------------------
     def _feasible(self, host: Host, vm: Vm) -> bool:
@@ -766,6 +826,95 @@ class ReferenceSimulator:
             util = consumed / cap if cap > 0.0 else 0.0
             host.energy_j += host.power_at(util) * dt
 
+    def _accrue_metrics(self, dt: float):
+        """Book [time, time+dt) into the f64 metrics plane — the
+        ``engine._probe_commit`` interval mirror at the same loop point
+        as ``_accrue_energy`` (observables fixed for the interval)."""
+        if not self.metrics_enabled:
+            return
+        t0, t1 = self.time, self.time + dt
+        host_mips = sum(h.num_pes * h.mips_per_pe
+                        for h in self.hosts if h.valid)
+        consumed = sum(cl.rate for cl in self.cloudlets)
+        util = consumed / max(host_mips, 1e-30)
+        watts = 0.0
+        for h in self.hosts:
+            if not h.valid:
+                continue
+            cap = h.num_pes * h.mips_per_pe
+            hcon = sum(c.rate for vm in h.vms for c in vm.cloudlets)
+            watts += h.power_at(hcon / cap if cap > 0.0 else 0.0)
+        fleet = sum(1 for v in self.vms
+                    if v.state in (VM_PENDING, VM_ACTIVE))
+        backlog = sum(1 for cl in self.cloudlets
+                      if cl.state == CL_CREATED
+                      and cl.submit_time <= t0
+                      and cl.remaining > 0.0 and cl.rate <= 0.0)
+        flows = sum(1 for cl in self.cloudlets
+                    if self._flow_active(cl) and cl.frate > 0.0)
+        k = len(self.bucket_dt)
+        w = self.metrics_horizon / k
+        for j in range(k):
+            lo = j * w
+            hi = INF if j == k - 1 else lo + w
+            ov = min(t1, hi) - max(t0, lo)
+            if ov <= 0.0:
+                continue
+            self.bucket_dt[j] += ov
+            self.bucket_util[j] += ov * util
+            self.bucket_watts[j] += ov * watts
+            self.bucket_fleet[j] += ov * fleet
+            self.bucket_backlog[j] += ov * backlog
+            self.bucket_flows[j] += ov * flows
+        self.peak_backlog = max(self.peak_backlog, backlog)
+        for h in self.hosts:
+            if any(c.rate > 0.0 for vm in h.vms for c in vm.cloudlets):
+                self.host_busy_s[h.index] += dt
+
+    def _fill_metrics_retirement(self, cl: "Cloudlet"):
+        """Book one DONE cloudlet into the histograms + SLA watermarks.
+
+        f32 casts throughout: the bin index comes from np.searchsorted
+        against the engine's own f32 edges and the SLA comparison runs
+        on f32 operands, so engine/oracle can only disagree on values
+        within f64-vs-f32 tolerance of an edge or bound (the margin the
+        conformance check grants)."""
+        if not self.metrics_enabled or cl.index in self._done0:
+            return
+        f = np.float32
+        nb = len(self.metrics_edges) - 1
+        resp = f(cl.finish_time) - f(cl.submit_time)
+        exe = f(cl.finish_time) - f(cl.start_time)
+        wait = f(cl.start_time) - f(cl.submit_time)
+        for hist, v in ((self.hist_response, resp),
+                        (self.hist_exec, exe), (self.hist_wait, wait)):
+            idx = int(np.searchsorted(self.metrics_edges, f(v),
+                                      side="right")) - 1
+            hist[min(max(idx, 0), nb - 1)] += 1
+        if self.metrics_sla_factor > 0.0:
+            owner = self._vm_by_index.get(cl.vm)
+            mips = f(owner.req_mips) if owner is not None else f(0.0)
+            ideal = f(cl.length) / max(mips, f(1e-30))
+            if resp > f(self.metrics_sla_factor) * ideal:
+                self.sla_breaches += 1
+                self.first_breach_t = min(self.first_breach_t,
+                                          cl.finish_time)
+
+    def _metrics_result(self) -> Optional[OracleMetrics]:
+        if not self.metrics_enabled:
+            return None
+        return OracleMetrics(
+            bucket_dt=self.bucket_dt, bucket_util=self.bucket_util,
+            bucket_watts=self.bucket_watts,
+            bucket_fleet=self.bucket_fleet,
+            bucket_backlog=self.bucket_backlog,
+            bucket_flows=self.bucket_flows,
+            hist_response=self.hist_response, hist_exec=self.hist_exec,
+            hist_wait=self.hist_wait, sla_breaches=self.sla_breaches,
+            first_breach_t=self.first_breach_t,
+            peak_backlog=self.peak_backlog,
+            host_busy_s=self.host_busy_s)
+
     def _advance(self, dt: float, t_next: float):
         snap = dt * (1.0 + _SNAP_REL) + _SNAP_ABS
         for cl in self.cloudlets:
@@ -934,6 +1083,7 @@ class ReferenceSimulator:
             t_next = arrive if dt_arr <= dt else self.time + head
             self._accrue_energy(head)
             self._accrue_spot(head)
+            self._accrue_metrics(head)
             self._advance(head, t_next)
             self.n_events += 1
         return self._result()
@@ -954,6 +1104,9 @@ class ReferenceSimulator:
         en = np.zeros(self.n_host_slots, np.float64)
         for h in self.hosts:
             en[h.index] = h.energy_j
+        for cl in self.cloudlets:       # dense replay keeps every cloudlet:
+            if cl.state == CL_DONE:     # retirement fills are order-free
+                self._fill_metrics_retirement(cl)
         return OracleResult(start_time=st, finish_time=ft, cl_state=cs,
                            vm_state=vs, vm_host=vh, energy_j=en,
                            time=self.time, n_events=self.n_events,
@@ -962,7 +1115,8 @@ class ReferenceSimulator:
                            transferred_mb=self.transferred_mb,
                            scale_up_count=self.scale_up_count,
                            scale_down_count=self.scale_down_count,
-                           spot_cost=self.spot_cost)
+                           spot_cost=self.spot_cost,
+                           metrics=self._metrics_result())
 
 
 def simulate_dense(dc, max_events: int = 100_000) -> OracleResult:
@@ -1007,6 +1161,7 @@ class StreamOracleResult:
     scale_up_count: int = 0
     scale_down_count: int = 0
     spot_cost: float = 0.0
+    metrics: Optional[OracleMetrics] = None   # when the plane was enabled
 
 
 class StreamingReferenceSimulator(ReferenceSimulator):
@@ -1060,6 +1215,9 @@ class StreamingReferenceSimulator(ReferenceSimulator):
                 self._f_len += cl.length
                 if 0 <= cl.vm < self.n_vm_slots:
                     self._f_per_vm[cl.vm] += 1
+                # each DONE cloudlet folds exactly once before pruning —
+                # the streamed mirror of the dense end-of-run fill
+                self._fill_metrics_retirement(cl)
             elif cl.state == CL_FAILED:
                 self._f_failed += 1
             else:
@@ -1131,7 +1289,8 @@ class StreamingReferenceSimulator(ReferenceSimulator):
             transferred_mb=self.transferred_mb,
             scale_up_count=self.scale_up_count,
             scale_down_count=self.scale_down_count,
-            spot_cost=self.spot_cost)
+            spot_cost=self.spot_cost,
+            metrics=self._metrics_result())
 
 
 def _stream_rows(stream) -> list:

@@ -183,7 +183,8 @@ def test_batched_run_matches_vmap_run_mixed_lanes():
     batch = sweep.stack_scenarios(scs)
     ref = jax.vmap(lambda d: engine._run(
         d, max_steps=512, horizon=float("inf"), provision_policy=0,
-        dynamic=True, networked=False, elastic=False, leap=True))(batch)
+        dynamic=True, networked=False, elastic=False, leap=True,
+        probed=False))(batch)
     out = engine.batched_run(batch, max_steps=512, dynamic=True,
                              networked=False, leap=True)
     _assert_trees_bitwise(ref, out, "batched_run vs vmap(run)")

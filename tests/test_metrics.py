@@ -1,0 +1,373 @@
+"""In-run metrics plane: probe conformance, bitwise gates, and reports.
+
+The contract under test (docs/observability.md):
+
+  * **probes off is free** — a lane carrying the default inert plane
+    (or an enabled plane run with ``probed=False``) produces the
+    pre-metrics program's results bit for bit, metrics leaves untouched,
+  * **probes never perturb** — with probes on, every non-metrics result
+    leaf still equals the probes-off run exactly (the plane only reads),
+  * **leap parity extends to the plane** — leap on/off with probes on is
+    bitwise across every leaf, bucketed timelines included,
+  * **conformance** — the f64 oracle fills the same buckets/bins; the
+    timelines agree at 1e-3 and the integer counters exactly,
+  * **every spelling carries the plane** — fused batches, sharded lanes
+    (both partitioners, plus a forced-2-device subprocess), and streamed
+    lanes reproduce the single-lane plane bit for bit,
+  * the host-side report (``telemetry.metrics_report``) round-trips
+    through JSON and survives ``validate_metrics_report``.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_conformance import (POLICY_GRID, STREAM_SEEDS, make_scenario,
+                              make_dynamic_scenario, make_streamed_scenario)
+
+from repro import compat
+from repro.core import engine
+from repro.core import metrics as M
+from repro.core import state as S
+from repro.core import sweep, telemetry
+from repro.oracle import simulate_dense
+from repro.oracle.reference import simulate_stream
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# one bucket/bin geometry per batch (lanes must share K and NB to stack);
+# horizon and sla_factor are per-lane data and vary below
+BUCKETS, BINS = 8, 12
+
+
+def with_metrics(dc, *, horizon=256.0, sla_factor=2.0):
+    n_hosts = int(np.asarray(dc.hosts.num_pes).shape[0])
+    return dataclasses.replace(
+        dc, metrics=M.make_metrics(n_hosts, horizon=horizon,
+                                   buckets=BUCKETS, bins=BINS,
+                                   sla_factor=sla_factor))
+
+
+def _assert_trees_bitwise(a, b, ctx):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Unit: constructors, gates, bucket arithmetic
+# ---------------------------------------------------------------------------
+def test_make_metrics_validation():
+    with pytest.raises(ValueError):
+        M.metrics_edges(1, 1e-2, 1e4)
+    with pytest.raises(ValueError):
+        M.make_metrics(2, horizon=100.0, buckets=0)
+    with pytest.raises(ValueError):
+        M.make_metrics(2, horizon=0.0)
+    edges = M.metrics_edges(BINS, 1e-2, 1e4)
+    assert edges.shape == (BINS + 1,) and edges.dtype == np.float32
+    assert edges[0] == 0.0 and edges[-1] >= 1e29
+    assert np.all(np.diff(edges) > 0)
+
+
+def test_no_metrics_is_inert_and_undetected():
+    """The default plane trips neither the auto-detected gate nor any
+    accumulator — the state rides through a full run untouched."""
+    dc = make_scenario(0, S.SPACE_SHARED, S.SPACE_SHARED)
+    assert not engine.wants_probes(dc)
+    assert engine.wants_probes(with_metrics(dc))
+    out = engine.run(dc, max_steps=512)
+    _assert_trees_bitwise(out.metrics, dc.metrics, "inert plane touched")
+
+
+def test_bucket_overlap_partitions_interval():
+    m = M.make_metrics(1, horizon=80.0, buckets=BUCKETS, bins=BINS)
+    ov = np.asarray(M.bucket_overlap(m, jnp.float32(3.0), jnp.float32(47.0),
+                                     jnp.bool_(True)))
+    np.testing.assert_allclose(ov.sum(), 44.0, rtol=1e-6)
+    np.testing.assert_allclose(ov[0], 7.0, rtol=1e-6)   # [3, 10) of [0, 10)
+    # past-horizon time lands in the open-ended last bucket
+    tail = np.asarray(M.bucket_overlap(m, jnp.float32(75.0),
+                                       jnp.float32(200.0), jnp.bool_(True)))
+    np.testing.assert_allclose(tail[-1], 125.0, rtol=1e-6)
+    assert np.all(tail[:-1] == 0.0)
+    # a closed gate books nothing (the +0.0 quiescence identity)
+    off = np.asarray(M.bucket_overlap(m, jnp.float32(3.0),
+                                      jnp.float32(47.0), jnp.bool_(False)))
+    assert np.all(off == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise gates: probes off is free, probes on never perturbs, leap parity
+# ---------------------------------------------------------------------------
+def test_probes_off_and_on_bitwise_gates():
+    for seed in range(4):
+        dc = make_scenario(seed, *POLICY_GRID[seed % 4])
+        probed = with_metrics(dc)
+        base = engine.run(dc, max_steps=512)
+        off = engine.run(probed, max_steps=512, probed=False)
+        on = engine.run(probed, max_steps=512)      # auto-detects probed
+        # probes off: the enabled plane rides along untouched and every
+        # other leaf equals the plain pre-metrics run bitwise
+        _assert_trees_bitwise(off.metrics, probed.metrics,
+                              f"probes-off plane touched (seed {seed})")
+        _assert_trees_bitwise(
+            dataclasses.replace(off, metrics=dc.metrics), base,
+            f"probes-off result drift (seed {seed})")
+        # probes on: only the metrics leaves may differ
+        _assert_trees_bitwise(
+            dataclasses.replace(on, metrics=off.metrics), off,
+            f"probes perturbed the simulation (seed {seed})")
+        assert int(np.asarray(on.metrics.hist_response).sum()) == int(
+            (np.asarray(on.cloudlets.state) == S.CL_DONE).sum())
+
+
+@pytest.mark.parametrize("vp,tp", POLICY_GRID)
+def test_leap_parity_with_probes(vp, tp):
+    """Leap on/off stays bitwise across *all* leaves with probes on —
+    the leap body books intervals through the same _probe_commit."""
+    for seed in range(3):
+        dc = with_metrics(make_scenario(seed, vp, tp))
+        off = engine.run(dc, max_steps=1024, leap=False)
+        on = engine.run(dc, max_steps=1024, leap=True)
+        _assert_trees_bitwise(off, on, f"static seed {seed}")
+    dyn = with_metrics(make_dynamic_scenario(0, vp, tp))
+    off = engine.run(dyn, max_steps=1024, dynamic=True, leap=False)
+    on = engine.run(dyn, max_steps=1024, dynamic=True, leap=True)
+    _assert_trees_bitwise(off, on, "dynamic seed 0")
+
+
+# ---------------------------------------------------------------------------
+# Conformance: engine plane vs the f64 oracle mirror
+# ---------------------------------------------------------------------------
+def _assert_metrics_conform(em, om, ctx):
+    """Engine (f32) vs oracle (f64) plane: 1e-3 on time-weighted buckets,
+    exact integer counters, INF-kind agreement on the breach watermark."""
+    for name in ("bucket_dt", "bucket_util", "bucket_watts", "bucket_fleet",
+                 "bucket_backlog", "bucket_flows"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(em, name), np.float64),
+            getattr(om, name), rtol=1e-3, atol=1e-3,
+            err_msg=f"{ctx} {name}")
+    for name in ("hist_response", "hist_exec", "hist_wait"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(em, name)), getattr(om, name),
+            err_msg=f"{ctx} {name}")
+    assert int(np.asarray(em.sla_breaches)) == om.sla_breaches, ctx
+    assert int(np.asarray(em.peak_backlog)) == om.peak_backlog, ctx
+    eb = float(np.asarray(em.first_breach_t))
+    if om.first_breach_t >= 1e29:
+        assert eb >= 1e29, ctx
+    else:
+        np.testing.assert_allclose(eb, om.first_breach_t, rtol=0,
+                                   atol=1e-3, err_msg=ctx)
+    np.testing.assert_allclose(
+        np.asarray(em.host_busy_s, np.float64), om.host_busy_s,
+        rtol=1e-3, atol=1e-3, err_msg=f"{ctx} host_busy_s")
+
+
+@pytest.mark.parametrize("vp,tp", POLICY_GRID)
+def test_dense_conformance_metrics(vp, tp):
+    for seed in range(6):
+        dc = with_metrics(make_scenario(seed, vp, tp))
+        out = engine.run(dc, max_steps=1024)
+        res = simulate_dense(dc)
+        assert res.metrics is not None
+        _assert_metrics_conform(out.metrics, res.metrics,
+                                f"dense seed {seed} ({vp},{tp})")
+        # the response histogram counts exactly the DONE population
+        assert int(np.asarray(out.metrics.hist_response).sum()) == res.n_done
+
+
+@pytest.mark.parametrize("vp,tp", POLICY_GRID)
+def test_streamed_conformance_metrics(vp, tp):
+    for seed in STREAM_SEEDS[:4]:
+        dc, stream = make_streamed_scenario(seed, vp, tp)
+        dc = with_metrics(dc, horizon=64.0)
+        out, st, _ = engine.run_stream(dc, stream, reservoir=32)
+        res = simulate_stream(dc, stream, reservoir=32)
+        assert res.metrics is not None
+        _assert_metrics_conform(out.metrics, res.metrics,
+                                f"streamed seed {seed} ({vp},{tp})")
+        assert int(np.asarray(out.metrics.hist_response).sum()) == \
+            res.n_retired
+
+
+# ---------------------------------------------------------------------------
+# Sweep spellings: fused, sharded, streamed lanes carry the plane bitwise
+# ---------------------------------------------------------------------------
+def _metric_batch(n=3):
+    dcs = [with_metrics(make_scenario(s, *POLICY_GRID[s % 4]),
+                        horizon=128.0 + 64.0 * s,       # per-lane horizon
+                        sla_factor=1.5 + 0.5 * s)       # per-lane bound
+           for s in range(n)]
+    return dcs, sweep.stack_scenarios(dcs)
+
+
+def test_run_batch_lanes_match_single_runs():
+    dcs, batch = _metric_batch()
+    out = sweep.run_batch(batch, max_steps=512)
+    for i, dc in enumerate(dcs):
+        single = engine.run(dc, max_steps=512)
+        _assert_trees_bitwise(
+            jax.tree_util.tree_map(lambda x: x[i], out.metrics),
+            single.metrics, f"lane {i}")
+
+
+def test_run_sharded_one_device_metrics_bitwise():
+    _, batch = _metric_batch()
+    mesh = compat.make_mesh("sweep", jax.devices()[:1])
+    ref = sweep.run_batch(batch, max_steps=512)
+    for partitioner in ("gspmd", "shard_map", "dispatch"):
+        out = sweep.run_sharded(batch, mesh=mesh, max_steps=512,
+                                partitioner=partitioner)
+        _assert_trees_bitwise(out.metrics, ref.metrics, partitioner)
+
+
+def test_pad_batch_keeps_real_lane_metrics():
+    """Inert padding lanes (enabled=0) never book a probe; real lanes are
+    bit-identical to the unpadded batch."""
+    dcs, batch = _metric_batch()
+    padded = sweep.pad_batch(batch, 5)
+    out = sweep.run_batch(padded, max_steps=512)
+    ref = sweep.run_batch(batch, max_steps=512)
+    _assert_trees_bitwise(
+        jax.tree_util.tree_map(lambda x: x[:3], out.metrics),
+        ref.metrics, "padded real lanes")
+    pad = jax.tree_util.tree_map(lambda x: np.asarray(x)[3:], out.metrics)
+    assert np.all(pad.enabled == 0) and np.all(pad.bucket_dt == 0.0)
+    assert np.all(pad.hist_response == 0)
+
+
+def test_run_stream_batch_lanes_match_single_runs():
+    pairs = [make_streamed_scenario(s, *POLICY_GRID[s % 4])
+             for s in range(3)]
+    dcs = [with_metrics(dc, horizon=64.0) for dc, _ in pairs]
+    streams = [stream for _, stream in pairs]
+    batch = sweep.stack_scenarios(dcs)
+    fdc, fst, _ = sweep.run_stream_batch(batch, streams)
+    for b, (dc, stream) in enumerate(zip(dcs, streams)):
+        out, st, _ = engine.run_stream(dc, stream)
+        _assert_trees_bitwise(
+            jax.tree_util.tree_map(lambda x: x[b], fdc.metrics),
+            out.metrics, f"streamed lane {b}")
+
+
+_TWO_DEVICE_METRICS_CHECK = textwrap.dedent("""
+    import numpy as np, jax
+    assert jax.device_count() >= 2, jax.devices()
+    from test_metrics import _metric_batch, _assert_trees_bitwise
+    from repro.core import sweep
+
+    _, batch = _metric_batch()
+    vm_p, task_p = sweep.policy_grid()
+    single = sweep.run_grid(batch, vm_p, task_p, max_steps=512,
+                            sharded=False)
+    for part in ("gspmd", "shard_map"):
+        out = sweep.run_grid(batch, vm_p, task_p, max_steps=512,
+                             partitioner=part)
+        _assert_trees_bitwise(out.metrics, single.metrics, part)
+    assert int(np.asarray(single.metrics.hist_response).sum()) > 0
+    print("METRICS_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_sharded_two_devices_metrics_bitwise():
+    """The metrics plane survives a (forced) 2-device grid bit-for-bit
+    under both partitioners — masked scatter-adds introduce no
+    loop-variant shapes, so neither CPU-partitioner landmine applies."""
+    if jax.device_count() >= 2:
+        exec(compile(_TWO_DEVICE_METRICS_CHECK, "<two-device-metrics>",
+                     "exec"), {})
+        return
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                   + " --xla_force_host_platform_device_count=2").strip(),
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+            + os.environ.get("PYTHONPATH", "").split(os.pathsep)).strip(
+                os.pathsep),
+    )
+    proc = subprocess.run([sys.executable, "-c", _TWO_DEVICE_METRICS_CHECK],
+                          capture_output=True, text=True, timeout=560,
+                          env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "METRICS_SHARDED_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Host side: timelines, percentiles, reports
+# ---------------------------------------------------------------------------
+def test_from_metrics_and_report_roundtrip():
+    dc = with_metrics(make_scenario(1, S.SPACE_SHARED, S.TIME_SHARED))
+    out = engine.run(dc, max_steps=1024)
+    tl = telemetry.from_metrics(out)
+    assert tl["bucket_start"].shape == (BUCKETS,)
+    assert np.all(np.diff(tl["bucket_start"]) > 0)
+    # time-weighted means are bounded by the raw observables
+    assert np.all((tl["utilization"] >= 0.0) & (tl["utilization"] <= 1.0))
+    assert np.all(tl["utilization"][tl["bucket_dt"] == 0.0] == 0.0)
+
+    report = telemetry.metrics_report(out)
+    telemetry.validate_metrics_report(report)
+    back = json.loads(json.dumps(report))
+    telemetry.validate_metrics_report(back)     # survives a JSON roundtrip
+    assert back["schema"] == telemetry.METRICS_REPORT_SCHEMA
+    assert back["counters"]["retired"] == int(
+        (np.asarray(out.cloudlets.state) == S.CL_DONE).sum())
+
+    # a batched plane must be lane-indexed before reporting
+    _, batch = _metric_batch()
+    with pytest.raises(ValueError):
+        telemetry.from_metrics(sweep.run_batch(batch, max_steps=256))
+
+
+def test_validate_metrics_report_rejects_mangled():
+    dc = with_metrics(make_scenario(2, S.TIME_SHARED, S.TIME_SHARED))
+    report = telemetry.metrics_report(engine.run(dc, max_steps=1024))
+    for mangle in (
+            lambda r: r.pop("histograms"),
+            lambda r: r.update(schema="repro.metrics/v0"),
+            lambda r: r["buckets"]["utilization"].pop(),
+            lambda r: r["counters"].update(retired=10_000),
+            lambda r: r["counters"].update(sla_breaches=-1),
+            lambda r: r["histograms"]["edges"].pop(),
+    ):
+        bad = json.loads(json.dumps(report))
+        mangle(bad)
+        with pytest.raises(ValueError):
+            telemetry.validate_metrics_report(bad)
+
+
+def test_hist_percentile_walk():
+    edges = np.asarray([0.0, 1.0, 10.0, 100.0, 1e30], np.float32)
+    assert telemetry.hist_percentile([0, 0, 0, 0], edges, 50) == 0.0
+    # all mass in one interior bin -> geometric mean of its edges
+    np.testing.assert_allclose(
+        telemetry.hist_percentile([0, 5, 0, 0], edges, 50),
+        np.sqrt(1.0 * 10.0), rtol=1e-6)
+    # underflow bin is zero-anchored -> midpoint
+    np.testing.assert_allclose(
+        telemetry.hist_percentile([4, 0, 0, 0], edges, 50), 0.5, rtol=1e-6)
+    # overflow bin -> conservative lower edge
+    np.testing.assert_allclose(
+        telemetry.hist_percentile([0, 0, 0, 3], edges, 99), 100.0,
+        rtol=1e-6)
+    # the walk respects cumulative mass: p25 in bin 1, p90 in bin 2
+    h = [0, 3, 1, 0]
+    np.testing.assert_allclose(telemetry.hist_percentile(h, edges, 25),
+                               np.sqrt(10.0), rtol=1e-6)
+    np.testing.assert_allclose(telemetry.hist_percentile(h, edges, 90),
+                               np.sqrt(1000.0), rtol=1e-6)

@@ -24,11 +24,17 @@ the committed copy honest without re-running the (minutes-long, forced
     policy search's cell count and cells/s are consistent,
   * every streamed lane accounts for all n arrivals
     (``retired + failed == n``) and, at the largest tier, the windowed
-    engine's peak RSS stays below the resident table's.
+    engine's peak RSS stays below the resident table's,
+  * the metrics section keeps the probes-off promise: the dormant-plane
+    overhead is floored at 1.0 (probes-off compiles the pre-metrics
+    program unchanged) and the probed overhead is reported alongside it.
 
 Used by the CI docs job; run locally with:
 
     python tools/check_bench.py
+
+``--report PATH`` instead validates a ``telemetry.metrics_report`` JSON
+artifact against the ``repro.metrics/v1`` schema (the CI metrics smoke).
 """
 from __future__ import annotations
 
@@ -93,6 +99,14 @@ SCHEMA = {
                                  "peak_rss_mb", "cloudlets_per_s"],
                     "resident": ["peak_rss_mb"]},
     },
+    "bench_metrics": {
+        "sweep": ["cells", "done", "baseline_s", "off_s", "probed_s",
+                  "retired", "probes_off_overhead",
+                  "probes_off_overhead_raw", "probed_overhead",
+                  "probed_overhead_raw"],
+        "streaming": ["n", "retired", "baseline_s", "probed_s",
+                      "probed_overhead", "probed_overhead_raw"],
+    },
 }
 
 
@@ -119,7 +133,29 @@ def _walk(node, prefix=""):
         yield prefix[:-1], node
 
 
+def check_report(path: str) -> int:
+    """Validate a ``telemetry.metrics_report`` JSON file (CI smoke)."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core.telemetry import validate_metrics_report
+    try:
+        report = json.loads(Path(path).read_text())
+    except (OSError, ValueError) as e:
+        print(f"cannot read metrics report {path}: {e}")
+        return 1
+    try:
+        validate_metrics_report(report)
+    except ValueError as e:
+        print(f"metrics report {path} failed validation: {e}")
+        return 1
+    print(f"metrics report OK: {path} "
+          f"(schema {report['schema']}, "
+          f"{report['counters']['retired']} retirements)")
+    return 0
+
+
 def main() -> int:
+    if len(sys.argv) >= 3 and sys.argv[1] == "--report":
+        return check_report(sys.argv[2])
     errors = []
     try:
         bench = json.loads(ARTIFACT.read_text())
@@ -206,6 +242,25 @@ def main() -> int:
             errors.append(f"{section} cases finished unequal work: {done}")
         if done and min(done.values()) <= 0:
             errors.append(f"{section} finished no cloudlets: {done}")
+
+    bm = bench.get("bench_metrics", {})
+    if bm:
+        sw = bm.get("sweep", {})
+        # the generic *_overhead walk already enforces the 1.0 floor; the
+        # section invariant is that the probes-off promise was measured
+        # at all and the probed program did real, observed work
+        if "probes_off_overhead" not in sw or "probed_overhead" not in sw:
+            errors.append("bench_metrics.sweep must report probes_off_"
+                          "overhead and probed_overhead")
+        if (sw.get("done") or 0) <= 0:
+            errors.append("bench_metrics.sweep finished no cloudlets")
+        if sw.get("retired") != sw.get("done"):
+            errors.append(
+                f"bench_metrics.sweep: histogram retired {sw.get('retired')}"
+                f" != done {sw.get('done')} (probes lost retirements)")
+        st = bm.get("streaming", {})
+        if (st.get("retired") or 0) <= 0:
+            errors.append("bench_metrics.streaming retired nothing")
 
     if errors:
         print(f"{ARTIFACT.name} failed validation:")
